@@ -1,0 +1,36 @@
+"""Paper Fig. 10: distributed 2D Heat on a 4-node Haswell cluster (80
+cores) with an interfering matmul kernel on 5 cores of node 0's socket 0.
+Boundary-exchange (MPI) tasks are HIGH priority."""
+from __future__ import annotations
+
+from repro.core import (corun_socket, haswell_cluster, heat_dag,
+                        make_scheduler, matmul_type, simulate)
+
+from .common import emit, write_artifact
+
+SCHEDULERS = ("RWS", "RWSM-C", "DA", "DAM-C", "DAM-P")
+
+
+def run(fast: bool = False) -> dict:
+    out: dict = {}
+    iters = 20 if fast else 60
+    topo = haswell_cluster(4, 2, 10)
+    for name in SCHEDULERS:
+        sched = make_scheduler(name, topo, seed=1)
+        dag = heat_dag(nodes=4, tiles_per_node=16, iterations=iters)
+        m = simulate(dag, sched,
+                     background=[corun_socket(matmul_type(96), range(0, 5))])
+        out[name] = {"throughput_tps": m.throughput,
+                     "makespan_s": m.makespan}
+        emit(f"fig10/{name}/throughput", round(m.throughput, 1), "tasks_per_s")
+    for a, b, paper in (("DAM-C", "RWS", "paper: +76%"),
+                        ("DAM-C", "RWSM-C", "paper: +17%"),
+                        ("DAM-C", "DA", "paper: moldability helps MPI")):
+        r = out[a]["throughput_tps"] / out[b]["throughput_tps"]
+        emit(f"fig10/{a}_vs_{b}", round(r, 2), paper)
+    write_artifact("fig10_heat", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Pallas kernel microbenchmarks (interpret-mode correctness timing on CPU
++ XLA-path wall time).  On this CPU-only container the numbers measure the
+XLA fallback path; the interpret pass validates the kernels' semantics at
+bench shapes.  name,us_per_call,derived CSV per the harness contract."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+from .common import emit, write_artifact
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(fast: bool = False) -> dict:
+    out = {}
+    k = jax.random.PRNGKey(0)
+
+    a = jax.random.normal(k, (512, 512))
+    b = jax.random.normal(k, (512, 512))
+    us = _time(jax.jit(ops.matmul), a, b)
+    flops = 2 * 512 ** 3
+    out["matmul_512"] = us
+    emit("kernels/matmul_512_xla", round(us, 1),
+         f"{flops / us / 1e3:.1f}_GFLOPs")
+    got = matmul_pallas(a, b, interpret=True)
+    err = float(jnp.abs(got - ref.matmul_ref(a, b)).max())
+    emit("kernels/matmul_512_pallas_interp_maxerr", f"{err:.2e}", "vs_ref")
+
+    q = jax.random.normal(k, (1, 8, 512, 64))
+    kk = jax.random.normal(k, (1, 2, 512, 64))
+    v = jax.random.normal(k, (1, 2, 512, 64))
+    us = _time(jax.jit(lambda *x: ops.flash_attention(*x)), q, kk, v)
+    out["attention_512"] = us
+    emit("kernels/attention_512_xla", round(us, 1), "B1_Hq8_Hkv2_D64")
+    got = flash_attention_pallas(q, kk, v, bq=128, bk=128, interpret=True)
+    err = float(jnp.abs(got - ref.attention_ref(q, kk, v)).max())
+    emit("kernels/attention_512_pallas_interp_maxerr", f"{err:.2e}", "vs_ref")
+
+    x = jax.random.normal(k, (2, 512, 4, 64)) * 0.3
+    aa = -jnp.abs(jax.random.normal(k, (2, 512, 4))) * 0.1
+    bb = jax.random.normal(k, (2, 512, 64)) * 0.3
+    cc = jax.random.normal(k, (2, 512, 64)) * 0.3
+    us = _time(jax.jit(ops.ssd_scan), x, aa, bb, cc)
+    out["ssd_512"] = us
+    emit("kernels/ssd_512_xla", round(us, 1), "B2_S512_H4_D64_N64")
+    got = ssd_scan_pallas(x, aa, bb, cc, chunk=128, interpret=True)
+    err = float(jnp.abs(got - ref.ssd_ref(x, aa, bb, cc)).max())
+    emit("kernels/ssd_512_pallas_interp_maxerr", f"{err:.2e}", "vs_ref")
+
+    u = jax.random.normal(k, (1, 512, 512))
+    us = _time(jax.jit(ops.stencil), u)
+    out["stencil_512"] = us
+    emit("kernels/stencil_512_xla", round(us, 1), "jacobi_5pt")
+
+    xx = jax.random.normal(k, (1024, 2048))
+    us = _time(jax.jit(ops.copy), xx)
+    gbps = 2 * xx.size * 4 / (us * 1e-6) / 1e9
+    out["copy_8MB"] = us
+    emit("kernels/copy_8MB_xla", round(us, 1), f"{gbps:.1f}_GB/s")
+
+    write_artifact("kernels_microbench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

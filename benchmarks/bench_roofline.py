@@ -1,0 +1,69 @@
+"""Roofline report: reads the dry-run artifacts and prints the full
+(arch x shape x mesh) table with the three terms, the dominant bottleneck,
+and MODEL_FLOPS/HLO_FLOPs — EXPERIMENTS.md §Roofline is generated from
+this."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit, write_artifact
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(fast: bool = False) -> dict:
+    cells = load_cells()
+    if not cells:
+        emit("roofline/NO_ARTIFACTS", 0,
+             "run python -m repro.launch.dryrun --all --mesh both first")
+        return {}
+    table = []
+    for c in cells:
+        if c["status"] != "OK":
+            table.append({"cell": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+                          "status": c["status"]})
+            continue
+        r = c["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound > 0 else 0.0
+        row = {
+            "cell": f"{c['arch']}/{c['shape']}/{c['mesh']}",
+            "status": "OK",
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "roofline_fraction": frac,
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "fits_hbm": c["fits_hbm"],
+            "per_device_MiB": c["per_device_bytes"] // 2 ** 20,
+        }
+        table.append(row)
+        emit(f"roofline/{row['cell']}",
+             round(frac, 3),
+             f"dom={r['dominant']},c={r['compute_s']*1e3:.1f}ms,"
+             f"m={r['memory_s']*1e3:.1f}ms,coll={r['collective_s']*1e3:.1f}ms")
+    ok = [r for r in table if r.get("status") == "OK"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        emit("roofline/worst_fraction_cell", worst["cell"],
+             f"{worst['roofline_fraction']:.3f}")
+        collbound = [r for r in ok if r["dominant"] == "collective"]
+        emit("roofline/collective_bound_cells", len(collbound),
+             f"of {len(ok)}")
+    write_artifact("roofline_table", table)
+    return {"table": table}
+
+
+if __name__ == "__main__":
+    run()

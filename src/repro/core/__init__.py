@@ -1,0 +1,38 @@
+"""Core: the paper's contribution — dynamic-asymmetry-aware DAG scheduling.
+
+Public surface:
+  places      — ExecutionPlace / ResourcePartition / Topology (+ presets)
+  ptt         — Performance Trace Table (online EMA model, 1:4 weighting)
+  task        — Task / TaskType + the paper's kernel cost models
+  dag         — synthetic / kmeans / heat DAG builders
+  schedulers  — RWS, RWSM-C, FA, FAM-C, DA, DAM-C, DAM-P (Algorithm 1)
+  interference— co-running apps + DVFS speed profiles
+  simulator   — discrete-event engine (paper-scale evaluation)
+  runtime     — threaded executor running real payloads (JAX kernels)
+  metrics     — throughput / placement / worktime aggregation
+"""
+from .dag import DAG, chain_dag, heat_dag, kmeans_dag, synthetic_dag
+from .interference import (BackgroundApp, SpeedProfile, corun_chain,
+                           corun_socket, dvfs_denver)
+from .metrics import RunMetrics, TaskRecord
+from .places import ExecutionPlace, ResourcePartition, Topology, haswell, \
+    haswell_cluster, tpu_pod_slices, tx2
+from .ptt import PTT, PTTBank
+from .runtime import ThreadedRuntime, run_threaded
+from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
+from .simulator import Simulator, simulate
+from .task import (Priority, Task, TaskType, copy_type, kmeans_map_type,
+                   kmeans_reduce_type, matmul_type, mpi_exchange_type,
+                   stencil_type)
+
+__all__ = [
+    "DAG", "chain_dag", "heat_dag", "kmeans_dag", "synthetic_dag",
+    "BackgroundApp", "SpeedProfile", "corun_chain", "corun_socket",
+    "dvfs_denver", "RunMetrics", "TaskRecord", "ExecutionPlace",
+    "ResourcePartition", "Topology", "haswell", "haswell_cluster",
+    "tpu_pod_slices", "tx2", "PTT", "PTTBank", "ThreadedRuntime",
+    "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
+    "Simulator", "simulate", "Priority", "Task", "TaskType", "copy_type",
+    "kmeans_map_type", "kmeans_reduce_type", "matmul_type",
+    "mpi_exchange_type", "stencil_type",
+]

@@ -1,0 +1,147 @@
+"""DAG builders (paper §2, §4.2.2).
+
+* ``synthetic_dag`` — the paper's synthetic benchmark: layers of P
+  same-type tasks (P = DAG parallelism); exactly one task per layer is
+  HIGH priority and releases the next layer when it commits.
+* ``kmeans_dag`` — K-means as a *dynamic* DAG: each iteration spawns map
+  tasks + one HIGH-priority reduce task whose commit inserts the next
+  iteration's tasks at runtime.
+* ``heat_dag`` — distributed 2D Heat: per node per iteration, stencil
+  compute tasks (LOW) + ghost-cell exchange tasks (HIGH, paper §4.2.2:
+  "Due to the criticality of such communication, these MPI tasks are
+  marked as high priority").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from .task import (Priority, Task, TaskType, kmeans_map_type,
+                   kmeans_reduce_type, mpi_exchange_type, stencil_type)
+
+
+@dataclasses.dataclass
+class DAG:
+    """Root tasks + total count (total includes dynamically inserted tasks
+    only after they are inserted; ``expected_total`` is for reporting)."""
+
+    roots: list[Task]
+    expected_total: int
+
+    def all_tasks(self) -> list[Task]:
+        """BFS enumeration of the *static* portion of the DAG."""
+        seen: dict[int, Task] = {}
+        stack = list(self.roots)
+        while stack:
+            t = stack.pop()
+            if t.tid in seen:
+                continue
+            seen[t.tid] = t
+            stack.extend(t.children)
+        return list(seen.values())
+
+
+def synthetic_dag(task_type: TaskType, *, parallelism: int,
+                  total_tasks: int) -> DAG:
+    """Paper §4.2.2: each layer has P tasks of the same type; one is marked
+    critical; its completion releases the next P tasks.  DAG parallelism =
+    total/longest-path = P."""
+    if parallelism < 1 or total_tasks < parallelism:
+        raise ValueError("need total_tasks >= parallelism >= 1")
+    n_layers = total_tasks // parallelism
+    roots: list[Task] = []
+    prev_critical: Optional[Task] = None
+    for layer in range(n_layers):
+        layer_tasks = [Task(task_type) for _ in range(parallelism)]
+        layer_tasks[0].priority = Priority.HIGH      # the critical task
+        if prev_critical is None:
+            roots.extend(layer_tasks)
+        else:
+            for t in layer_tasks:
+                prev_critical.add_child(t)
+        prev_critical = layer_tasks[0]
+    return DAG(roots, n_layers * parallelism)
+
+
+def chain_dag(task_type: TaskType, length: int) -> DAG:
+    """A single serial chain — the co-running application's shape."""
+    head = Task(task_type)
+    cur = head
+    for _ in range(length - 1):
+        cur = cur.add_child(Task(task_type))
+    return DAG([head], length)
+
+
+def kmeans_dag(*, n_points: int = 200_000, dims: int = 16, k: int = 8,
+               n_chunks: int = 32, iterations: int = 80,
+               on_iteration: Optional[Callable[[int], None]] = None) -> DAG:
+    """K-means as a dynamic DAG (paper §4.2.2 + §5.4): loop partitions
+    become dynamically scheduled map tasks; the reduce task carries the
+    largest work unit and is HIGH priority; committing it *inserts* the
+    next iteration (dynamic DAG growth via ``on_commit``)."""
+    map_type = kmeans_map_type(n_points // n_chunks, dims, k)
+    red_type = kmeans_reduce_type(k, dims, n_chunks)
+
+    def make_iteration(it: int) -> list[Task]:
+        maps = [Task(map_type) for _ in range(n_chunks)]
+        reduce_t = Task(red_type, priority=Priority.HIGH)
+        for m in maps:
+            m.add_child(reduce_t)
+
+        def commit_hook(_task: Task, _it: int = it) -> list[Task]:
+            if on_iteration is not None:
+                on_iteration(_it)
+            if _it + 1 < iterations:
+                return make_iteration(_it + 1)
+            return []
+
+        reduce_t.on_commit = commit_hook
+        return maps                       # maps are the ready roots
+
+    return DAG(make_iteration(0), iterations * (n_chunks + 1))
+
+
+def heat_dag(*, nodes: int = 4, tiles_per_node: int = 20, tile: int = 1024,
+             iterations: int = 60, boundary_kb: float = 256.0) -> DAG:
+    """Distributed 2D Heat (paper §4.2.2, Fig. 10): iterative stencil over a
+    row-partitioned grid.  Per node and iteration: ``tiles_per_node``
+    stencil tasks (LOW) + one boundary-exchange task per neighbor (HIGH).
+    The exchange tasks of iteration i gate iteration i+1 of *both*
+    neighboring nodes; compute tasks gate their own node's exchanges."""
+    st = stencil_type(tile)
+    ex = mpi_exchange_type(boundary_kb)
+
+    roots: list[Task] = []
+    # prev iteration's per-node exchange tasks (to wire cross-node deps)
+    prev_ex: list[list[Task]] = [[] for _ in range(nodes)]
+    prev_compute: list[list[Task]] = [[] for _ in range(nodes)]
+    total = 0
+    for it in range(iterations):
+        cur_compute: list[list[Task]] = []
+        for n in range(nodes):
+            comp = [Task(st) for _ in range(tiles_per_node)]
+            total += len(comp)
+            if it == 0:
+                roots.extend(comp)
+            else:
+                # stencil of iter i depends on own + neighbor exchanges of i-1
+                gates = list(prev_ex[n])
+                if n > 0:
+                    gates += [prev_ex[n - 1][-1]] if prev_ex[n - 1] else []
+                if n + 1 < nodes:
+                    gates += [prev_ex[n + 1][0]] if prev_ex[n + 1] else []
+                for g in gates:
+                    for c in comp:
+                        g.add_child(c)
+            cur_compute.append(comp)
+        cur_ex: list[list[Task]] = []
+        for n in range(nodes):
+            n_neigh = (1 if n > 0 else 0) + (1 if n + 1 < nodes else 0)
+            exs = [Task(ex, priority=Priority.HIGH) for _ in range(n_neigh)]
+            total += len(exs)
+            for c in cur_compute[n]:
+                for e in exs:
+                    c.add_child(e)
+            cur_ex.append(exs)
+        prev_ex, prev_compute = cur_ex, cur_compute
+    return DAG(roots, total)

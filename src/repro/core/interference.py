@@ -1,0 +1,138 @@
+"""Interference scenarios (paper §5): co-running applications and DVFS.
+
+Two mechanisms, matching how the paper injects dynamic asymmetry:
+
+* ``SpeedProfile`` — per-core piecewise-constant speed multipliers with
+  explicit breakpoints.  DVFS square waves (paper §5.2: Denver cluster
+  alternating 2035 MHz / 345 MHz with a 5s+5s period) are built this way.
+
+* ``BackgroundApp`` — a co-running application modeled as an endless chain
+  of tasks pinned to specific cores, *outside* the scheduler's control.
+  It time-shares its cores with foreground tasks (OS CFS ~ 50/50) and, for
+  streaming kernels, pressures the partition's shared memory bandwidth.
+  This mirrors §5.1's single-chain matmul / copy co-runners on core 0 and
+  §5.4's 5-core interferer on one socket.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Sequence
+
+from .task import TaskType
+
+
+class SpeedProfile:
+    """speed(core, t) -> multiplier; piecewise constant in t."""
+
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        # per core: sorted list of (t_start, speed); implicit (0.0, 1.0) head
+        self._segs: list[list[tuple[float, float]]] = [[(0.0, 1.0)] for _ in range(n_cores)]
+
+    def set_constant(self, cores: Sequence[int], speed: float) -> "SpeedProfile":
+        for c in cores:
+            self._segs[c] = [(0.0, speed)]
+        return self
+
+    def add_square_wave(self, cores: Sequence[int], *, period: float,
+                        lo: float, hi: float = 1.0, t_end: float = 1e6,
+                        hi_first: bool = True) -> "SpeedProfile":
+        """DVFS-style alternation: hi for period/2, lo for period/2, ..."""
+        for c in cores:
+            segs = []
+            t, phase_hi = 0.0, hi_first
+            while t < t_end:
+                segs.append((t, hi if phase_hi else lo))
+                t += period / 2
+                phase_hi = not phase_hi
+            self._segs[c] = segs
+        return self
+
+    def add_window(self, cores: Sequence[int], t0: float, t1: float,
+                   speed: float) -> "SpeedProfile":
+        """Override speed on [t0, t1) (e.g. an interference episode that
+        starts a few iterations in, paper §5.4)."""
+        for c in cores:
+            old = self._segs[c]
+            new: list[tuple[float, float]] = []
+            for i, (ts, sp) in enumerate(old):
+                te = old[i + 1][0] if i + 1 < len(old) else float("inf")
+                # segment before window
+                if ts < t0:
+                    new.append((ts, sp))
+                # overlap with window
+                if te > t0 and ts < t1:
+                    new.append((max(ts, t0), speed))
+                # segment tail after window
+                if te > t1 and ts < te and te != float("inf") or ts >= t1:
+                    if ts >= t1:
+                        new.append((ts, sp))
+                    elif te > t1:
+                        new.append((t1, sp))
+            # normalize: sort, dedupe by time keeping last
+            new.sort()
+            dedup: list[tuple[float, float]] = []
+            for ts, sp in new:
+                if dedup and dedup[-1][0] == ts:
+                    dedup[-1] = (ts, sp)
+                else:
+                    dedup.append((ts, sp))
+            self._segs[c] = dedup
+        return self
+
+    def speed(self, core: int, t: float) -> float:
+        segs = self._segs[core]
+        i = bisect.bisect_right(segs, (t, float("inf"))) - 1
+        return segs[max(i, 0)][1]
+
+    def breakpoints(self, horizon: float) -> list[float]:
+        """All speed-change instants in (0, horizon] — DES event times."""
+        pts = {ts for segs in self._segs for ts, _ in segs if 0.0 < ts <= horizon}
+        return sorted(pts)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackgroundApp:
+    """An endless chain of ``task_type`` tasks pinned to ``cores``.
+
+    ``t_start``/``t_end`` bound the episode.  Each pinned core runs one
+    background stream (the paper's co-runner is a single chain on core 0;
+    the Haswell experiment uses 5 cores of one socket).
+
+    A foreground task time-sharing a pinned core runs at
+    ``speed/(1+n_bg) * (1-thrash)``: the OS gives it a fair share and the
+    co-runner additionally evicts its private-cache working set."""
+
+    task_type: TaskType
+    cores: tuple[int, ...]
+    t_start: float = 0.0
+    t_end: float = float("inf")
+    thrash: float = 0.35
+
+    def active(self, t: float) -> bool:
+        return self.t_start <= t < self.t_end
+
+
+# -- canonical paper scenarios ----------------------------------------------
+
+def corun_chain(task_type: TaskType, core: int = 0, *, t_start: float = 0.0,
+                t_end: float = float("inf")) -> BackgroundApp:
+    """Paper §5.1: a single task chain (matmul or copy kernels) on core 0
+    that persists for the whole execution."""
+    return BackgroundApp(task_type, (core,), t_start, t_end)
+
+
+def corun_socket(task_type: TaskType, cores: Sequence[int], *,
+                 t_start: float = 0.0, t_end: float = float("inf")) -> BackgroundApp:
+    """Paper §5.4: interfering matmul kernels on 5 cores of one socket."""
+    return BackgroundApp(task_type, tuple(cores), t_start, t_end)
+
+
+def dvfs_denver(n_cores: int = 6, *, period: float = 10.0,
+                hi_mhz: float = 2035.0, lo_mhz: float = 345.0) -> SpeedProfile:
+    """Paper §5.2: Denver cluster (cores 0-1 on TX2) alternates between the
+    highest and lowest frequency, 5 s each."""
+    prof = SpeedProfile(n_cores)
+    prof.add_square_wave((0, 1), period=period, lo=lo_mhz / hi_mhz)
+    return prof

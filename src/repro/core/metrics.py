@@ -1,0 +1,97 @@
+"""Run metrics: throughput, per-core work time, placement distributions —
+the quantities behind the paper's Figures 4-10."""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskRecord:
+    type_name: str
+    priority: int
+    leader: int
+    width: int
+    t_ready: float
+    t_start: float
+    t_end: float
+
+    @property
+    def duration(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def place(self) -> str:
+        return f"(C{self.leader},{self.width})"
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    n_cores: int
+    records: list[TaskRecord] = dataclasses.field(default_factory=list)
+    makespan: float = 0.0
+
+    def record(self, rec: TaskRecord) -> None:
+        self.records.append(rec)
+
+    def finish(self, t_end: float) -> None:
+        self.makespan = t_end
+
+    # -- aggregates -----------------------------------------------------------
+    @property
+    def n_tasks(self) -> int:
+        return len(self.records)
+
+    @property
+    def throughput(self) -> float:
+        """tasks / second (paper §5.1: total tasks / total execution time)."""
+        return self.n_tasks / self.makespan if self.makespan > 0 else 0.0
+
+    def per_core_worktime(self) -> list[float]:
+        """Cumulative kernel work time per core (paper Fig. 6)."""
+        out = [0.0] * self.n_cores
+        for r in self.records:
+            for c in range(r.leader, r.leader + r.width):
+                out[c] += r.duration
+        return out
+
+    def priority_placement(self) -> dict[str, float]:
+        """Fraction of HIGH tasks per execution place (paper Fig. 5)."""
+        high = [r for r in self.records if r.priority == 1]
+        if not high:
+            return {}
+        counts = Counter(r.place for r in high)
+        return {p: c / len(high) for p, c in sorted(counts.items())}
+
+    def placement_counts(self, priority: int | None = None) -> dict[str, int]:
+        recs = self.records if priority is None else [
+            r for r in self.records if r.priority == priority]
+        return dict(Counter(r.place for r in recs))
+
+    def per_type_mean_duration(self) -> dict[str, float]:
+        sums: dict[str, list[float]] = defaultdict(list)
+        for r in self.records:
+            sums[r.type_name].append(r.duration)
+        return {k: sum(v) / len(v) for k, v in sums.items()}
+
+    def windowed_throughput(self, window: float) -> list[tuple[float, float]]:
+        """(t, tasks/s) series — used for the DVFS / iteration-time plots."""
+        if not self.records:
+            return []
+        buckets: dict[int, int] = defaultdict(int)
+        for r in self.records:
+            buckets[int(r.t_end / window)] += 1
+        return [(i * window, n / window) for i, n in sorted(buckets.items())]
+
+    def iteration_times(self, marker_type: str) -> list[float]:
+        """Completion-time deltas of a per-iteration marker task type
+        (e.g. the K-means reduce) — paper Fig. 9(a)."""
+        ends = sorted(r.t_end for r in self.records if r.type_name == marker_type)
+        return [b - a for a, b in zip(ends, ends[1:])]
+
+    def summary(self) -> dict[str, float]:
+        return {
+            "tasks": self.n_tasks,
+            "makespan_s": round(self.makespan, 6),
+            "throughput_tps": round(self.throughput, 2),
+        }

@@ -1,0 +1,166 @@
+"""Execution places and resource partitions (paper §2).
+
+An *execution place* is a tuple ``(leader core, resource width)``: the task
+runs on cores ``[leader, leader + width)``.  A *resource partition* is a set
+of cores sharing a resource domain (an L2 cluster on the TX2, a socket on
+Haswell, an ICI domain / pod slice on TPU).  Valid widths are per-partition
+and places are width-aligned within their partition, mirroring XiTAO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlace:
+    """(leader core, width) — cores [leader, leader+width)."""
+
+    leader: int
+    width: int
+
+    @property
+    def cores(self) -> tuple[int, ...]:
+        return tuple(range(self.leader, self.leader + self.width))
+
+    def __repr__(self) -> str:  # matches the paper's (Cx, w) notation
+        return f"(C{self.leader},{self.width})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourcePartition:
+    """A contiguous set of cores sharing a resource domain.
+
+    ``kind`` identifies the hardware class (e.g. "denver", "a57", "haswell",
+    "pod") — task base costs are defined per kind.  ``static_rank`` orders
+    partitions by *static* (design-time) speed: rank 0 is the statically
+    fastest; this is what the FA/FAM-C schedulers key on.
+    """
+
+    name: str
+    kind: str
+    start: int
+    size: int
+    widths: tuple[int, ...]
+    static_rank: int = 0
+    bw_domain: str = ""     # shared-memory-bandwidth domain ("" = own name)
+
+    @property
+    def domain(self) -> str:
+        return self.bw_domain or self.name
+
+    def __post_init__(self) -> None:
+        for w in self.widths:
+            if w <= 0 or w > self.size or self.size % w:
+                raise ValueError(f"invalid width {w} for partition size {self.size}")
+
+    @property
+    def cores(self) -> tuple[int, ...]:
+        return tuple(range(self.start, self.start + self.size))
+
+    def places(self) -> Iterator[ExecutionPlace]:
+        """All width-aligned execution places in this partition."""
+        for w in self.widths:
+            for leader in range(self.start, self.start + self.size, w):
+                yield ExecutionPlace(leader, w)
+
+    def place_containing(self, core: int, width: int) -> ExecutionPlace:
+        """The aligned place of ``width`` that contains ``core``."""
+        if width not in self.widths:
+            raise ValueError(f"width {width} not valid for {self.name}")
+        off = (core - self.start) // width * width
+        return ExecutionPlace(self.start + off, width)
+
+
+class Topology:
+    """A machine: an ordered list of resource partitions over cores 0..N-1."""
+
+    def __init__(self, partitions: Sequence[ResourcePartition]):
+        self.partitions = tuple(partitions)
+        cores: list[int] = []
+        for p in self.partitions:
+            cores.extend(p.cores)
+        if sorted(cores) != list(range(len(cores))):
+            raise ValueError("partitions must tile cores 0..N-1 exactly")
+        self.n_cores = len(cores)
+        self._part_of = {c: p for p in self.partitions for c in p.cores}
+        self._places = tuple(pl for p in self.partitions for pl in p.places())
+        self.max_width = max(w for p in self.partitions for w in p.widths)
+
+    def partition_of(self, core: int) -> ResourcePartition:
+        return self._part_of[core]
+
+    def places(self) -> tuple[ExecutionPlace, ...]:
+        return self._places
+
+    def local_places(self, core: int) -> list[ExecutionPlace]:
+        """Places containing ``core`` — the *local search* candidates (one
+        per valid width of the core's partition, leader kept aligned)."""
+        part = self.partition_of(core)
+        return [part.place_containing(core, w) for w in part.widths]
+
+    def fastest_static_partition(self) -> ResourcePartition:
+        return min(self.partitions, key=lambda p: p.static_rank)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{p.name}[{p.start}:{p.start + p.size}]" for p in self.partitions)
+        return f"Topology({inner})"
+
+
+# ---------------------------------------------------------------------------
+# Platform presets used throughout the paper's evaluation + the TPU target.
+# ---------------------------------------------------------------------------
+
+def tx2() -> Topology:
+    """NVIDIA Jetson TX2: 2 Denver cores (fast, widths 1/2) + 4 ARM A57
+    cores (widths 1/2/4), each cluster with its own shared L2 (paper §2)."""
+    return Topology([
+        ResourcePartition("denver", "denver", 0, 2, (1, 2), static_rank=0,
+                          bw_domain="lpddr4"),
+        ResourcePartition("a57", "a57", 2, 4, (1, 2, 4), static_rank=1,
+                          bw_domain="lpddr4"),
+    ])
+
+
+def _divisor_widths(size: int) -> tuple[int, ...]:
+    return tuple(w for w in (1, 2, 4, 5, 8, 10, 16) if w <= size and size % w == 0)
+
+
+def haswell(sockets: int = 2, cores_per_socket: int = 10) -> Topology:
+    """Dual-socket 10-core Intel 2650v3 node (paper §4.2.1) — statically
+    symmetric, so all partitions share static_rank 0."""
+    parts = [
+        ResourcePartition(
+            f"socket{s}", "haswell", s * cores_per_socket, cores_per_socket,
+            _divisor_widths(cores_per_socket), static_rank=0,
+        )
+        for s in range(sockets)
+    ]
+    return Topology(parts)
+
+
+def haswell_cluster(nodes: int = 4, sockets: int = 2, cores_per_socket: int = 10) -> Topology:
+    """4-node Haswell cluster (80 cores) used for the distributed 2D Heat."""
+    parts = []
+    for n in range(nodes):
+        for s in range(sockets):
+            start = (n * sockets + s) * cores_per_socket
+            parts.append(ResourcePartition(
+                f"n{n}s{s}", "haswell", start, cores_per_socket,
+                _divisor_widths(cores_per_socket), static_rank=0,
+            ))
+    return Topology(parts)
+
+
+def tpu_pod_slices(pods: int = 2, slices_per_pod: int = 16) -> Topology:
+    """TPU adaptation: each 'core' is a pod *slice* (an ICI-connected group
+    of chips); a partition is a pod.  Valid widths are powers of two —
+    moldability = how many slices a dispatched program spans."""
+    widths = tuple(w for w in (1, 2, 4, 8, 16)
+                   if w <= slices_per_pod and slices_per_pod % w == 0)
+    parts = [
+        ResourcePartition(f"pod{p}", "pod", p * slices_per_pod, slices_per_pod,
+                          widths, static_rank=0)
+        for p in range(pods)
+    ]
+    return Topology(parts)

@@ -1,0 +1,131 @@
+"""Performance Trace Table (paper §4.1.1).
+
+One PTT per *task type*.  Entries are indexed by execution place
+``(leader core, width)`` and hold a weighted moving average of observed
+execution times as seen by the leader core:
+
+    updated = (old_weight * old + new_weight * obs) / (old_weight + new_weight)
+
+with the paper's recommended ratio 1:4 (``new_weight=1, old_weight=4``) so at
+least three observations are needed before the entry tracks a new performance
+regime.  Entries start at zero, which the schedulers interpret as
+"unexplored — try me first", guaranteeing every place is evaluated at least
+once early in the run (paper: "The entries are initialized to zero. This
+ensures that all possible execution places are evaluated at least once").
+"""
+from __future__ import annotations
+
+import threading
+from typing import Iterable
+
+import numpy as np
+
+from .places import ExecutionPlace, Topology
+
+
+class PTT:
+    """Trace table for a single task type over a topology's places.
+
+    Stored as a dense ``[n_cores, n_width_slots]`` float array (rows are
+    per-core — the paper lays rows out to fit cache lines so each core
+    touches its own line; we keep the same row-major layout).  Invalid
+    (core, width) combinations hold NaN.
+    """
+
+    def __init__(self, topology: Topology, *, new_weight: float = 1.0,
+                 old_weight: float = 4.0, first_visit_direct: bool = True):
+        self.topology = topology
+        self.new_weight = float(new_weight)
+        self.old_weight = float(old_weight)
+        self.first_visit_direct = first_visit_direct
+        widths = sorted({w for p in topology.partitions for w in p.widths})
+        self._w_slot = {w: i for i, w in enumerate(widths)}
+        self.table = np.full((topology.n_cores, len(widths)), np.nan)
+        self.visits = np.zeros_like(self.table, dtype=np.int64)
+        for place in topology.places():
+            self.table[place.leader, self._w_slot[place.width]] = 0.0
+        self._lock = threading.Lock()
+
+    # -- queries ------------------------------------------------------------
+    def get(self, place: ExecutionPlace) -> float:
+        """Predicted execution time; 0.0 means unexplored."""
+        return float(self.table[place.leader, self._w_slot[place.width]])
+
+    def visited(self, place: ExecutionPlace) -> int:
+        return int(self.visits[place.leader, self._w_slot[place.width]])
+
+    # -- updates ------------------------------------------------------------
+    def update(self, place: ExecutionPlace, observed: float) -> float:
+        """Weighted-average update, performed by the leader on task commit."""
+        if observed < 0 or not np.isfinite(observed):
+            raise ValueError(f"bad observation {observed!r}")
+        r, c = place.leader, self._w_slot[place.width]
+        with self._lock:
+            old = self.table[r, c]
+            if np.isnan(old):
+                raise KeyError(f"invalid place {place}")
+            if self.visits[r, c] == 0 and self.first_visit_direct:
+                new = float(observed)
+            else:
+                new = (self.old_weight * old + self.new_weight * observed) / (
+                    self.old_weight + self.new_weight)
+            self.table[r, c] = new
+            self.visits[r, c] += 1
+            return new
+
+    # -- searches (Algorithm 1 primitives) ------------------------------------
+    def _score(self, place: ExecutionPlace, *, cost: bool) -> tuple[float, float]:
+        """Sort key: unexplored (0.0) places sort first, then by predicted
+        time (or parallel cost = time*width).  Ties break toward narrower
+        places (use fewer resources when indifferent)."""
+        t = self.get(place)
+        value = t * place.width if cost else t
+        return (value, place.width)
+
+    def best(self, places: Iterable[ExecutionPlace], *, cost: bool,
+             rng=None) -> ExecutionPlace:
+        """argmin with *random* final tie-break: equal predictions must not
+        systematically pile decisions onto the lowest core id."""
+        best_score, cands = None, []
+        for pl in places:
+            s = self._score(pl, cost=cost)
+            if best_score is None or s < best_score:
+                best_score, cands = s, [pl]
+            elif s == best_score:
+                cands.append(pl)
+        if len(cands) > 1 and rng is not None:
+            return cands[rng.randrange(len(cands))]
+        return cands[0]
+
+    def local_search(self, core: int, *, cost: bool = True, rng=None) -> ExecutionPlace:
+        """Paper: keep partition+core fixed, mold only the width."""
+        return self.best(self.topology.local_places(core), cost=cost, rng=rng)
+
+    def global_search(self, *, cost: bool, rng=None) -> ExecutionPlace:
+        """Paper: sweep all execution places in the system."""
+        return self.best(self.topology.places(), cost=cost, rng=rng)
+
+    def snapshot(self) -> np.ndarray:
+        return self.table.copy()
+
+
+class PTTBank:
+    """One PTT per task type (paper: 'one table is instantiated for each
+    task type')."""
+
+    def __init__(self, topology: Topology, **ptt_kwargs):
+        self.topology = topology
+        self.ptt_kwargs = ptt_kwargs
+        self._tables: dict[str, PTT] = {}
+        self._lock = threading.Lock()
+
+    def for_type(self, task_type_name: str) -> PTT:
+        with self._lock:
+            tbl = self._tables.get(task_type_name)
+            if tbl is None:
+                tbl = self._tables[task_type_name] = PTT(
+                    self.topology, **self.ptt_kwargs)
+            return tbl
+
+    def __iter__(self):
+        return iter(self._tables.items())

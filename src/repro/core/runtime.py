@@ -1,0 +1,197 @@
+"""Real threaded executor — the XiTAO analogue running actual payloads.
+
+Unlike the simulator, nothing here uses cost models: workers execute the
+task's ``payload(width)`` callable (typically a jitted JAX kernel), measure
+wall time, and feed the *measured* time into the PTT.  Scheduling decisions
+are exactly the same ``Scheduler`` object used by the simulator.
+
+Interference can be injected for tests/demos via ``slowdown``: a mapping
+core -> factor; a worker on a slowed core sleeps ``duration*(factor-1)``
+after the payload, emulating a co-runner stealing cycles.  (On this
+container there is a single physical CPU, so *physical* contention cannot
+demonstrate asymmetry; injected slowdown exercises the identical code
+paths the scheduler would see on real hardware.)
+
+Molded execution: the leader runs the payload; member cores block on the
+task barrier for its duration (XiTAO's simplification: "each entry of the
+PTT keeps track of the execution time of the task, as observed by the
+leader core").
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Iterable, Optional
+
+from .dag import DAG
+from .metrics import RunMetrics, TaskRecord
+from .schedulers import Scheduler
+from .task import Task
+
+
+class _Assigned:
+    __slots__ = ("task", "place", "barrier", "started", "done")
+
+    def __init__(self, task, place):
+        self.task = task
+        self.place = place
+        self.barrier = threading.Barrier(place.width)
+        self.started = False
+        self.done = threading.Event()
+
+
+class ThreadedRuntime:
+    def __init__(self, scheduler: Scheduler, *,
+                 slowdown: Optional[dict[int, float]] = None,
+                 idle_sleep: float = 1e-4):
+        self.sched = scheduler
+        self.topo = scheduler.topology
+        self.slowdown = dict(slowdown or {})
+        self.idle_sleep = idle_sleep
+        n = self.topo.n_cores
+        self.wsq: list[deque[Task]] = [deque() for _ in range(n)]
+        self.aq: list[deque[_Assigned]] = [deque() for _ in range(n)]
+        self.lock = threading.Lock()
+        self.work_cv = threading.Condition(self.lock)
+        self.outstanding = 0
+        self.t0 = 0.0
+        self.metrics = RunMetrics(n_cores=n)
+        self.stop = False
+
+    # -- submission -----------------------------------------------------------
+    def _wake(self, task: Task, waker_core: int) -> None:
+        task.t_ready = time.perf_counter() - self.t0
+        target = self.sched.place_on_wake(task, waker_core)
+        with self.work_cv:
+            self.wsq[waker_core if target is None else target].append(task)
+            self.outstanding += 1
+            self.work_cv.notify_all()
+
+    def submit(self, dag: DAG) -> None:
+        self.t0 = time.perf_counter()
+        for root in dag.roots:
+            self._wake(root, waker_core=0)
+
+    # -- worker ---------------------------------------------------------------
+    def _pull(self, core: int) -> Optional[_Assigned]:
+        with self.lock:
+            # 1. own AQ head
+            if self.aq[core]:
+                return self.aq[core][0]
+            # 2. own WSQ (LIFO)
+            if self.wsq[core]:
+                task = self.wsq[core].pop()
+                return self._assign(task, core)
+            # 3. steal (most-loaded victim, FIFO end, re-search place)
+            victims = sorted(range(self.topo.n_cores),
+                             key=lambda v: -len(self.wsq[v]))
+            for v in victims:
+                if v == core:
+                    continue
+                for i, t in enumerate(self.wsq[v]):
+                    if self.sched.may_steal(t):
+                        del self.wsq[v][i]
+                        t.bound_place = None
+                        return self._assign(t, core)
+        return None
+
+    def _assign(self, task: Task, core: int) -> Optional[_Assigned]:
+        # caller holds self.lock
+        place = self.sched.place_on_dequeue(task, core)
+        rec = _Assigned(task, place)
+        for c in place.cores:
+            self.aq[c].append(rec)
+        self.work_cv.notify_all()
+        return self.aq[core][0]
+
+    def _execute(self, rec: _Assigned, core: int) -> None:
+        is_leader = core == rec.place.leader
+        rid = rec.barrier.wait()        # all members rendezvous
+        if is_leader:
+            t_start = time.perf_counter() - self.t0
+            rec.task.t_start = t_start
+            if rec.task.payload is not None:
+                rec.task.payload(rec.place.width)
+            factor = max((self.slowdown.get(c, 1.0) for c in rec.place.cores),
+                         default=1.0)
+            if factor > 1.0:
+                dur = (time.perf_counter() - self.t0) - t_start
+                time.sleep(dur * (factor - 1.0))
+            rec.done.set()
+        else:
+            rec.done.wait()
+        rec.barrier.wait()
+        if is_leader:
+            self._commit(rec)
+
+    def _commit(self, rec: _Assigned) -> None:
+        task = rec.task
+        task.t_end = time.perf_counter() - self.t0
+        task.place = rec.place
+        observed = task.t_end - task.t_start
+        self.sched.ptt.for_type(task.type.name).update(rec.place, observed)
+        with self.lock:
+            for c in rec.place.cores:
+                # remove this record from each member AQ (it is at/near head)
+                try:
+                    self.aq[c].remove(rec)
+                except ValueError:
+                    pass
+            self.metrics.record(TaskRecord(
+                type_name=task.type.name, priority=int(task.priority),
+                leader=rec.place.leader, width=rec.place.width,
+                t_ready=task.t_ready, t_start=task.t_start, t_end=task.t_end))
+        for child in task.children:
+            with self.lock:
+                child.n_deps -= 1
+                ready = child.n_deps == 0
+            if ready:
+                self._wake(child, rec.place.leader)
+        new_tasks = task.on_commit(task) if task.on_commit else []
+        for nt in new_tasks:
+            if nt.n_deps == 0:
+                self._wake(nt, rec.place.leader)
+        with self.work_cv:
+            self.outstanding -= 1
+            self.work_cv.notify_all()
+
+    def _worker(self, core: int) -> None:
+        while True:
+            with self.lock:
+                if self.stop:
+                    return
+            rec = self._pull(core)
+            if rec is None:
+                with self.work_cv:
+                    if self.stop or self.outstanding == 0:
+                        return
+                    self.work_cv.wait(timeout=self.idle_sleep)
+                continue
+            if not rec.done.is_set() or core == rec.place.leader:
+                self._execute(rec, core)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, timeout: float = 120.0) -> RunMetrics:
+        threads = [threading.Thread(target=self._worker, args=(c,), daemon=True)
+                   for c in range(self.topo.n_cores)]
+        for th in threads:
+            th.start()
+        deadline = time.monotonic() + timeout
+        with self.work_cv:
+            while self.outstanding > 0 and time.monotonic() < deadline:
+                self.work_cv.wait(timeout=0.05)
+            self.stop = True
+            self.work_cv.notify_all()
+        for th in threads:
+            th.join(timeout=5.0)
+        self.metrics.finish(time.perf_counter() - self.t0)
+        return self.metrics
+
+
+def run_threaded(dag: DAG, scheduler: Scheduler, *,
+                 slowdown: Optional[dict[int, float]] = None,
+                 timeout: float = 120.0) -> RunMetrics:
+    rt = ThreadedRuntime(scheduler, slowdown=slowdown)
+    rt.submit(dag)
+    return rt.run(timeout=timeout)

@@ -1,0 +1,127 @@
+"""The seven scheduler configurations (paper Table 1 + Algorithm 1).
+
+| name   | asymmetry | moldability | priority placement        |
+|--------|-----------|-------------|---------------------------|
+| RWS    | n/a       | no          | n/a (stealable)           |
+| RWSM-C | n/a       | yes (cost)  | resource cost, local      |
+| FA     | fixed     | no          | statically fastest cores  |
+| FAM-C  | fixed     | yes (cost)  | fastest partition + cost  |
+| DA     | dynamic   | no          | global min time, width 1  |
+| DAM-C  | dynamic   | yes (cost)  | global min time*width     |
+| DAM-P  | dynamic   | yes (cost)  | global min time           |
+
+Two decision points, mirroring XiTAO's task lifetime (paper Fig. 3):
+
+* ``place_on_wake``   — when a predecessor commits and the task becomes
+  ready: HIGH tasks get a *binding* decision (and are pushed to the chosen
+  leader's queue, un-stealable except under RWS); LOW tasks stay on the
+  waker's queue.
+* ``place_on_dequeue`` — when a worker (owner or thief) pulls a LOW task:
+  the width is (re)chosen by local search (paper steps 4-5 re-visit the
+  PTT after a steal).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+from .places import ExecutionPlace, Topology
+from .ptt import PTTBank
+from .task import Priority, Task
+
+
+@dataclasses.dataclass
+class Scheduler:
+    name: str
+    topology: Topology
+    ptt: PTTBank
+    rng: random.Random
+
+    moldable: bool = False
+    dynamic: bool = False            # uses PTT to find *where* (vs static)
+    fixed_asym: bool = False         # static notion of fast cores (FA/FAM-C)
+    high_target_cost: bool = True    # DAM-C (cost) vs DAM-P (performance)
+    steal_high: bool = False         # only RWS-family steals HIGH tasks
+    priority_dequeue: bool = True    # serve HIGH first from own WSQ
+    _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
+
+    # -- wake-time placement -------------------------------------------------
+    def place_on_wake(self, task: Task, waker_core: int) -> Optional[int]:
+        """Return the core whose WSQ receives the task (None = waker's).
+        For HIGH tasks this may also set ``task.bound_place``."""
+        if task.priority != Priority.HIGH:
+            return None                      # LOW: local queue of the waker
+        if self.fixed_asym:
+            # FA/FAM-C: strictly map to the statically fastest partition.
+            part = self.topology.fastest_static_partition()
+            core = part.start + self._fa_rr % part.size
+            self._fa_rr += 1
+            if self.moldable:
+                # FAM-C: cost-minimizing width inside the fast partition.
+                tbl = self.ptt.for_type(task.type.name)
+                cands = [part.place_containing(core, w) for w in part.widths]
+                task.bound_place = tbl.best(cands, cost=True, rng=self.rng)
+            else:
+                task.bound_place = ExecutionPlace(core, 1)
+            return task.bound_place.leader
+        if self.dynamic:
+            tbl = self.ptt.for_type(task.type.name)
+            if not self.moldable:
+                # DA: fastest single core (global search, width locked to 1).
+                cands = [p for p in self.topology.places() if p.width == 1]
+                task.bound_place = tbl.best(cands, cost=False, rng=self.rng)
+            else:
+                # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
+                # pure performance (DAM-P).
+                task.bound_place = tbl.global_search(
+                    cost=self.high_target_cost, rng=self.rng)
+            return task.bound_place.leader
+        return None                          # RWS/RWSM-C: no special handling
+
+    # -- dequeue-time placement ----------------------------------------------
+    def place_on_dequeue(self, task: Task, worker_core: int) -> ExecutionPlace:
+        """Final execution place chosen by the worker that will run it."""
+        if task.bound_place is not None:
+            return task.bound_place
+        if not self.moldable:
+            return ExecutionPlace(worker_core, 1)
+        # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
+        tbl = self.ptt.for_type(task.type.name)
+        return tbl.local_search(worker_core, cost=True, rng=self.rng)
+
+    def may_steal(self, task: Task) -> bool:
+        return self.steal_high or task.priority != Priority.HIGH
+
+
+def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
+                   ptt_new_weight: float = 1.0, ptt_old_weight: float = 4.0) -> Scheduler:
+    """Factory for the paper's seven configurations (Table 1)."""
+    bank = PTTBank(topology, new_weight=ptt_new_weight, old_weight=ptt_old_weight)
+    rng = random.Random(seed)
+    n = name.upper()
+    common = dict(topology=topology, ptt=bank, rng=rng)
+    if n == "RWS":
+        # priority-oblivious: plain LIFO dequeue, HIGH stealable
+        return Scheduler("RWS", steal_high=True, priority_dequeue=False,
+                         **common)
+    if n == "RWSM-C":
+        # extends RWS: still no priority awareness in queues or stealing
+        return Scheduler("RWSM-C", moldable=True, steal_high=True,
+                         priority_dequeue=False, **common)
+    if n == "FA":
+        return Scheduler("FA", fixed_asym=True, **common)
+    if n == "FAM-C":
+        return Scheduler("FAM-C", fixed_asym=True, moldable=True, **common)
+    if n == "DA":
+        return Scheduler("DA", dynamic=True, **common)
+    if n == "DAM-C":
+        return Scheduler("DAM-C", dynamic=True, moldable=True,
+                         high_target_cost=True, **common)
+    if n == "DAM-P":
+        return Scheduler("DAM-P", dynamic=True, moldable=True,
+                         high_target_cost=False, **common)
+    raise ValueError(f"unknown scheduler {name!r}")
+
+
+ALL_SCHEDULERS = ("RWS", "RWSM-C", "FA", "FAM-C", "DA", "DAM-C", "DAM-P")

@@ -1,0 +1,341 @@
+"""Discrete-event simulator of the XiTAO-style runtime (paper §4.1.2).
+
+Faithfully models the scheduler-visible machinery:
+
+* per-core Work Stealing Queue (WSQ, owner LIFO / thief FIFO) holding ready
+  tasks, and a FIFO Assembly Queue (AQ) holding placed tasks; a molded task's
+  pointer is inserted into *all* member AQs atomically and starts when every
+  member reaches it (paper Fig. 3 steps 1-7);
+* binding placement of HIGH tasks at wake time, re-run of the local width
+  search after a steal (steps 4-5), PTT update by the leader on commit
+  (step 8) with multiplicative measurement noise;
+* dynamic asymmetry: per-core piecewise-constant speed profiles (DVFS) and
+  co-running background apps that time-share their pinned cores and pressure
+  the partition's shared memory bandwidth.
+
+Progress integration uses piecewise-constant rates: every event (task
+start/finish, speed breakpoint, background episode edge) re-derives each
+running task's rate
+
+    rate = min_{c in place} speed(c,t)/share(c) * min(1, bw_cap/bw_demand)^s
+
+and re-schedules versioned completion events.  All randomness is seeded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Iterable, Optional
+
+from .dag import DAG
+from .interference import BackgroundApp, SpeedProfile
+from .metrics import RunMetrics, TaskRecord
+from .places import ExecutionPlace
+from .schedulers import Scheduler
+from .task import PARTITION_BW, Priority, Task
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class _Running:
+    task: Task
+    place: ExecutionPlace
+    remaining: float            # work-seconds left at rate 1.0
+    rate: float = -1.0          # <0 = not yet scheduled a finish event
+    version: int = 0
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    t: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    tid: int = dataclasses.field(compare=False, default=-1)
+    version: int = dataclasses.field(compare=False, default=-1)
+
+
+class Simulator:
+    def __init__(self, scheduler: Scheduler, *,
+                 speed: Optional[SpeedProfile] = None,
+                 background: Iterable[BackgroundApp] = (),
+                 horizon: float = 1e6):
+        self.sched = scheduler
+        self.topo = scheduler.topology
+        self.rng = scheduler.rng
+        self.speed = speed or SpeedProfile(self.topo.n_cores)
+        self.background = list(background)
+        self.horizon = horizon
+
+        n = self.topo.n_cores
+        self.wsq: list[deque[Task]] = [deque() for _ in range(n)]
+        self.aq: list[deque[_Running]] = [deque() for _ in range(n)]
+        self.core_busy: list[Optional[_Running]] = [None] * n
+        self.running: dict[int, _Running] = {}
+        self.now = 0.0
+        self._seq = itertools.count()
+        self._events: list[_Event] = []
+        self._done = 0
+        self._outstanding = 0
+        self.metrics = RunMetrics(n_cores=n)
+
+    # ------------------------------------------------------------------ util
+    def _push_event(self, t: float, kind: str, tid: int = -1, version: int = -1):
+        heapq.heappush(self._events, _Event(t, next(self._seq), kind, tid, version))
+
+    def _bg_share(self, core: int) -> tuple[int, float]:
+        """(# active co-runners on core, strongest cache-thrash factor)."""
+        n, thrash = 0, 0.0
+        for b in self.background:
+            if core in b.cores and b.active(self.now):
+                n += 1
+                thrash = max(thrash, b.thrash)
+        return n, thrash
+
+    def _partition_bw_demand(self) -> dict[str, tuple[float, int]]:
+        """partition -> (aggregate bytes/s demanded, # independent streams).
+        More concurrent streams also *degrade* effective DRAM bandwidth
+        (bank/row-buffer thrash) — this is the oversubscription the paper's
+        moldability avoids: one wide task is one stream, w narrow tasks are
+        w streams."""
+        demand: dict[str, tuple[float, int]] = {}
+        for rec in self.running.values():
+            if rec.task.type.bw_demand <= 0:
+                continue
+            dom = self.topo.partition_of(rec.place.leader).domain
+            d, n = demand.get(dom, (0.0, 0))
+            demand[dom] = (d + rec.task.type.bw_demand * rec.place.width, n + 1)
+        for b in self.background:
+            if b.active(self.now) and b.task_type.bw_demand > 0:
+                for c in b.cores:
+                    dom = self.topo.partition_of(c).domain
+                    d, n = demand.get(dom, (0.0, 0))
+                    demand[dom] = (d + b.task_type.bw_demand, n + 1)
+        return demand
+
+    def _rate_of(self, rec: _Running, demand: dict[str, tuple[float, int]]) -> float:
+        core_rate = float("inf")
+        for c in rec.place.cores:
+            n_bg, thrash = self._bg_share(c)
+            r = self.speed.speed(c, self.now) / (1 + n_bg) * (1.0 - thrash) ** (n_bg > 0)
+            core_rate = min(core_rate, r)
+        s = rec.task.type.mem_sensitivity
+        if s > 0.0:
+            part = self.topo.partition_of(rec.place.leader)
+            cap = PARTITION_BW[part.kind]
+            dem, streams = demand.get(part.domain, (0.0, 0))
+            cap *= max(0.6, 1.0 - 0.08 * max(0, streams - 1))
+            if dem > cap:
+                core_rate *= (cap / dem) ** s
+        return max(core_rate, 1e-9)
+
+    def _refresh_rates(self):
+        """Advance + re-derive every running task's rate; reschedule finishes."""
+        demand = self._partition_bw_demand()
+        for rec in self.running.values():
+            rate = self._rate_of(rec, demand)
+            if rec.rate < 0 or abs(rate - rec.rate) > 1e-12 * max(rate, rec.rate):
+                rec.rate = rate
+                rec.version += 1
+                self._push_event(self.now + rec.remaining / rate, "finish",
+                                 rec.task.tid, rec.version)
+
+    def _advance(self, t: float):
+        dt = t - self.now
+        if dt <= 0:
+            if dt < -1e-9 * max(1.0, abs(self.now)):
+                raise RuntimeError(f"time went backwards: {self.now} -> {t}")
+            return      # same instant (fp jitter)
+        for rec in self.running.values():
+            rec.remaining -= dt * rec.rate
+        self.now = t
+
+    # ----------------------------------------------------------------- wake
+    def _wake(self, task: Task, waker_core: int):
+        task.t_ready = self.now
+        target = self.sched.place_on_wake(task, waker_core)
+        self.wsq[waker_core if target is None else target].append(task)
+        self._outstanding += 1
+
+    def submit(self, dag: DAG):
+        for root in dag.roots:
+            self._wake(root, waker_core=0)
+
+    # -------------------------------------------------------------- dispatch
+    def _try_assign_from_wsq(self, core: int) -> bool:
+        """Pop own WSQ and place the task into AQs.  HIGH tasks are served
+        first (oldest HIGH — they gate the DAG); LOW tasks pop LIFO for
+        locality, as in a classic work-stealing deque."""
+        q = self.wsq[core]
+        if not q:
+            return False
+        task = None
+        if self.sched.priority_dequeue:
+            for i, t in enumerate(q):           # oldest HIGH first
+                if t.priority == Priority.HIGH:
+                    task = t
+                    del q[i]
+                    break
+        if task is None:
+            task = q.pop()                      # newest (plain LIFO deque)
+        self._place_into_aqs(task, core)
+        return True
+
+    def _try_steal(self, thief: int) -> bool:
+        """Steal from the WSQ with the most stealable tasks (paper step 3),
+        FIFO end; re-run the place search at the thief (steps 4-5)."""
+        best, best_n = -1, 0
+        order = list(range(self.topo.n_cores))
+        self.rng.shuffle(order)          # random tie-breaking
+        for v in order:
+            if v == thief:
+                continue
+            n = sum(1 for t in self.wsq[v] if self.sched.may_steal(t))
+            if n > best_n:
+                best, best_n = v, n
+        if best < 0:
+            return False
+        victim_q = self.wsq[best]
+        for i, t in enumerate(victim_q):          # oldest stealable first
+            if self.sched.may_steal(t):
+                del victim_q[i]
+                t.bound_place = None              # stolen -> decision redone
+                self._place_into_aqs(t, thief)
+                return True
+        return False
+
+    def _place_into_aqs(self, task: Task, worker_core: int):
+        place = self.sched.place_on_dequeue(task, worker_core)
+        rec = _Running(task, place,
+                       remaining=task.type.duration(
+                           self.topo.partition_of(place.leader).kind, place.width))
+        for c in place.cores:
+            self.aq[c].append(rec)
+
+    def _try_start_aq(self, core: int) -> bool:
+        """Start the AQ head if every member core has it at head and is idle."""
+        if self.core_busy[core] is not None or not self.aq[core]:
+            return False
+        rec = self.aq[core][0]
+        for c in rec.place.cores:
+            if self.core_busy[c] is not None or not self.aq[c] or self.aq[c][0] is not rec:
+                return False
+        for c in rec.place.cores:
+            self.aq[c].popleft()
+            self.core_busy[c] = rec
+        rec.task.place = rec.place
+        rec.task.t_start = self.now
+        self.running[rec.task.tid] = rec
+        # rate + finish event are set by the caller's _refresh_rates()
+        return True
+
+    def _dispatch(self):
+        """Run idle cores to fixpoint.  Two-phase, mirroring real stealing
+        latencies: owners pop their local WSQ essentially for free (phase A),
+        while thieves race at a much coarser granularity (phase B).  Core
+        order is shuffled per pass so ties are broken randomly, not by id."""
+        progress = True
+        order = list(range(self.topo.n_cores))
+        while progress:
+            progress = False
+            self.rng.shuffle(order)
+            # phase A: local work only (AQ head, then own WSQ)
+            for core in order:
+                if self.core_busy[core] is not None:
+                    continue
+                if self._try_start_aq(core):
+                    progress = True
+                elif not self.aq[core] and self._try_assign_from_wsq(core):
+                    progress = True
+            # phase B: idle cores with empty AQs attempt to steal
+            self.rng.shuffle(order)
+            for core in order:
+                if self.core_busy[core] is not None or self.aq[core]:
+                    continue
+                if self._try_start_aq(core):
+                    progress = True
+                elif not self.wsq[core] and self._try_steal(core):
+                    progress = True
+
+    # --------------------------------------------------------------- commit
+    def _commit(self, rec: _Running):
+        task = rec.task
+        task.t_end = self.now
+        for c in rec.place.cores:
+            self.core_busy[c] = None
+        del self.running[task.tid]
+        self._done += 1
+        self._outstanding -= 1
+
+        # Leader measures and updates the PTT (with measurement noise +
+        # heavy-tailed spikes from OS jitter on short tasks).
+        duration = task.t_end - task.t_start
+        noise = self.rng.gauss(1.0, task.type.noise) if task.type.noise else 1.0
+        observed = duration * min(max(noise, 0.5), 2.0)
+        if task.type.spike_prob and self.rng.random() < task.type.spike_prob:
+            observed *= task.type.spike_mag
+        self.sched.ptt.for_type(task.type.name).update(rec.place, observed)
+
+        self.metrics.record(TaskRecord(
+            type_name=task.type.name, priority=int(task.priority),
+            leader=rec.place.leader, width=rec.place.width,
+            t_ready=task.t_ready, t_start=task.t_start, t_end=task.t_end))
+
+        # Wake dependents; dynamic DAG growth.
+        leader = rec.place.leader
+        for child in task.children:
+            child.n_deps -= 1
+            if child.n_deps == 0:
+                self._wake(child, leader)
+        if task.on_commit is not None:
+            for new_task in task.on_commit(task):
+                if new_task.n_deps == 0:
+                    self._wake(new_task, leader)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> RunMetrics:
+        for b in self.background:
+            if b.t_start > 0:
+                self._push_event(b.t_start, "bg")
+            if b.t_end < self.horizon:
+                self._push_event(b.t_end, "bg")
+        for t in self.speed.breakpoints(self.horizon):
+            self._push_event(t, "speed")
+
+        self._dispatch()
+        self._refresh_rates()
+        while self._events:
+            ev = heapq.heappop(self._events)
+            if ev.t > self.horizon:
+                break
+            if ev.kind == "finish":
+                rec = self.running.get(ev.tid)
+                if rec is None or rec.version != ev.version:
+                    continue                       # stale
+                self._advance(ev.t)
+                if rec.remaining > 1e-9 * max(rec.rate, 1.0):
+                    rec.version += 1               # numeric drift: reschedule
+                    self._push_event(self.now + rec.remaining / rec.rate,
+                                     "finish", ev.tid, rec.version)
+                    continue
+                self._commit(rec)
+            else:                                  # speed / bg / noop
+                self._advance(ev.t)
+            self._dispatch()
+            self._refresh_rates()
+            if self._outstanding == 0 and not self.running:
+                break
+        self.metrics.finish(self.now)
+        return self.metrics
+
+
+def simulate(dag: DAG, scheduler: Scheduler, *,
+             speed: Optional[SpeedProfile] = None,
+             background: Iterable[BackgroundApp] = (),
+             horizon: float = 1e6) -> RunMetrics:
+    sim = Simulator(scheduler, speed=speed, background=background,
+                    horizon=horizon)
+    sim.submit(dag)
+    return sim.run()

@@ -1,0 +1,237 @@
+"""Tasks, task types and the moldable cost model (paper §2, §4.2.2).
+
+A *task type* names a kernel (matmul / copy / stencil / kmeans_map / ...)
+and carries a cost model used by the discrete-event simulator:
+
+  * ``serial_time[kind]`` — seconds at width=1 on an unperturbed core of a
+    partition *kind* (denver, a57, haswell, pod, ...).
+  * ``efficiency(width)`` — parallel efficiency; molded duration is
+    ``serial / (width * efficiency)``.  May exceed 1.0 slightly for
+    cache-pooling effects (a width-4 stencil gets the whole shared L2).
+  * ``bw_demand`` / ``mem_sensitivity`` — streaming kernels pressure the
+    partition's shared memory bandwidth and are slowed when the sum of
+    co-running demands exceeds it.  This is how co-running *copy* chains
+    interfere with whole partitions in the paper's experiments.
+
+The real threaded runtime ignores the cost model and *measures* payload
+wall time — cost models never influence scheduling there; only the PTT does.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Callable, Optional
+
+from .places import ExecutionPlace
+
+
+class Priority(enum.IntEnum):
+    LOW = 0
+    HIGH = 1
+
+
+# Shared-bandwidth capacity per partition kind (bytes/s) for the contention
+# model; roughly: TX2 LPDDR4 split per cluster, Haswell per-socket DDR4,
+# TPU per-slice HBM.
+# Effective shared-bandwidth capacity of a bw *domain*, keyed by the kind of
+# the partitions in it (TX2: both clusters share the LPDDR4 pipe; Haswell:
+# one domain per socket; TPU: per-pod aggregate HBM).
+PARTITION_BW = {
+    "denver": 18.0e9,
+    "a57": 18.0e9,
+    "haswell": 45.0e9,
+    "pod": 8.19e11 * 16,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskType:
+    name: str
+    serial_time: dict[str, float]
+    efficiency: Callable[[int], float] = lambda w: 1.0
+    bw_demand: float = 0.0          # bytes/s demanded at width 1
+    mem_sensitivity: float = 0.0    # in [0,1]: exponent on the bw-share slowdown
+    noise: float = 0.0              # stddev of multiplicative measurement noise
+    # heavy-tailed measurement spikes (OS interrupts / timer quantization —
+    # dominant for ~10 us tasks; this is what makes the PTT weight ratio
+    # matter in the paper's Fig. 8)
+    spike_prob: float = 0.0
+    spike_mag: float = 1.0
+
+    def duration(self, kind: str, width: int) -> float:
+        """Unperturbed molded duration (the DES divides this by the
+        time-varying rate)."""
+        if kind not in self.serial_time:
+            raise KeyError(f"{self.name}: no cost for partition kind {kind!r}")
+        eff = self.efficiency(width)
+        if not 0.0 < eff <= 1.5:
+            raise ValueError(f"{self.name}: efficiency({width})={eff} out of (0,1.5]")
+        return self.serial_time[kind] / (width * eff)
+
+
+_task_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Task:
+    """One DAG node.  ``payload`` is only used by the real runtime: a
+    callable ``payload(width) -> None`` that does the actual work."""
+
+    type: TaskType
+    priority: Priority = Priority.LOW
+    payload: Optional[Callable[[int], None]] = None
+    tid: int = dataclasses.field(default_factory=lambda: next(_task_ids))
+
+    # DAG linkage
+    children: list["Task"] = dataclasses.field(default_factory=list)
+    n_deps: int = 0               # unsatisfied input dependencies
+    # Dynamic-DAG hook: called on commit; may create & return new tasks
+    # (paper §2: tasks may conditionally insert new tasks at runtime).
+    on_commit: Optional[Callable[["Task"], list["Task"]]] = None
+
+    # Scheduling state (filled in by the engines)
+    bound_place: Optional[ExecutionPlace] = None   # binding decision (high prio)
+    place: Optional[ExecutionPlace] = None         # final execution place
+    t_ready: float = -1.0
+    t_start: float = -1.0
+    t_end: float = -1.0
+
+    def add_child(self, child: "Task") -> "Task":
+        self.children.append(child)
+        child.n_deps += 1
+        return child
+
+    def __hash__(self) -> int:
+        return self.tid
+
+    def __repr__(self) -> str:
+        p = "H" if self.priority == Priority.HIGH else "L"
+        return f"Task<{self.tid}:{self.type.name}:{p}>"
+
+
+# ---------------------------------------------------------------------------
+# The paper's three synthetic node kernels (§4.2.2).
+#
+# Calibration notes (TX2): Denver ~2x A57 on dense GEMM; A57 L1d is 32 KB vs
+# Denver 64 KB, so matmul tiles of 64/80 (48/75 KB working set) spill A57 L1
+# and run at a lower per-element rate there; tile 96 spills both L1s into the
+# 2 MB shared L2.  Short tasks (tile 32 -> ~10 us) have noisy measurements,
+# which is what makes the PTT weight ratio matter in the paper's Fig. 8.
+# ---------------------------------------------------------------------------
+
+def _compute_eff(w: int) -> float:
+    return {1: 1.0, 2: 0.95, 4: 0.90, 5: 0.90, 8: 0.85, 10: 0.85, 16: 0.80}.get(w, 0.8)
+
+
+def _memory_eff(w: int) -> float:
+    # Streaming: molding widens the stream but shares one memory pipe; the
+    # win is mainly *not* co-running w independent streams (contention model).
+    return {1: 1.0, 2: 0.80, 4: 0.60, 5: 0.55, 8: 0.45, 10: 0.40, 16: 0.35}.get(w, 0.3)
+
+
+def _cache_eff(w: int) -> float:
+    # Cache-intensive: pooling the shared L2 gives slightly superlinear
+    # efficiency at the cluster width.
+    return {1: 1.0, 2: 1.05, 4: 1.10, 5: 1.05, 8: 0.95, 10: 0.90, 16: 0.85}.get(w, 0.8)
+
+
+# per-(kind) GEMM rate in FLOP/s, by tile regime: fits-L1 / spills-to-L2.
+# Denver's wide 7-way core is ~3x an A57 on dense fp32 GEMM.
+_MM_RATE = {
+    "denver": {"l1": 9.0e9, "l2": 7.5e9},
+    "a57": {"l1": 3.0e9, "l2": 1.9e9},
+    "haswell": {"l1": 3.4e10, "l2": 2.9e10},
+    "pod": {"l1": 1.97e14, "l2": 1.80e14},
+}
+_L1_BYTES = {"denver": 64 * 1024, "a57": 32 * 1024, "haswell": 32 * 1024,
+             "pod": 1 << 60}
+
+
+def matmul_type(tile: int = 64) -> TaskType:
+    """Compute-intensive GEMM node; per-task tile NxN fp32 (paper: 64)."""
+    flops = 2.0 * tile ** 3
+    wset = 3 * 4 * tile * tile
+    serial = {}
+    for kind, rates in _MM_RATE.items():
+        regime = "l1" if wset <= _L1_BYTES[kind] else "l2"
+        serial[kind] = flops / rates[regime]
+    # Molding a tiny GEMM across cores pays a sync cost comparable to the
+    # work itself; the efficiency curve improves with tile size.
+    if tile <= 64:
+        eff = lambda w: {1: 1.0, 2: 0.72, 4: 0.40, 5: 0.36, 8: 0.28,
+                         10: 0.25, 16: 0.20}.get(w, 0.2)
+    elif tile <= 96:
+        eff = lambda w: {1: 1.0, 2: 0.85, 4: 0.65, 5: 0.60, 8: 0.50,
+                         10: 0.45, 16: 0.40}.get(w, 0.4)
+    else:
+        eff = _compute_eff
+    # tile 32 -> ~10 us tasks: timer noise is a large fraction of the reading
+    # and OS jitter shows up as multi-x spikes; longer tasks average it out.
+    noise = {32: 0.20, 64: 0.06, 80: 0.04, 96: 0.03}.get(tile, 0.05)
+    spike_p = {32: 0.08, 64: 0.02, 80: 0.01, 96: 0.01}.get(tile, 0.01)
+    spike_m = {32: 6.0, 64: 2.0, 80: 1.5, 96: 1.5}.get(tile, 1.5)
+    return TaskType(f"matmul{tile}", serial, efficiency=eff,
+                    bw_demand=0.05e9, mem_sensitivity=0.15, noise=noise,
+                    spike_prob=spike_p, spike_mag=spike_m)
+
+
+def copy_type(tile: int = 1024) -> TaskType:
+    """Memory-intensive streaming copy; tile x tile fp32 read+write.
+    Single-core effective stream bandwidth (TX2 ~3 GB/s class)."""
+    bytes_moved = 2.0 * 4.0 * tile * tile
+    bw = {"denver": 3.5e9, "a57": 2.5e9, "haswell": 1.2e10, "pod": 8.19e11}
+    return TaskType(
+        f"copy{tile}", {k: bytes_moved / b for k, b in bw.items()},
+        efficiency=_memory_eff,
+        bw_demand=3.0e9, mem_sensitivity=1.0, noise=0.03,
+    )
+
+
+def stencil_type(tile: int = 1024) -> TaskType:
+    """Cache-intensive 5-point stencil over a tile x tile fp32 grid."""
+    flops = 5.0 * tile * tile * 4      # 4 sweeps per task
+    rate = {"denver": 5.5e9, "a57": 2.8e9, "haswell": 2.2e10, "pod": 9.0e13}
+    return TaskType(
+        f"stencil{tile}", {k: flops / r for k, r in rate.items()},
+        efficiency=_cache_eff,
+        bw_demand=2.0e9, mem_sensitivity=0.5, noise=0.03,
+    )
+
+
+def mpi_exchange_type(boundary_kb: float = 64.0) -> TaskType:
+    """Ghost-cell exchange for the distributed 2D Heat app.  Message passing
+    is single-core work, but reserving a width-2 place keeps the co-located
+    cache quiet, which measurably helps MPI (paper §5.4 citing [25]) —
+    modeled as a small efficiency credit at width 2."""
+    t = boundary_kb * 1024 / 1.2e9     # FDR IB effective pt2pt + sw overhead
+    eff = lambda w: {1: 1.0, 2: 0.56}.get(w, 1.0 / w)
+    return TaskType(
+        "mpi_exchange",
+        {"haswell": t, "denver": t, "a57": t, "pod": t / 50},
+        efficiency=eff, bw_demand=1.0e9, mem_sensitivity=0.8, noise=0.05,
+    )
+
+
+def kmeans_map_type(points: int, dims: int, k: int) -> TaskType:
+    """K-means assignment step over a chunk of points (data-parallel map)."""
+    flops = 3.0 * points * dims * k
+    rate = {"haswell": 2.6e10, "denver": 7.0e9, "a57": 3.5e9, "pod": 1.5e14}
+    return TaskType(
+        f"kmeans_map{points}x{dims}x{k}",
+        {kind: flops / r for kind, r in rate.items()},
+        efficiency=_compute_eff, bw_demand=4.0e9, mem_sensitivity=0.4,
+        noise=0.04,
+    )
+
+
+def kmeans_reduce_type(k: int, dims: int, chunks: int) -> TaskType:
+    """Centroid update (reduction) — the largest serial unit, marked HIGH."""
+    flops = 2.0 * k * dims * chunks * 50
+    rate = {"haswell": 1.2e10, "denver": 5.0e9, "a57": 2.5e9, "pod": 1.0e14}
+    return TaskType(
+        f"kmeans_reduce{k}x{dims}",
+        {kind: flops / r for kind, r in rate.items()},
+        efficiency=lambda w: {1: 1.0, 2: 0.8}.get(w, 0.6), bw_demand=1.0e9,
+        mem_sensitivity=0.3, noise=0.04,
+    )

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Prefetcher, SyntheticStream
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticStream"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+<name>.py      — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+ops.py         — jit'd public wrappers with CPU(XLA)/TPU(Pallas) dispatch
+ref.py         — pure-jnp oracles used for validation and the CPU path
+
+Kernels: matmul / copy / stencil (the paper's three synthetic node types,
+also used as real payloads by the threaded runtime), flash_attention
+(LM backbone), ssd_scan (Mamba-2 hybrid archs).
+"""
+from . import ops, ref
+from .copy import copy_pallas
+from .flash_attention import flash_attention_pallas
+from .matmul import matmul_pallas
+from .ssd_scan import ssd_scan_pallas
+from .stencil import stencil_pallas
+
+__all__ = ["ops", "ref", "copy_pallas", "flash_attention_pallas",
+           "matmul_pallas", "ssd_scan_pallas", "stencil_pallas"]

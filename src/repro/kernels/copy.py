@@ -1,0 +1,36 @@
+"""Tiled streaming-copy Pallas kernel (the paper's memory-intensive node).
+
+Pure HBM->VMEM->HBM stream: each grid cell moves one (bm, bn) tile.  The
+tile shape (512, 1024) x f32 = 2 MiB saturates the DMA pipeline while
+keeping double-buffered usage at 8 MiB of the ~16 MiB VMEM.  This kernel
+exists to give the runtime's PTT a pure bandwidth-bound task type whose
+performance reacts to memory interference, mirroring the paper's Copy DAG.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def copy_pallas(x: jax.Array, *, bm: int = 512, bn: int = 1024,
+                interpret: bool = False) -> jax.Array:
+    m, n = x.shape
+    bm, bn = min(bm, m), min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by ({bm},{bn})")
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

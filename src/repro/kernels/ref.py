@@ -1,0 +1,163 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels_*.py`` and the default execution path on CPU
+(see ops.py).  No pallas imports here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation (MXU semantics)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def copy_ref(x: jax.Array) -> jax.Array:
+    """Streaming identity (the paper's memory-intensive node)."""
+    return x + jnp.zeros((), x.dtype)     # defeat trivial aliasing
+
+
+def stencil_ref(u: jax.Array) -> jax.Array:
+    """One Jacobi step of the 5-point 2D heat stencil with zero (Dirichlet)
+    boundary: u'[i,j] = 0.25*(u[i-1,j]+u[i+1,j]+u[i,j-1]+u[i,j+1])."""
+    up = jnp.pad(u, ((0, 0), (1, 1), (1, 1)))
+    return 0.25 * (up[:, :-2, 1:-1] + up[:, 2:, 1:-1]
+                   + up[:, 1:-1, :-2] + up[:, 1:-1, 2:]).astype(u.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: float | None = None) -> jax.Array:
+    """GQA attention oracle.
+
+    q: [B, Hq, S, D]; k/v: [B, Hkv, T, D] with Hq % Hkv == 0.
+    Softmax in f32; causal mask aligns the *ends* of q and kv windows
+    (standard convention for prefill where T >= S).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    t = k.shape[2]
+    if causal:
+        q_pos = jnp.arange(s)[:, None] + (t - s)
+        k_pos = jnp.arange(t)[None, :]
+        logits = jnp.where(k_pos <= q_pos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, scale: float | None = None,
+                          q_chunk: int = 512) -> jax.Array:
+    """Memory-bounded XLA attention: lax.scan over q chunks with full K/V
+    per chunk (peak O(bq*T) instead of O(S*T)).  Same semantics as
+    attention_ref; this is what the CPU/dry-run path lowers for long
+    sequences (the Pallas flash kernel covers the TPU path).
+
+    GQA is expressed by grouping the query (no KV repeat — a 5x f32 KV
+    materialization).  Sharding is pinned ONCE outside the chunk loop:
+    q sequence-sharded over the model axis, K/V replicated — every chunk
+    iteration is then fully local.  Left free, GSPMD shards the d=128
+    *contraction* and all-reduces 1.3 GB of logits per chunk per layer —
+    4.1 TB/step measured on qwen2.5-14b prefill_32k (EXPERIMENTS.md §Perf
+    cell 3); pinning *inside* the loop instead reshards the stacked output
+    buffer per chunk (also measured, far worse)."""
+    from ..parallel.sharding import constrain
+    b, hq, s, dm = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else dm ** -0.5
+    while s % q_chunk:
+        q_chunk //= 2
+    n_chunks = s // q_chunk
+    offset = t - s
+    kf = constrain(k, ("dp", None, None, None))   # stays bf16: f32 accum via
+    vf = constrain(v, ("dp", None, None, None))   # preferred_element_type
+    qc = q.reshape(b, hkv, group, n_chunks, q_chunk, dm).transpose(
+        3, 0, 1, 2, 4, 5)                                     # [C,B,Hkv,G,s,D]
+    qc = constrain(qc, (None, "dp", None, None, "model", None))
+
+    def chunk(i, q_i):
+        logits = jnp.einsum("bhgsd,bhtd->bhgst", q_i, kf,
+                            preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = i * q_chunk + jnp.arange(q_chunk)[:, None] + offset
+            k_pos = jnp.arange(t)[None, :]
+            logits = jnp.where(k_pos <= q_pos, logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhgst,bhtd->bhgsd", w, vf,
+                          preferred_element_type=jnp.float32)
+
+    out = jax.lax.map(lambda iq: chunk(iq[0], iq[1]),
+                      (jnp.arange(n_chunks), qc))             # [C,B,Hkv,G,s,D]
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, s, dm)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Mamba-2 SSD (scalar-A state space) oracle via a plain scan.
+
+    x: [B, S, H, D]   token inputs per head
+    a: [B, S, H]      log-decay (a <= 0; state multiplier is exp(a))
+    b: [B, S, N]      input projection  (shared across heads, Mamba-2 style)
+    c: [B, S, N]      output projection
+    returns y: [B, S, H, D] with
+      h_t = exp(a_t) * h_{t-1} + b_t ⊗ x_t      (h: [H, D, N])
+      y_t = h_t @ c_t
+    """
+    bs, s, h, d = x.shape
+    n = b.shape[-1]
+
+    def step(hprev, inp):
+        xt, at, bt, ct = inp
+        hnew = jnp.exp(at)[:, None, None] * hprev + \
+            xt[:, :, None] * bt[None, None, :]
+        yt = jnp.einsum("hdn,n->hd", hnew, ct)
+        return hnew, yt
+
+    def per_batch(xb, ab, bb, cb):
+        h0 = jnp.zeros((h, d, n), jnp.float32)
+        _, yb = jax.lax.scan(step, h0, (xb.astype(jnp.float32),
+                                        ab.astype(jnp.float32),
+                                        bb.astype(jnp.float32),
+                                        cb.astype(jnp.float32)))
+        return yb
+
+    y = jax.vmap(per_batch)(x, a, b, c)
+    return y.astype(x.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, *, scale: float | None = None) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: [B, Hq, D]; k/v_cache: [B, T, Hkv, D]; lengths: [B] (valid prefix).
+
+    GQA is expressed by *grouping the query* [B, Hkv, G, D] rather than
+    repeating the cache — repeating a sequence-sharded cache makes GSPMD
+    re-shard it by head (a full-cache replication every decode step).  The
+    logits are pinned sequence-sharded; softmax over the sharded T lowers
+    to cheap per-(b,h) all-reduces.
+    """
+    from ..parallel.sharding import constrain
+    bsz, hq, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(bsz, hkv, group, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    logits = constrain(logits, ("dp", None, None, "model"))
+    mask = jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(bsz, hq, d).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""5-point Jacobi stencil Pallas kernel (paper's cache-intensive node and
+the compute body of the distributed 2D Heat application).
+
+Halo strategy (TPU-native): rather than overlapping DMA windows, each grid
+cell reads its own (bh, bw) tile plus the four *neighbor tiles* via extra
+BlockSpecs whose index maps are clamped at the domain edge.  Only one edge
+row/column of each neighbor is consumed; masks built from
+``broadcasted_iota`` zero the contribution at true domain boundaries
+(Dirichlet).  Tiles are (256, 256) f32 = 256 KiB -> 5 tiles ≈ 1.25 MiB in
+VMEM, comfortably double-bufferable.
+
+Batch dimension is grid-mapped with one row of tiles per image.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(c_ref, l_ref, r_ref, u_ref, d_ref, o_ref, *, bh, bw):
+    i = pl.program_id(1)      # tile-row
+    j = pl.program_id(2)      # tile-col
+    ni = pl.num_programs(1)
+    nj = pl.num_programs(2)
+    c = c_ref[0]
+
+    # columns from the left/right neighbor tiles (zero at domain edges)
+    left_col = jnp.where(j > 0, l_ref[0, :, -1], 0.0)
+    right_col = jnp.where(j < nj - 1, r_ref[0, :, 0], 0.0)
+    up_row = jnp.where(i > 0, u_ref[0, -1, :], 0.0)
+    down_row = jnp.where(i < ni - 1, d_ref[0, 0, :], 0.0)
+
+    shift_l = jnp.concatenate([left_col[:, None], c[:, :-1]], axis=1)
+    shift_r = jnp.concatenate([c[:, 1:], right_col[:, None]], axis=1)
+    shift_u = jnp.concatenate([up_row[None, :], c[:-1, :]], axis=0)
+    shift_d = jnp.concatenate([c[1:, :], down_row[None, :]], axis=0)
+
+    o_ref[0] = (0.25 * (shift_l + shift_r + shift_u + shift_d)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bh", "bw", "interpret"))
+def stencil_pallas(u: jax.Array, *, bh: int = 256, bw: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    b, h, w = u.shape
+    bh, bw = min(bh, h), min(bw, w)
+    if h % bh or w % bw:
+        raise ValueError(f"shape ({h},{w}) not divisible by ({bh},{bw})")
+    ni, nj = h // bh, w // bw
+
+    def center(bi, i, j):
+        return (bi, i, j)
+
+    def left(bi, i, j):
+        return (bi, i, jnp.maximum(j - 1, 0))
+
+    def right(bi, i, j):
+        return (bi, i, jnp.minimum(j + 1, nj - 1))
+
+    def up(bi, i, j):
+        return (bi, jnp.maximum(i - 1, 0), j)
+
+    def down(bi, i, j):
+        return (bi, jnp.minimum(i + 1, ni - 1), j)
+
+    spec = lambda index_map: pl.BlockSpec((1, bh, bw), index_map)
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, bh=bh, bw=bw),
+        grid=(b, ni, nj),
+        in_specs=[spec(center), spec(left), spec(right), spec(up), spec(down)],
+        out_specs=spec(center),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), u.dtype),
+        interpret=interpret,
+    )(u, u, u, u, u)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder devices.  Nothing
+else in the repo sets this flag (smoke tests and benches see 1 device).
+
+Per cell this driver:
+  1. builds abstract params / optimizer / batch / decode-state trees with
+     jax.eval_shape (ShapeDtypeStruct only — nothing is allocated);
+  2. jits the step with in/out shardings from parallel/sharding.py and
+     runs .lower().compile();
+  3. prints compiled.memory_analysis() (proof it fits per-chip HBM) and
+     cost_analysis() (FLOPs / bytes);
+  4. parses compiled.as_text() for all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute result bytes;
+  5. computes the three roofline terms (compute / memory / collective,
+     TPU v5e constants) and writes a JSON artifact under
+     benchmarks/artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, shape_applicable
+from ..models import init_decode_state, init_params
+from ..optim import AdamWConfig, init_opt_state
+from ..parallel import (batch_specs, decode_state_specs, opt_moment_specs,
+                        param_specs, to_named)
+from ..train import make_decode_step, make_prefill_step, make_train_step
+from .mesh import make_production_mesh
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (task-specified ~50 GB/s/link)
+HBM_PER_CHIP = 16 * 2 ** 30
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+def n_micro_for(mesh) -> int:
+    """Grad-accum microbatches per train step: keep one sequence per DP
+    shard per microbatch (batch 256: 16 micro on single pod, 8 on multi)."""
+    from ..parallel.sharding import dp_axes
+    dp = 1
+    for a in dp_axes(mesh):
+        dp *= mesh.shape[a]
+    return max(1, 256 // dp)
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in the compiled
+    (SPMD-partitioned) module.  all-reduce moves ~2x its payload on a ring
+    (reduce-scatter + all-gather phases)."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:
+            continue
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(m.group("out")):
+            dims = sm.group("dims")
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(sm.group("dt"), 4)
+        factor = 2.0 if op == "all-reduce" else 1.0
+        totals[op] = totals.get(op, 0.0) + nbytes * factor
+        counts[op] = counts.get(op, 0) + 1
+    totals["total"] = sum(totals.values())
+    return {"bytes": totals, "counts": counts}
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+FSDP_BYTES_THRESHOLD = 2.5e9   # bf16 params per device above this -> FSDP
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (step_fn, arg_shapes, in_shardings) for one cell."""
+    cfg = dataclasses.replace(ARCHS[arch], dtype="bfloat16")
+    shape = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+
+    # TP shards params over "model"; if that still exceeds the HBM budget
+    # (the 70B VLM, the 30B MoEs), add FSDP over "data" and sequence
+    # parallelism (SP costs weight-grad partial-sum ARs in the scan bwd —
+    # only worth it when activation memory is critical; §Perf iteration 3).
+    per_dev_param_bytes = cfg.n_params * 2 / mesh.shape["model"]
+    use_fsdp = per_dev_param_bytes > FSDP_BYTES_THRESHOLD
+    cfg = dataclasses.replace(cfg, seq_parallel=use_fsdp)
+    p_shape = _abstract(lambda: init_params(cfg, key))
+    p_spec = param_specs(p_shape, mesh, fsdp=use_fsdp)
+
+    if shape.kind == "train":
+        opt_shape = _abstract(init_opt_state, p_shape)
+        o_spec = opt_moment_specs_tree(p_shape, opt_shape, mesh)
+        n_micro = n_micro_for(mesh)
+        micro = shape.global_batch // n_micro
+        s_text = shape.seq_len - (cfg.frontend_len if cfg.frontend != "none" else 0)
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct((n_micro, micro, s_text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((n_micro, micro, s_text), jnp.int32),
+        }
+        if cfg.frontend != "none":
+            batch_shape["frontend"] = jax.ShapeDtypeStruct(
+                (n_micro, micro, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        b_spec = micro_batch_specs(batch_shape, mesh)
+        opt_cfg = AdamWConfig()
+        step = make_accum_train_step(cfg, opt_cfg,
+                                     grad_specs=opt_moment_specs(p_shape, mesh),
+                                     n_micro=n_micro)
+        args = (p_shape, opt_shape, batch_shape)
+        shardings = (p_spec, o_spec, b_spec)
+        out_spec = (p_spec, o_spec, None)
+    elif shape.kind == "prefill":
+        s_text = shape.seq_len - (cfg.frontend_len if cfg.frontend != "none" else 0)
+        batch_shape = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, s_text), jnp.int32)}
+        if cfg.frontend != "none":
+            batch_shape["frontend"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.frontend_len, cfg.d_model),
+                jnp.bfloat16)
+        b_spec = batch_specs(batch_shape, mesh)
+        step = make_prefill_step(cfg, max_len=shape.seq_len)
+        st_shape = _abstract(
+            lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+        st_spec = decode_state_specs(st_shape, mesh)
+        args = (p_shape, batch_shape)
+        shardings = (p_spec, b_spec)
+        out_spec = (None, st_spec)
+    else:  # decode
+        st_shape = _abstract(
+            lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+        st_spec = decode_state_specs(st_shape, mesh)
+        tok_shape = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        t_spec = batch_specs(tok_shape, mesh)
+        step = make_decode_step(cfg)
+        args = (p_shape, st_shape, tok_shape)
+        shardings = (p_spec, st_spec, t_spec)
+        out_spec = (None, st_spec)
+    return cfg, step, args, shardings, out_spec
+
+
+def micro_batch_specs(batch_shape, mesh):
+    """[n_micro, B_micro, ...]: micro axis replicated, batch over DP."""
+    from ..parallel.sharding import dp_axes, sanitize
+    dp = dp_axes(mesh)
+
+    def spec_for(leaf):
+        shape = tuple(leaf.shape)
+        return sanitize((None, dp) + (None,) * (len(shape) - 2), shape, mesh)
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def opt_moment_specs_tree(p_shape, opt_shape, mesh):
+    """Specs for the optimizer pytree {m, v, step, master?}."""
+    from jax.sharding import PartitionSpec as P
+    moments = opt_moment_specs(p_shape, mesh)
+    spec = {"m": moments, "v": moments, "step": P()}
+    if "master" in opt_shape:
+        spec["master"] = moments
+    return spec
+
+
+def make_accum_train_step(cfg, opt_cfg, grad_specs=None, n_micro=8):
+    """Grad-accumulation train step: scan over the microbatches, then
+    one optimizer update — bounds logits/activation memory while keeping
+    the full global batch semantics in a single jitted step.
+
+    ``grad_specs`` (ZeRO-2): pin the fp32 accumulator to the optimizer-
+    moment sharding (params sharding + "data" on a free dim) — GSPMD then
+    emits a reduce-scatter per microbatch instead of holding a replicated
+    fp32 gradient buffer (4 bytes/param/device -> 4/DP bytes)."""
+    from ..models import loss_and_metrics
+    from ..optim import apply_updates
+
+    def pin(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_specs)
+
+    def step(params, opt_state, batch):
+        def micro_grad(carry, micro):
+            gsum, lsum = carry
+
+            def loss_fn(p):
+                return loss_and_metrics(p, cfg, micro, remat=True)
+
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            gsum = pin(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads))
+            return (gsum, lsum + metrics["loss"]), None
+
+        g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+        (gsum, lsum), _ = jax.lax.scan(micro_grad, (g0, 0.0), batch)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        new_p, new_o, info = apply_updates(params, grads, opt_state, opt_cfg)
+        return new_p, new_o, {"loss": lsum / n_micro, **info}
+
+    return step
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             skip_existing: bool = False) -> dict:
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cfg_full = ARCHS[arch]
+    ok, reason = shape_applicable(cfg_full, SHAPES[shape_name])
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        record.update(status="SKIPPED", reason=reason)
+        _write(path, record)
+        print(f"[dryrun] {tag}: SKIPPED ({reason.split(':')[0]})")
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    try:
+        from ..parallel import sharding_ctx
+        cfg, step, args, shardings, out_spec = build_cell(
+            arch, shape_name, mesh)
+        kind = SHAPES[shape_name].kind
+        # donate the big state: train donates params+opt, decode the cache
+        donate = (0, 1) if kind == "train" else ((1,) if kind == "decode" else ())
+        with mesh, sharding_ctx(mesh):
+            jitted = jax.jit(step,
+                             in_shardings=to_named(shardings, mesh),
+                             out_shardings=None,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from .hlo_analysis import analyze_hlo
+        hla = analyze_hlo(hlo)   # trip-count-weighted (cost_analysis counts
+        #                          while bodies once — useless for scans)
+        coll = {"bytes": hla["collective_bytes"],
+                "counts": hla["collective_counts"]}
+
+        flops_total = float(hla["flops"])          # per-device
+        bytes_total = float(hla["bytes"])          # per-device
+        compute_s = flops_total / PEAK_FLOPS
+        memory_s = bytes_total / HBM_BW
+        coll_s = coll["bytes"].get("total", 0.0) / ICI_BW
+
+        shape = SHAPES[shape_name]
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        model_flops = 6 * cfg_full.n_active_params * tokens if shape.kind == "train" \
+            else 2 * cfg_full.n_active_params * tokens
+        mem_record = {}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            mem_record[attr] = getattr(mem, attr, None)
+        args_b = mem_record.get("argument_size_in_bytes") or 0
+        temp_b = mem_record.get("temp_size_in_bytes") or 0
+        fits = (args_b + temp_b) <= HBM_PER_CHIP
+
+        record.update(
+            status="OK",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=mem_record,
+            fits_hbm=bool(fits),
+            per_device_bytes=int(args_b + temp_b),
+            cost_analysis_raw={k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float))},
+            collectives=coll,
+            roofline={
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": coll_s,
+                "dominant": max(
+                    (("compute", compute_s), ("memory", memory_s),
+                     ("collective", coll_s)), key=lambda kv: kv[1])[0],
+                "model_flops": float(model_flops),
+                "hlo_flops_per_dev": flops_total,
+                "useful_flops_ratio": float(model_flops / n_chips
+                                            / max(flops_total, 1.0)),
+            },
+        )
+        print(f"[dryrun] {tag}: OK chips={n_chips} "
+              f"per-dev={int((args_b + temp_b) / 2 ** 20)}MiB fits={fits} "
+              f"compute={compute_s * 1e3:.1f}ms mem={memory_s * 1e3:.1f}ms "
+              f"coll={coll_s * 1e3:.1f}ms dom={record['roofline']['dominant']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    _write(path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("pass --arch and --shape, or --all")
+
+    results = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                results.append(run_cell(arch, shape, mesh_kind, args.out,
+                                        args.skip_existing))
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIPPED" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} skipped, {n_fail} FAILED "
+          f"of {len(results)} cells")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Unified model zoo (pure-pytree functional JAX)."""
+from .transformer import (decode_step, forward, init_decode_state,
+                          init_params, layer_plan, loss_and_metrics)
+
+__all__ = ["decode_step", "forward", "init_decode_state", "init_params",
+           "layer_plan", "loss_and_metrics"]

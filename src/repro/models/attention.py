@@ -1,0 +1,108 @@
+"""GQA attention block: train/prefill (flash kernel) and decode (cached).
+
+Cache layout [B, T, Hkv, D] keeps the sequence dim second so long-context
+decode can shard it over the *model* axis (see parallel/sharding.py) — the
+softmax over a sharded T lowers to cheap per-(b,h) all-reduces instead of
+an all-gather of the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..parallel.sharding import constrain
+from .layers import apply_rope, init_linear
+
+
+def init_attention(key: jax.Array, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": init_linear(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": init_linear(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": init_linear(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params: dict, x: jax.Array, n_heads: int, n_kv_heads: int,
+                 head_dim: int):
+    b = x.shape[0]
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, -1, n_heads, head_dim)
+    k = k.reshape(b, -1, n_kv_heads, head_dim)
+    v = v.reshape(b, -1, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def attention_block(params: dict, x: jax.Array, *, n_heads: int,
+                    n_kv_heads: int, head_dim: int, rope_theta: float,
+                    positions: jax.Array | None = None,
+                    return_kv: bool = False, force_chunked: bool = False):
+    """Full-sequence causal attention (training / prefill).  With
+    ``return_kv`` also returns the rotated K/V [B,S,Hkv,D] for cache fill."""
+    bsz, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    # kernels expect [B, H, S, D]
+    out = ops.flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                              v.swapaxes(1, 2), causal=True,
+                              force_chunked=force_chunked)
+    out = out.swapaxes(1, 2).reshape(bsz, s, n_heads * head_dim)
+    out = out @ params["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(params: dict, x: jax.Array, cache: dict, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: [B, 1, d]; cache: {"k","v": [B,T,Hkv,D],
+    "length": [B]} -> (out [B,1,d], updated cache)."""
+    bsz = x.shape[0]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv_heads, head_dim)
+    pos = cache["length"][:, None]                       # [B,1]
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+
+    # scatter the new K/V row at position `length` per batch element.
+    # The cache is pinned sequence-sharded over the model axis (SP): the
+    # softmax over T then lowers to per-(b,h) all-reduces instead of a
+    # full-cache reshard/gather.
+    _kv_spec = ("dp", "model", None, None)
+    t = cache["k"].shape[1]
+    onehot = jax.nn.one_hot(cache["length"], t, dtype=k.dtype)   # [B,T]
+    k_cache = constrain(cache["k"] + onehot[:, :, None, None] * k, _kv_spec)
+    v_cache = constrain(cache["v"] + onehot[:, :, None, None] * v, _kv_spec)
+    lengths = cache["length"] + 1
+
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, lengths)
+    out = constrain(out, ("dp", None, None))
+    out = out.reshape(bsz, 1, n_heads * head_dim)
+    new_cache = {"k": k_cache, "v": v_cache, "length": lengths}
+    return out @ params["wo"], new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.float32) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }

@@ -1,0 +1,95 @@
+"""Shared building blocks: norms, rotary embeddings, FFNs, initializers.
+
+All models are pure-pytree functional JAX: params are nested dicts of
+arrays, every layer is ``fn(params, x, cfg) -> y``.  Leaf *names* carry the
+sharding semantics (see parallel/sharding.py): e.g. any leaf named ``wq``
+is column-sharded over the model axis, ``wo`` row-sharded, etc.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# -- rotary ------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # [D/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- FFN ---------------------------------------------------------------------
+
+def ffn(params: dict, x: jax.Array, act: str) -> jax.Array:
+    """Gated (SwiGLU/GeGLU) or plain (gelu / squared-ReLU) FFN by leaf set."""
+    if "w_gate" in params:
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        if act == "swiglu":
+            h = jax.nn.silu(g) * u
+        elif act == "geglu":
+            h = jax.nn.gelu(g) * u
+        else:
+            raise ValueError(f"gated ffn with act={act!r}")
+        return h @ params["w_down"]
+    h = x @ params["w_up"]
+    if act == "sq_relu":                  # Primer / Nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu":
+        h = jax.nn.relu(h)
+    else:
+        raise ValueError(f"ungated ffn with act={act!r}")
+    return h @ params["w_down"]
+
+
+def init_ffn(key: jax.Array, d_model: int, d_ff: int, act: str,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (d_model, d_ff)) * scale_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * scale_out).astype(dtype),
+        }
+    return {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+
+
+def init_linear(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32,
+                scale: float | None = None) -> jax.Array:
+    scale = shape[0] ** -0.5 if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)

@@ -1,0 +1,120 @@
+"""Mamba-2 block (SSD) for the hybrid/ssm architectures.
+
+Train/prefill path uses the chunked SSD kernel (kernels/ssd_scan.py);
+decode keeps a per-layer recurrent state {ssm: [B,H,D,N], conv: [B,W-1,Di]}
+— constant memory in sequence length, which is why the hybrid/ssm archs
+are the ones that run the long_500k shape.
+
+Simplifications vs the full Mamba-2 (documented): scalar per-head decay
+a_t = -softplus(dt) (no learned A matrix beyond the scalar), B/C shared
+across heads (as in Mamba-2's multi-value attention analogy), short causal
+conv of width 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import init_linear, rms_norm
+
+CONV_W = 4
+
+
+def init_mamba2(key: jax.Array, d_model: int, n_heads: int, head_dim: int,
+                ssm_state: int, dtype=jnp.float32) -> dict:
+    """Projections are separate leaves (not one fused w_in) so tensor
+    parallelism can column-shard x/z/dt over the model axis while B/C stay
+    replicated (they are shared across heads)."""
+    d_inner = n_heads * head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": init_linear(ks[0], (d_model, d_inner), dtype),
+        "wz": init_linear(ks[1], (d_model, d_inner), dtype),
+        "wb": init_linear(ks[2], (d_model, ssm_state), dtype),
+        "wc": init_linear(ks[3], (d_model, ssm_state), dtype),
+        "wdt": init_linear(ks[4], (d_model, n_heads), dtype),
+        "conv_w": (jax.random.normal(ks[5], (CONV_W, d_inner)) * 0.2).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "a_log": jnp.zeros((n_heads,), dtype),          # A = -exp(a_log)
+        "norm_z": jnp.ones((d_inner,), dtype),
+        "w_out": init_linear(ks[6], (d_inner, d_model), dtype),
+    }
+
+
+def _split_proj(params, x, n_heads, head_dim, ssm_state):
+    xs = x @ params["wx"]
+    z = x @ params["wz"]
+    b = x @ params["wb"]
+    c = x @ params["wc"]
+    dt = x @ params["wdt"]
+    return xs, z, b, c, dt
+
+
+def _decay(params, dt):
+    """a_t = dt * A with dt = softplus(dt_raw + bias), A = -exp(a_log)."""
+    dt_pos = jax.nn.softplus(dt + params["dt_bias"])
+    return -dt_pos * jnp.exp(params["a_log"])            # [.., H], <= 0
+
+
+def mamba2_block(params: dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                 ssm_state: int, return_state: bool = False):
+    """Full-sequence path.  x: [B, S, d] -> [B, S, d].  With
+    ``return_state`` also returns the decode state after the last token
+    (closed-form final SSM state + conv tail) for prefill."""
+    bsz, s, _ = x.shape
+    d_inner = n_heads * head_dim
+    xs_raw, z, b, c, dt = _split_proj(params, x, n_heads, head_dim, ssm_state)
+
+    # causal depthwise conv width 4 along S
+    pad = jnp.pad(xs_raw, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s, :] * params["conv_w"][i] for i in range(CONV_W))
+    xs = jax.nn.silu(conv)
+
+    a = _decay(params, dt)                               # [B,S,H]
+    xh = xs.reshape(bsz, s, n_heads, head_dim)
+    y = ops.ssd_scan(xh, a, b, c)                        # [B,S,H,D]
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_z"])   # gated output norm
+    out = y @ params["w_out"]
+    if not return_state:
+        return out
+    # closed-form final state: h_T = sum_u exp(Acum_T - Acum_u) x_u (x) B_u
+    acum = jnp.cumsum(a.astype(jnp.float32), axis=1)     # [B,S,H]
+    w = jnp.exp(acum[:, -1:, :] - acum)                  # [B,S,H]
+    h_final = jnp.einsum("bshd,bsh,bsn->bhdn",
+                         xh.astype(jnp.float32), w, b.astype(jnp.float32))
+    conv_tail = pad[:, s:s + CONV_W - 1, :]              # last W-1 raw inputs
+    state = {"ssm": h_final.astype(x.dtype), "conv": conv_tail}
+    return out, state
+
+
+def mamba2_decode(params: dict, x: jax.Array, state: dict, *, n_heads: int,
+                  head_dim: int, ssm_state: int) -> tuple[jax.Array, dict]:
+    """One-token step.  x: [B,1,d]; state: {"ssm":[B,H,D,N], "conv":[B,W-1,Di]}."""
+    bsz = x.shape[0]
+    d_inner = n_heads * head_dim
+    xs, z, b, c, dt = _split_proj(params, x[:, 0], n_heads, head_dim, ssm_state)
+
+    # rolling conv buffer
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)  # [B,W,Di]
+    conv = jnp.einsum("bwd,wd->bd", window, params["conv_w"])
+    new_conv = window[:, 1:, :]
+    xs = jax.nn.silu(conv)
+
+    a = _decay(params, dt)                               # [B,H]
+    xh = xs.reshape(bsz, n_heads, head_dim)
+    h = state["ssm"]                                      # [B,H,D,N]
+    h = jnp.exp(a)[..., None, None] * h + \
+        xh[..., None] * b[:, None, None, :]
+    y = jnp.einsum("bhdn,bn->bhd", h, c).reshape(bsz, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_z"])
+    return (y @ params["w_out"])[:, None, :], {"ssm": h, "conv": new_conv}
+
+
+def init_mamba2_state(batch: int, n_heads: int, head_dim: int, ssm_state: int,
+                      dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, n_heads, head_dim, ssm_state), dtype),
+        "conv": jnp.zeros((batch, CONV_W - 1, n_heads * head_dim), dtype),
+    }

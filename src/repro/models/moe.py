@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, GShard-style
+dispatch/combine einsums, optional DeepSeek-style shared expert.
+
+Expert weights are stacked on a leading E axis — that axis is sharded over
+the ``model`` mesh axis (expert parallelism); the dispatch einsum then
+lowers to an all-to-all over the EP groups.  Capacity-based routing keeps
+every tensor shape static (required for pjit) and bounds the all-to-all
+volume; dropped tokens fall through the residual (standard practice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear
+
+
+def init_moe(key: jax.Array, d_model: int, n_experts: int, expert_ff: int,
+             shared_ff: int = 0, act: str = "swiglu", dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    scale_in = d_model ** -0.5
+    scale_out = expert_ff ** -0.5
+    p = {
+        "router": init_linear(ks[0], (d_model, n_experts), dtype,
+                              scale=d_model ** -0.5),
+        # stacked experts: [E, d, ff] / [E, ff, d]
+        "experts_gate": (jax.random.normal(ks[1], (n_experts, d_model, expert_ff))
+                         * scale_in).astype(dtype),
+        "experts_up": (jax.random.normal(ks[2], (n_experts, d_model, expert_ff))
+                       * scale_in).astype(dtype),
+        "experts_down": (jax.random.normal(ks[3], (n_experts, expert_ff, d_model))
+                         * scale_out).astype(dtype),
+    }
+    if shared_ff > 0:
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": init_linear(kg, (d_model, shared_ff), dtype),
+            "w_up": init_linear(ku, (d_model, shared_ff), dtype),
+            "w_down": init_linear(kd, (shared_ff, d_model), dtype),
+        }
+    return p
+
+
+def moe_block(params: dict, x: jax.Array, *, top_k: int,
+              capacity_factor: float = 1.25,
+              group_size: int = 2048) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss).
+
+    GShard grouped dispatch: tokens are split into groups of ~2048 with
+    per-group capacity C = factor*S_g*K/E, so the dispatch/combine one-hots
+    are [G, S_g, E, C] — bounded per-group memory regardless of the global
+    token count (the ungrouped [N, E, C] formulation is O(N^2) and melts at
+    1M tokens).  G shards over DP, E over the model axis (EP); the dispatch
+    einsum is the EP all-to-all.
+
+    Returns the Switch-style load-balance aux loss E * sum_e f_e * p_e.
+    """
+    bsz, s, d = x.shape
+    n_experts = params["router"].shape[-1]
+    n_tokens = bsz * s
+    sg = min(group_size, n_tokens)
+    if n_tokens % sg:
+        sg = n_tokens           # degenerate small case: one group
+    n_groups = n_tokens // sg
+    xg = x.reshape(n_groups, sg, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [G,S,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # [G,S,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss (over all tokens)
+    me = probs.mean(axis=(0, 1))                               # [E]
+    oh_all = jax.nn.one_hot(expert_idx, n_experts)             # [G,S,K,E]
+    ce = oh_all.sum(2).mean(axis=(0, 1)) / top_k
+    aux = n_experts * jnp.sum(me * ce)
+
+    capacity = max(1, int(capacity_factor * sg * top_k / n_experts))
+    # position of each (s,k) within its expert's per-group queue:
+    # flatten (s,k) in order, cumulative count per expert
+    oh_flat = oh_all.reshape(n_groups, sg * top_k, n_experts)
+    pos_flat = jnp.cumsum(oh_flat, axis=1) - 1                 # [G,S*K,E]
+    pos = jnp.einsum("gne,gne->gn", pos_flat,
+                     oh_flat).reshape(n_groups, sg, top_k)     # [G,S,K]
+    pos = pos.astype(jnp.int32)
+    keep = pos < capacity
+
+    gate_kept = jnp.where(keep, gate_vals, 0.0)
+    oh_e = oh_all.astype(x.dtype)                              # [G,S,K,E]
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                          dtype=x.dtype)[..., :capacity]       # [G,S,K,C]
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)       # [G,S,E,C]
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)     # [G,E,C,d]
+
+    # expert FFN (SwiGLU), batched over E — E axis is EP-sharded
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["experts_gate"])
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["experts_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["experts_down"])
+
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e, oh_c,
+                         gate_kept.astype(x.dtype))            # [G,S,E,C]
+    y = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+    if "shared" in params:
+        sp = params["shared"]
+        sh = jax.nn.silu(xg @ sp["w_gate"]) * (xg @ sp["w_up"])
+        y = y + sh @ sp["w_down"]
+    return y.reshape(bsz, s, d), aux.astype(jnp.float32)

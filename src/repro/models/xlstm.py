@@ -1,0 +1,198 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential).
+
+mLSTM is formulated in its chunk-parallel form — mathematically a gated
+linear recurrence over a matrix state C: [H, D, N], which we evaluate with
+the same SSD machinery as Mamba-2 for the q/k/v analogy:
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ,   h_t = C_t q_t / max(|n_t q_t|, 1)
+The normalizer n_t q_t is computed exactly in the parallel path as a second
+D=1 SSD scan over the input gate, so training, prefill and decode agree to
+numerical precision.
+
+sLSTM keeps per-head scalar state with exponential gating and runs as a
+lax.scan (it is inherently sequential — the paper's reason to mix block
+types 7:1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .layers import init_linear, rms_norm
+
+
+# -- mLSTM -------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> dict:
+    d_inner = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": init_linear(ks[0], (d_model, d_inner), dtype),
+        "w_gate_proj": init_linear(ks[6], (d_model, d_inner), dtype),
+        "wq": init_linear(ks[1], (d_inner, d_inner), dtype),
+        "wk": init_linear(ks[2], (d_inner, d_inner), dtype),
+        "wv": init_linear(ks[3], (d_inner, d_inner), dtype),
+        "w_if": init_linear(ks[4], (d_inner, 2 * n_heads), dtype),   # i/f gates
+        "norm_h": jnp.ones((d_inner,), dtype),
+        "w_down": init_linear(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def mlstm_block(params: dict, x: jax.Array, *, n_heads: int,
+                return_state: bool = False):
+    """Parallel (training) path via the SSD kernel: per-head scalar forget
+    gate = decay a_t, input gate folds into v.  With ``return_state`` also
+    returns the exact (C, n) decode state after the last token."""
+    bsz, s, _ = x.shape
+    xi = x @ params["w_x"]
+    gate = x @ params["w_gate_proj"]
+    d_inner = xi.shape[-1]
+    head_dim = d_inner // n_heads
+
+    q = (xi @ params["wq"]).reshape(bsz, s, n_heads, head_dim)
+    k = (xi @ params["wk"]).reshape(bsz, s, n_heads, head_dim) * head_dim ** -0.5
+    v = (xi @ params["wv"]).reshape(bsz, s, n_heads, head_dim)
+    gates = xi @ params["w_if"]
+    i_gate = jax.nn.sigmoid(gates[..., :n_heads])          # [B,S,H]
+    f_gate = jax.nn.sigmoid(gates[..., n_heads:])          # [B,S,H]
+
+    # gated linear recurrence == SSD with a = log f, input i*v, B=k, C=q.
+    # ssd_scan shares B/C across heads; we run it per head via vmap over H
+    # by folding H into the batch dim (B*H, S, 1 head).
+    a = jnp.log(f_gate + 1e-6)
+    xv = (v * i_gate[..., None])                           # [B,S,H,D]
+    # fold heads into batch: x' [B*H, S, 1, D]; b/c per-head -> [B*H, S, N]
+    def fold(t):  # [B,S,H,...] -> [B*H,S,...]
+        t = jnp.moveaxis(t, 2, 1)                          # [B,H,S,...]
+        return t.reshape((bsz * n_heads,) + t.shape[2:])
+    y = ops.ssd_scan(fold(xv)[:, :, None, :], fold(a)[..., None],
+                     fold(k), fold(q))                     # [B*H,S,1,D]
+    y = y.reshape(bsz, n_heads, s, head_dim).swapaxes(1, 2)  # [B,S,H,D]
+    # normalizer n_t·q_t as a D=1 SSD scan over the input gate
+    den = ops.ssd_scan(fold(i_gate[..., None])[:, :, None, :],
+                       fold(a)[..., None], fold(k), fold(q))  # [B*H,S,1,1]
+    den = den.reshape(bsz, n_heads, s, 1).swapaxes(1, 2)      # [B,S,H,1]
+    y = y / jnp.maximum(jnp.abs(den), 1.0)
+    h = y.reshape(bsz, s, d_inner)
+    h = rms_norm(h, params["norm_h"]) * jax.nn.silu(gate)
+    out = h @ params["w_down"]
+    if not return_state:
+        return out
+    # exact final state: C_T = sum_u exp(acum_T-acum_u) (i_u v_u)(x)k_u
+    acum = jnp.cumsum(a.astype(jnp.float32), axis=1)       # [B,S,H]
+    w = jnp.exp(acum[:, -1:, :] - acum)                    # [B,S,H]
+    c_fin = jnp.einsum("bshd,bsh,bshn->bhdn", xv.astype(jnp.float32), w,
+                       k.astype(jnp.float32))
+    n_fin = jnp.einsum("bsh,bsh,bshn->bhn", i_gate.astype(jnp.float32), w,
+                       k.astype(jnp.float32))
+    return out, {"C": c_fin.astype(x.dtype), "n": n_fin.astype(x.dtype)}
+
+
+def mlstm_decode(params: dict, x: jax.Array, state: dict, *,
+                 n_heads: int) -> tuple[jax.Array, dict]:
+    """Exact recurrence with normalizer.  state: {"C":[B,H,D,N], "n":[B,H,N]}."""
+    bsz = x.shape[0]
+    xi = x[:, 0] @ params["w_x"]
+    gate = x[:, 0] @ params["w_gate_proj"]
+    d_inner = xi.shape[-1]
+    head_dim = d_inner // n_heads
+
+    q = (xi @ params["wq"]).reshape(bsz, n_heads, head_dim)
+    k = (xi @ params["wk"]).reshape(bsz, n_heads, head_dim) * head_dim ** -0.5
+    v = (xi @ params["wv"]).reshape(bsz, n_heads, head_dim)
+    gates = xi @ params["w_if"]
+    i_g = jax.nn.sigmoid(gates[..., :n_heads])[..., None]   # [B,H,1]
+    f_g = jax.nn.sigmoid(gates[..., n_heads:])[..., None]
+
+    c_st = f_g[..., None] * state["C"] + i_g[..., None] * v[..., None] * k[:, :, None, :]
+    n_st = f_g * state["n"] + i_g * k
+    num = jnp.einsum("bhdn,bhn->bhd", c_st, q)
+    den = jnp.abs(jnp.einsum("bhn,bhn->bh", n_st, q))[..., None]
+    h = num / jnp.maximum(den, 1.0)
+    h = h.reshape(bsz, d_inner)
+    h = rms_norm(h, params["norm_h"]) * jax.nn.silu(gate)
+    return (h @ params["w_down"])[:, None, :], {"C": c_st, "n": n_st}
+
+
+def init_mlstm_state(batch: int, n_heads: int, head_dim: int,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), dtype),
+        "n": jnp.zeros((batch, n_heads, head_dim), dtype),
+    }
+
+
+# -- sLSTM -------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, d_model: int, n_heads: int, proj_factor: float = 4 / 3,
+               dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d_up = int(d_model * proj_factor)
+    return {
+        # 4 gates (i, f, z, o) from x — separate leaves for clean TP sharding
+        "w_i": init_linear(ks[0], (d_model, d_model), dtype),
+        "w_f": init_linear(ks[1], (d_model, d_model), dtype),
+        "w_z": init_linear(ks[2], (d_model, d_model), dtype),
+        "w_o": init_linear(ks[3], (d_model, d_model), dtype),
+        # recurrent per-head block-diagonal approximated by per-dim weight
+        "r_gates": (jax.random.normal(ks[4], (4, d_model)) * 0.1).astype(dtype),
+        "norm_h": jnp.ones((d_model,), dtype),
+        "w_up_a": init_linear(ks[5], (d_model, d_up), dtype),
+        "w_up_b": init_linear(ks[6], (d_model, d_up), dtype),
+        "w_down": init_linear(ks[7], (d_up, d_model), dtype),
+    }
+
+
+def _slstm_cell(params, carry, xt):
+    """One sLSTM step with exponential gating + stabilizer state m."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    pre_i = xt @ params["w_i"] + params["r_gates"][0] * h_prev
+    pre_f = xt @ params["w_f"] + params["r_gates"][1] * h_prev
+    pre_z = xt @ params["w_z"] + params["r_gates"][2] * h_prev
+    pre_o = xt @ params["w_o"] + params["r_gates"][3] * h_prev
+
+    m_new = jnp.maximum(pre_f + m_prev, pre_i)             # stabilizer
+    i_g = jnp.exp(pre_i - m_new)
+    f_g = jnp.exp(pre_f + m_prev - m_new)
+    z = jnp.tanh(pre_z)
+    o = jax.nn.sigmoid(pre_o)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(params: dict, x: jax.Array, *, n_heads: int,
+                return_state: bool = False):
+    bsz, s, d = x.shape
+
+    def step(carry, xt):
+        new = _slstm_cell(params, carry, xt)
+        return new, new[0]
+
+    init = tuple(jnp.zeros((bsz, d), x.dtype) for _ in range(4))
+    final, hs = jax.lax.scan(step, init, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                  # [B,S,d]
+    h = rms_norm(h, params["norm_h"])
+    h = jax.nn.gelu(h @ params["w_up_a"]) * (h @ params["w_up_b"])
+    out = h @ params["w_down"]
+    if not return_state:
+        return out
+    return out, {"h": final[0], "c": final[1], "n": final[2], "m": final[3]}
+
+
+def slstm_decode(params: dict, x: jax.Array, state: dict, *,
+                 n_heads: int) -> tuple[jax.Array, dict]:
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    new = _slstm_cell(params, carry, x[:, 0])
+    h = rms_norm(new[0], params["norm_h"])
+    h = jax.nn.gelu(h @ params["w_up_a"]) * (h @ params["w_up_b"])
+    out = (h @ params["w_down"])[:, None, :]
+    return out, {"h": new[0], "c": new[1], "n": new[2], "m": new[3]}
+
+
+def init_slstm_state(batch: int, d_model: int, dtype=jnp.float32) -> dict:
+    z = lambda: jnp.zeros((batch, d_model), dtype)
+    return {"h": z(), "c": z(), "n": z(), "m": z()}

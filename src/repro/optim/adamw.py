@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay, warmup+cosine schedule, global-norm
+clipping, and mixed-precision support (bf16 params keep fp32 moments and an
+fp32 master copy).
+
+Implemented by hand (no optax in the container) as pure pytree functions —
+the moments' sharding comes from parallel.sharding.opt_moment_specs
+(ZeRO-1 over the data axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: PyTree) -> dict:
+    """Moments in fp32; fp32 master copy only when params are low-precision."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params: PyTree, grads: PyTree, state: dict,
+                  cfg: AdamWConfig) -> tuple[PyTree, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, info)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                         state["v"], grads)
+
+    masters = state.get("master", params)
+
+    def upd(p32, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        return p32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                           + cfg.weight_decay * p32)
+
+    new_master = jax.tree.map(
+        lambda p, m, v: upd(p.astype(jnp.float32), m, v), masters, new_m, new_v)
+    new_params = jax.tree.map(lambda p, nm: nm.astype(p.dtype),
+                              params, new_master)
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    info = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, info

@@ -1,0 +1,7 @@
+from .sharding import (batch_specs, constrain, decode_state_specs, dp_axes,
+                       opt_moment_specs, param_specs, sanitize, sharding_ctx,
+                       to_named)
+
+__all__ = ["batch_specs", "constrain", "decode_state_specs", "dp_axes",
+           "opt_moment_specs", "param_specs", "sanitize", "sharding_ctx",
+           "to_named"]

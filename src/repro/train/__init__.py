@@ -1,0 +1,5 @@
+from .train_step import (make_decode_step, make_forward_step, make_grad_step,
+                         make_prefill_step, make_train_step)
+
+__all__ = ["make_decode_step", "make_forward_step", "make_grad_step",
+           "make_prefill_step", "make_train_step"]

@@ -1,0 +1,82 @@
+"""The jit-able train/prefill/decode step functions.
+
+These are what the dry-run lowers and what the trainer executes; all
+sharding decisions live in parallel/sharding.py, all math in models/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import decode_step as _decode_step
+from ..models import loss_and_metrics
+from ..models.transformer import forward as _forward
+from ..models.transformer import prefill as _prefill
+from ..optim import AdamWConfig, apply_updates
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return loss_and_metrics(p, cfg, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, info = apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+        return new_params, new_opt, {**metrics, **info, "total_loss": loss}
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig, *, remat: bool = True):
+    """Gradient-only step for grad-accum / compression paths."""
+
+    def grad_step(params, batch):
+        def loss_fn(p):
+            return loss_and_metrics(p, cfg, batch, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return grads, {**metrics, "total_loss": loss}
+
+    return grad_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """(params, batch) -> (last-token logits, decode state)."""
+
+    def prefill_step(params, batch):
+        return _prefill(params, cfg, batch["tokens"], max_len,
+                        batch.get("frontend"))
+
+    return prefill_step
+
+
+def make_forward_step(cfg: ModelConfig):
+    """Inference forward (logits only) — the compute body of prefill."""
+
+    def forward_step(params, batch):
+        logits, _ = _forward(params, cfg, batch["tokens"],
+                             batch.get("frontend"))
+        return logits
+
+    return forward_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, state, tokens[B]) -> (logits [B,V], state)."""
+
+    def serve_step(params, state, tokens):
+        return _decode_step(params, cfg, state, tokens)
+
+    return serve_step

@@ -1,0 +1,45 @@
+"""DAG builder structure tests."""
+from repro.core import (Priority, heat_dag, kmeans_dag, matmul_type,
+                        synthetic_dag)
+
+
+def test_synthetic_structure():
+    dag = synthetic_dag(matmul_type(), parallelism=4, total_tasks=40)
+    tasks = dag.all_tasks()
+    assert len(tasks) == 40
+    highs = [t for t in tasks if t.priority == Priority.HIGH]
+    assert len(highs) == 10                        # one per layer
+    # only the critical task releases the next layer
+    for h in highs:
+        assert len(h.children) in (0, 4)
+    lows = [t for t in tasks if t.priority == Priority.LOW]
+    assert all(not t.children for t in lows)
+    # DAG parallelism = total / longest path = 4
+    assert len(dag.roots) == 4
+
+
+def test_kmeans_dynamic_growth():
+    seen = []
+    dag = kmeans_dag(n_points=1000, dims=4, k=2, n_chunks=4, iterations=3,
+                     on_iteration=seen.append)
+    # static portion = first iteration only (maps + reduce)
+    assert len(dag.all_tasks()) == 5
+    # simulate commits to trigger growth
+    reduce_t = dag.roots[0].children[0]
+    new = reduce_t.on_commit(reduce_t)
+    assert len(new) == 4                           # next iteration's maps
+    assert seen == [0]
+    assert dag.expected_total == 3 * 5
+
+
+def test_heat_wiring():
+    dag = heat_dag(nodes=3, tiles_per_node=2, iterations=2)
+    tasks = dag.all_tasks()
+    highs = [t for t in tasks if t.priority == Priority.HIGH]
+    # per iteration: node0 1 exch, node1 2, node2 1 = 4 HIGH
+    assert len(highs) == 2 * 4
+    # exchange tasks gate the next iteration's compute
+    it0_ex = [t for t in highs if not any(c.priority == Priority.HIGH
+                                          for c in t.children)]
+    assert all(len(t.children) >= 2 for t in it0_ex
+               if t.children)                      # releases >= own node tiles

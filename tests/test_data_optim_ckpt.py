@@ -1,0 +1,183 @@
+"""Data pipeline, optimizer, compression and checkpoint substrates."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, Prefetcher, SyntheticStream
+from repro.optim import (AdamWConfig, apply_updates, compress_int8,
+                         compress_topk, global_norm, init_error_feedback,
+                         init_opt_state, schedule, wire_bytes)
+
+
+# -- data ------------------------------------------------------------------------
+
+def test_stream_deterministic_and_skippable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, seed=7)
+    s1 = SyntheticStream(cfg)
+    batches = [next(s1) for _ in range(5)]
+    s2 = SyntheticStream(cfg)
+    s2.skip_to(3)
+    np.testing.assert_array_equal(next(s2)["tokens"], batches[3]["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    b = SyntheticStream(cfg).batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+
+
+def test_host_sharding_disjoint():
+    kw = dict(vocab=100, seq_len=8, global_batch=8, seed=3, num_hosts=2)
+    b0 = SyntheticStream(DataConfig(host_index=0, **kw)).batch_at(0)
+    b1 = SyntheticStream(DataConfig(host_index=1, **kw)).batch_at(0)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_zipf_statistics():
+    cfg = DataConfig(vocab=1000, seq_len=256, global_batch=8)
+    toks = SyntheticStream(cfg).batch_at(0)["tokens"].ravel()
+    # power law: token 0 much more frequent than median token
+    assert (toks == 0).mean() > 20 * (toks == 500).mean()
+
+
+def test_prefetcher_preserves_order():
+    cfg = DataConfig(vocab=100, seq_len=8, global_batch=2)
+    direct = [SyntheticStream(cfg).batch_at(i) for i in range(4)]
+    pf = Prefetcher(iter(direct), depth=2)
+    for want in direct:
+        np.testing.assert_array_equal(next(pf)["tokens"], want["tokens"])
+    pf.close()
+
+
+# -- optimizer ---------------------------------------------------------------------
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.3, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, info = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(schedule(cfg, jnp.array(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.array(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(schedule(cfg, jnp.array(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0, warmup_steps=0)
+    _, _, info = apply_updates(params, {"w": jnp.full(4, 100.0)}, state, cfg)
+    assert float(info["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_mixed_precision_master_copy():
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = init_opt_state(params)
+    assert "master" in state
+    assert state["master"]["w"].dtype == jnp.float32
+    cfg = AdamWConfig(lr=1e-4, warmup_steps=0)
+    new_p, new_s, _ = apply_updates(params, {"w": jnp.ones(4, jnp.bfloat16)},
+                                    state, cfg)
+    assert new_p["w"].dtype == jnp.bfloat16
+
+
+# -- compression --------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=64), st.floats(0.1, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_int8_error_feedback_invariant(n, scale):
+    """Property: decompressed + residual == original + previous residual."""
+    g = {"w": jnp.linspace(-scale, scale, n)}
+    err = init_error_feedback(g)
+    out, new_err = compress_int8(g, err)
+    np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(new_err["w"]),
+                               np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_accumulates_into_next_round():
+    g = {"w": jnp.array([0.001, 1.0])}
+    err = init_error_feedback(g)
+    total = jnp.zeros(2)
+    for _ in range(300):
+        out, err = compress_int8(g, err)
+        total = total + out["w"]
+    # long-run average must converge to the true gradient despite int8
+    np.testing.assert_allclose(total / 300, g["w"], rtol=0.05, atol=1e-4)
+
+
+def test_topk_keeps_largest():
+    g = {"w": jnp.array([0.1, -5.0, 0.2, 3.0])}
+    err = init_error_feedback(g)
+    out, new_err = compress_topk(g, err, frac=0.5)
+    np.testing.assert_allclose(out["w"], [0.0, -5.0, 0.0, 3.0])
+    np.testing.assert_allclose(new_err["w"], [0.1, 0.0, 0.2, 0.0])
+
+
+def test_wire_bytes_savings():
+    g = {"w": jnp.zeros(1000)}
+    assert wire_bytes(g, "int8") < wire_bytes(g, "none") / 3.9
+    assert wire_bytes(g, "topk", 0.05) <= wire_bytes(g, "none") / 10
+
+
+# -- checkpoint --------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "opt": {"step": jnp.array(3)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(10, tree, extra={"data": {"step": 10}})
+    restored, manifest = ck.restore(_tree())
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  tree["params"]["w"])
+    assert manifest["step"] == 10
+    assert manifest["extra"]["data"]["step"] == 10
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree())
+    assert ck.latest_step() == 4
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save_async(7, _tree())
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    bad = {"params": {"w": jnp.zeros((3, 3))}, "opt": {"step": jnp.array(0)}}
+    with pytest.raises(ValueError):
+        ck.restore(bad)
+
+
+def test_checkpoint_atomicity_tmp_never_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree())
+    # a stale .tmp dir must not be considered a checkpoint
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ck.latest_step() == 5

@@ -1,0 +1,122 @@
+"""Elastic runtime + fault tolerance: straggler detection, rescale plans,
+heartbeats, and exact checkpoint-restart resume."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.runtime import HeartbeatMonitor, PodMonitor, Supervisor
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# -- PodMonitor (the paper's PTT applied to the fleet) ---------------------------
+
+def test_straggler_detected_with_hysteresis():
+    mon = PodMonitor(n_pods=4)
+    for _ in range(5):
+        for p in range(4):
+            mon.observe(p, 1.0)
+    assert mon.plan().kind == "none"
+    # pod 2 degrades 1.6x: one bad reading must NOT trigger (1:4 weighting)
+    mon.observe(2, 1.6)
+    assert mon.plan().kind == "none"
+    for _ in range(4):
+        mon.observe(2, 1.6)
+    plan = mon.plan()
+    assert plan.kind == "rebalance"
+    # slower pod gets fewer microbatches
+    mb = mon.microbatches_per_pod(32, plan)
+    assert sum(mb) == 32
+    assert mb[2] == min(mb)
+
+
+def test_drain_and_restore():
+    mon = PodMonitor(n_pods=4)
+    for _ in range(5):
+        for p in range(4):
+            mon.observe(p, 1.0)
+    for _ in range(10):
+        mon.observe(1, 5.0)              # way past drain_ratio x median
+    plan = mon.plan()
+    assert plan.kind == "drain"
+    assert 1 not in plan.active_pods
+    # pod recovers
+    for _ in range(30):
+        mon.observe(1, 1.0)
+    plan2 = mon.plan()
+    assert plan2.kind == "restore"
+    assert 1 in plan2.active_pods
+
+
+def test_rebalance_shares_inverse_to_time():
+    mon = PodMonitor(n_pods=2)
+    for _ in range(10):
+        mon.observe(0, 1.0)
+        mon.observe(1, 2.0)
+    plan = mon.plan()
+    assert plan.kind == "rebalance"
+    s0, s1 = plan.microbatch_share
+    assert s0 == pytest.approx(2 * s1, rel=1e-6)
+
+
+# -- heartbeats --------------------------------------------------------------------
+
+def test_heartbeat_failure_and_recovery():
+    t = [0.0]
+    hb = HeartbeatMonitor([0, 1], timeout=5.0, clock=lambda: t[0])
+    t[0] = 4.0
+    hb.beat(0)
+    t[0] = 7.0
+    assert hb.failed_workers() == {1}
+    hb.beat(1)
+    assert hb.healthy() is False or hb.failed_workers() == set()
+    sup = Supervisor(heartbeat=hb)
+    t[0] = 20.0
+    assert sup.check(step=10) == "restart"
+    assert sup.events and sup.events[0].kind == "failure"
+
+
+# -- checkpoint/restart exactness ---------------------------------------------------
+
+def _mk_trainer(tmp_path, steps, seed=0, horizon=8):
+    """``steps`` is where this trainer STOPS; ``horizon`` is the schedule's
+    total_steps — it must be identical across crash/resume runs or the
+    cosine LR (and therefore the losses) would legitimately differ."""
+    cfg = ARCHS["xlstm-125m"].reduced()
+    return Trainer(cfg, AdamWConfig(lr=1e-3, warmup_steps=2,
+                                    total_steps=horizon),
+                   DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=2,
+                              seed=11),
+                   TrainerConfig(total_steps=steps, checkpoint_every=4,
+                                 log_every=100, seed=seed),
+                   str(tmp_path))
+
+
+def test_restart_resumes_exactly(tmp_path):
+    # uninterrupted run
+    t_full = _mk_trainer(tmp_path / "a", steps=8)
+    full = t_full.run()
+    # interrupted: run 8 but pretend the process died after the step-4 ckpt
+    t_crash = _mk_trainer(tmp_path / "b", steps=4)
+    t_crash.run()
+    t_resume = _mk_trainer(tmp_path / "b", steps=8)
+    assert t_resume.try_restore()
+    assert t_resume.step == 4
+    resumed = t_resume.run()
+    # losses of steps 5..8 must match the uninterrupted run exactly
+    want = [r["loss"] for r in full if r["step"] > 4]
+    got = [r["loss"] for r in resumed]
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_trainer_detects_injected_straggler(tmp_path):
+    def pod_time(step, pod):
+        return 3.0 if (pod == 1 and step > 5) else 1.0
+
+    t = _mk_trainer(tmp_path, steps=14)
+    t.pod_time_fn = pod_time
+    t.run()
+    kinds = [e.kind for e in t.supervisor.events]
+    assert "rescale" in kinds

@@ -1,0 +1,154 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.copy import copy_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.stencil import stencil_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _k(i):
+    return jax.random.fold_in(KEY, i)
+
+
+# -- matmul -------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (512, 256, 256), (128, 512, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = jax.random.normal(_k(1), (m, k), dtype)
+    b = jax.random.normal(_k(2), (k, n), dtype)
+    got = matmul_pallas(a, b, interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(got.astype(np.float32), want.astype(np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_matmul_rejects_unaligned():
+    a = jax.random.normal(_k(1), (100, 128))
+    b = jax.random.normal(_k(2), (128, 128))
+    with pytest.raises(ValueError):
+        matmul_pallas(a, b, interpret=True)
+
+
+# -- copy ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(512, 1024), (1024, 2048), (64, 128)])
+def test_copy_sweep(shape):
+    x = jax.random.normal(_k(3), shape)
+    np.testing.assert_array_equal(copy_pallas(x, interpret=True),
+                                  ref.copy_ref(x))
+
+
+# -- stencil -------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,w,bh,bw", [(1, 256, 256, 128, 128),
+                                         (2, 512, 256, 256, 128),
+                                         (1, 128, 128, 128, 128)])
+def test_stencil_sweep(b, h, w, bh, bw):
+    u = jax.random.normal(_k(4), (b, h, w))
+    got = stencil_pallas(u, bh=bh, bw=bw, interpret=True)
+    np.testing.assert_allclose(got, ref.stencil_ref(u), rtol=1e-5, atol=1e-5)
+
+
+def test_stencil_boundary_is_dirichlet():
+    u = jnp.ones((1, 128, 128))
+    out = stencil_pallas(u, interpret=True)
+    # interior average of 4 ones = 1; corners see two zero neighbors
+    assert out[0, 0, 0] == pytest.approx(0.5)
+    assert out[0, 64, 64] == pytest.approx(1.0)
+
+
+# -- flash attention -------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+@pytest.mark.parametrize("s,t", [(256, 256), (128, 512)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(hq, hkv, s, t, causal):
+    q = jax.random.normal(_k(5), (2, hq, s, 64))
+    k = jax.random.normal(_k(6), (2, hkv, t, 64))
+    v = jax.random.normal(_k(7), (2, hkv, t, 64))
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(_k(8), (1, 4, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(_k(9), (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(_k(10), (1, 2, 128, 64), jnp.bfloat16)
+    got = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_chunked_xla_attention_matches():
+    q = jax.random.normal(_k(11), (2, 4, 256, 32))
+    k = jax.random.normal(_k(12), (2, 2, 384, 32))
+    v = jax.random.normal(_k(13), (2, 2, 384, 32))
+    for causal in (True, False):
+        got = ref.attention_chunked_ref(q, k, v, causal=causal, q_chunk=64)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# -- SSD scan --------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,chunk", [(128, 64), (256, 128), (256, 64)])
+@pytest.mark.parametrize("h,d,n", [(4, 32, 16), (2, 64, 32)])
+def test_ssd_sweep(s, chunk, h, d, n):
+    x = jax.random.normal(_k(14), (2, s, h, d)) * 0.5
+    a = -jnp.abs(jax.random.normal(_k(15), (2, s, h))) * 0.1
+    b = jax.random.normal(_k(16), (2, s, n)) * 0.5
+    c = jax.random.normal(_k(17), (2, s, n)) * 0.5
+    got = ssd_scan_pallas(x, a, b, c, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, a, b, c)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+@given(st.integers(min_value=1, max_value=3).map(lambda i: 64 * i),
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from([8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_property_random_shapes(s, h, n):
+    """Property: chunked kernel == sequential oracle across random shapes."""
+    x = jax.random.normal(_k(s + h), (1, s, h, 16)) * 0.3
+    a = -jnp.abs(jax.random.normal(_k(s + h + 1), (1, s, h))) * 0.2
+    b = jax.random.normal(_k(s + h + 2), (1, s, n)) * 0.4
+    c = jax.random.normal(_k(s + h + 3), (1, s, n)) * 0.4
+    got = ssd_scan_pallas(x, a, b, c, chunk=64, interpret=True)
+    want = ref.ssd_ref(x, a, b, c)
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+# -- ops dispatch ----------------------------------------------------------------
+
+def test_ops_force_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS_INTERPRET", "1")
+    from repro.kernels import ops
+    a = jax.random.normal(_k(20), (256, 256))
+    b = jax.random.normal(_k(21), (256, 256))
+    np.testing.assert_allclose(ops.matmul(a, b), ref.matmul_ref(a, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_cpu_falls_back_to_ref():
+    from repro.kernels import ops
+    q = jax.random.normal(_k(22), (1, 2, 64, 32))
+    k = jax.random.normal(_k(23), (1, 2, 64, 32))
+    v = jax.random.normal(_k(24), (1, 2, 64, 32))
+    out = ops.flash_attention(q, k, v)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,61 @@
+"""Topology / execution-place invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ExecutionPlace, ResourcePartition, Topology, haswell,
+                        haswell_cluster, tpu_pod_slices, tx2)
+
+
+def test_tx2_matches_paper():
+    topo = tx2()
+    assert topo.n_cores == 6
+    denver = topo.partition_of(0)
+    a57 = topo.partition_of(2)
+    assert denver.widths == (1, 2)
+    assert a57.widths == (1, 2, 4)
+    assert topo.fastest_static_partition() is denver
+    assert denver.domain == a57.domain == "lpddr4"
+
+
+def test_places_aligned_and_within_partition():
+    for topo in (tx2(), haswell(), haswell_cluster(2), tpu_pod_slices()):
+        for pl in topo.places():
+            part = topo.partition_of(pl.leader)
+            assert (pl.leader - part.start) % pl.width == 0
+            assert set(pl.cores) <= set(part.cores)
+
+
+def test_local_places_contain_core():
+    topo = tx2()
+    for core in range(topo.n_cores):
+        for pl in topo.local_places(core):
+            assert core in pl.cores
+
+
+def test_place_containing():
+    part = tx2().partition_of(2)
+    assert part.place_containing(5, 4) == ExecutionPlace(2, 4)
+    assert part.place_containing(5, 2) == ExecutionPlace(4, 2)
+    with pytest.raises(ValueError):
+        part.place_containing(5, 3)
+
+
+def test_partitions_must_tile():
+    with pytest.raises(ValueError):
+        Topology([ResourcePartition("a", "x", 0, 2, (1,)),
+                  ResourcePartition("b", "x", 3, 2, (1,))])   # gap at core 2
+
+
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=16))
+@settings(max_examples=40, deadline=None)
+def test_pod_topology_properties(pods, slices):
+    topo = tpu_pod_slices(pods, slices)
+    assert topo.n_cores == pods * slices
+    # every core belongs to exactly one partition, widths divide size
+    for p in topo.partitions:
+        for w in p.widths:
+            assert p.size % w == 0
+    # place count: per partition sum_w size/w
+    expected = sum(p.size // w for p in topo.partitions for w in p.widths)
+    assert len(topo.places()) == expected

@@ -1,0 +1,108 @@
+"""PTT unit + property tests (paper §4.1.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ExecutionPlace, PTT, PTTBank, tx2
+
+
+def test_update_rule_1_to_4():
+    ptt = PTT(tx2(), first_visit_direct=True)
+    p = ExecutionPlace(0, 1)
+    ptt.update(p, 10.0)
+    assert ptt.get(p) == 10.0                      # first visit: direct
+    ptt.update(p, 20.0)
+    assert ptt.get(p) == pytest.approx((4 * 10 + 20) / 5)
+
+
+def test_hysteresis_three_measurements():
+    """Paper: 'at least three measurements need to be taken before the PTT
+    value becomes closer to the new value' — with 1:4 weighting the value
+    is still closer to the old regime after 3 observations and flips by
+    the 4th."""
+    ptt = PTT(tx2())
+    p = ExecutionPlace(1, 1)
+    for _ in range(20):
+        ptt.update(p, 1.0)
+    vals = []
+    for _ in range(5):
+        ptt.update(p, 3.0)
+        vals.append(ptt.get(p))
+    for i in range(3):      # after <=3 updates still closer to 1.0
+        assert abs(vals[i] - 1.0) < abs(vals[i] - 3.0)
+    assert abs(vals[3] - 3.0) < abs(vals[3] - 1.0)
+
+
+def test_zero_init_explored_first():
+    ptt = PTT(tx2())
+    ptt.update(ExecutionPlace(0, 1), 5.0)
+    best = ptt.global_search(cost=False)
+    assert ptt.get(best) == 0.0                    # some unexplored place wins
+
+
+def test_local_search_keeps_core():
+    ptt = PTT(tx2())
+    for pl in tx2().places():
+        ptt.update(pl, 1.0)
+    place = ptt.local_search(3, cost=True)
+    assert 3 in place.cores                        # paper: core stays fixed
+
+
+def test_global_search_cost_vs_perf():
+    topo = tx2()
+    ptt = PTT(topo)
+    # width-4 place is fastest but costly; core 1 is best width-1
+    for pl in topo.places():
+        ptt.update(pl, 1.0)
+    ptt.update(ExecutionPlace(2, 4), 0.4)          # t*w = 1.6
+    for _ in range(9):
+        ptt.update(ExecutionPlace(2, 4), 0.4)
+    ptt.update(ExecutionPlace(1, 1), 0.8)
+    for _ in range(9):
+        ptt.update(ExecutionPlace(1, 1), 0.8)
+    perf = ptt.global_search(cost=False)
+    cost = ptt.global_search(cost=True)
+    assert perf == ExecutionPlace(2, 4)            # DAM-P choice
+    assert cost == ExecutionPlace(1, 1)            # DAM-C choice
+
+
+def test_invalid_place_rejected():
+    ptt = PTT(tx2())
+    with pytest.raises(KeyError):
+        ptt.update(ExecutionPlace(0, 4), 1.0)      # width 4 invalid on denver
+    with pytest.raises(ValueError):
+        ptt.update(ExecutionPlace(0, 1), float("nan"))
+
+
+def test_bank_one_table_per_type():
+    bank = PTTBank(tx2())
+    a = bank.for_type("matmul64")
+    b = bank.for_type("copy1024")
+    assert a is not b
+    assert bank.for_type("matmul64") is a
+
+
+@given(st.lists(st.floats(min_value=0.01, max_value=100.0),
+                min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_ema_bounded_by_observations(observations):
+    """Property: the EMA always stays within [min, max] of observations."""
+    ptt = PTT(tx2())
+    p = ExecutionPlace(0, 1)
+    for o in observations:
+        ptt.update(p, o)
+    v = ptt.get(p)
+    assert min(observations) - 1e-9 <= v <= max(observations) + 1e-9
+
+
+@given(st.floats(min_value=0.01, max_value=10.0),
+       st.floats(min_value=0.01, max_value=10.0))
+@settings(max_examples=30, deadline=None)
+def test_ema_converges(old, new):
+    """Property: repeated observations converge to the observed value."""
+    ptt = PTT(tx2())
+    p = ExecutionPlace(2, 2)
+    ptt.update(p, old)
+    for _ in range(200):
+        ptt.update(p, new)
+    assert ptt.get(p) == pytest.approx(new, rel=1e-3)

@@ -1,0 +1,44 @@
+"""Threaded (real-execution) runtime: completion + PTT learning."""
+import numpy as np
+
+from repro.core import (Priority, make_scheduler, matmul_type, run_threaded,
+                        synthetic_dag, tx2)
+
+
+def _payload_factory():
+    a = np.random.rand(48, 48).astype(np.float32)
+    b = np.random.rand(48, 48).astype(np.float32)
+
+    def payload(width):
+        (a @ b).sum()
+
+    return payload
+
+
+def test_completes_all_tasks():
+    sched = make_scheduler("DAM-P", tx2(), seed=0)
+    dag = synthetic_dag(matmul_type(64), parallelism=3, total_tasks=120)
+    for t in dag.all_tasks():
+        t.payload = _payload_factory()
+    m = run_threaded(dag, sched, timeout=60)
+    assert m.n_tasks == 120
+
+
+def test_ptt_learns_injected_slowdown():
+    """With core 0 slowed 5x, the dynamic scheduler's PTT must learn that
+    width-1 on core 0 is slower than elsewhere, and route HIGH tasks away."""
+    sched = make_scheduler("DAM-P", tx2(), seed=0)
+    dag = synthetic_dag(matmul_type(64), parallelism=2, total_tasks=300)
+    for t in dag.all_tasks():
+        t.payload = _payload_factory()
+    m = run_threaded(dag, sched, slowdown={0: 5.0}, timeout=120)
+    assert m.n_tasks == 300
+    tbl = sched.ptt.for_type("matmul64")
+    from repro.core import ExecutionPlace
+    slow = tbl.get(ExecutionPlace(0, 1))
+    others = [tbl.get(ExecutionPlace(c, 1)) for c in range(1, 6)
+              if tbl.visited(ExecutionPlace(c, 1))]
+    assert others and slow > 2.0 * min(others)
+    pp = m.priority_placement()
+    on_c0 = sum(v for k, v in pp.items() if k.startswith("(C0"))
+    assert on_c0 < 0.25            # HIGH tasks steered away from slow core

@@ -1,0 +1,99 @@
+"""Scheduler behaviors (paper Table 1 + Algorithm 1)."""
+import pytest
+
+from repro.core import (ExecutionPlace, Priority, Task, make_scheduler,
+                        matmul_type, tx2)
+
+
+def _warm(sched, task_type, times):
+    """Seed the PTT with place -> time."""
+    tbl = sched.ptt.for_type(task_type.name)
+    for pl, t in times.items():
+        for _ in range(10):
+            tbl.update(pl, t)
+
+
+def _all_places_warm(sched, tt, default=1.0, overrides=None):
+    times = {pl: default for pl in sched.topology.places()}
+    times.update(overrides or {})
+    _warm(sched, tt, times)
+
+
+def test_fa_pins_high_to_static_fast_cores():
+    sched = make_scheduler("FA", tx2())
+    tt = matmul_type()
+    leaders = set()
+    for _ in range(8):
+        t = Task(tt, priority=Priority.HIGH)
+        target = sched.place_on_wake(t, waker_core=4)
+        leaders.add(target)
+        assert t.bound_place.width == 1
+    assert leaders == {0, 1}                     # round-robin over Denver
+
+
+def test_da_follows_ptt_not_static():
+    sched = make_scheduler("DA", tx2())
+    tt = matmul_type()
+    # core 0 (statically fastest) is perturbed; core 5 currently fastest
+    _all_places_warm(sched, tt, default=1.0,
+                     overrides={ExecutionPlace(0, 1): 3.0,
+                                ExecutionPlace(5, 1): 0.5})
+    t = Task(tt, priority=Priority.HIGH)
+    sched.place_on_wake(t, waker_core=0)
+    assert t.bound_place == ExecutionPlace(5, 1)
+    assert t.bound_place.width == 1              # DA never molds
+
+
+def test_dam_c_minimizes_cost_dam_p_minimizes_time():
+    tt = matmul_type()
+    times = {ExecutionPlace(2, 4): 0.4,          # fastest, cost 1.6
+             ExecutionPlace(1, 1): 0.8}          # cheapest, cost 0.8
+    c = make_scheduler("DAM-C", tx2())
+    _all_places_warm(c, tt, default=1.0, overrides=times)
+    p = make_scheduler("DAM-P", tx2())
+    _all_places_warm(p, tt, default=1.0, overrides=times)
+
+    tc = Task(tt, priority=Priority.HIGH)
+    c.place_on_wake(tc, 0)
+    tp = Task(tt, priority=Priority.HIGH)
+    p.place_on_wake(tp, 0)
+    assert tc.bound_place == ExecutionPlace(1, 1)
+    assert tp.bound_place == ExecutionPlace(2, 4)
+
+
+def test_low_priority_local_width_search():
+    sched = make_scheduler("DAM-C", tx2())
+    tt = matmul_type()
+    _all_places_warm(sched, tt, default=1.0,
+                     overrides={ExecutionPlace(2, 4): 0.2})  # cost 0.8 < 1.0
+    t = Task(tt)                                  # LOW
+    assert sched.place_on_wake(t, waker_core=3) is None  # stays local
+    place = sched.place_on_dequeue(t, worker_core=3)
+    assert 3 in place.cores                       # local search keeps core
+    assert place == ExecutionPlace(2, 4)
+
+
+def test_steal_rules():
+    tt = matmul_type()
+    high = Task(tt, priority=Priority.HIGH)
+    low = Task(tt, priority=Priority.LOW)
+    for name, expect_high in [("RWS", True), ("RWSM-C", True), ("FA", False),
+                              ("FAM-C", False), ("DA", False),
+                              ("DAM-C", False), ("DAM-P", False)]:
+        s = make_scheduler(name, tx2())
+        assert s.may_steal(low)
+        assert s.may_steal(high) == expect_high, name
+
+
+def test_rws_has_no_priority_machinery():
+    sched = make_scheduler("RWS", tx2())
+    t = Task(matmul_type(), priority=Priority.HIGH)
+    assert sched.place_on_wake(t, waker_core=2) is None
+    assert t.bound_place is None
+    assert sched.place_on_dequeue(t, 2) == ExecutionPlace(2, 1)
+    assert not sched.priority_dequeue
+
+
+def test_unknown_scheduler():
+    with pytest.raises(ValueError):
+        make_scheduler("NOPE", tx2())

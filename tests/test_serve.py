@@ -1,0 +1,50 @@
+"""Serving engine: requests complete; PTT steers prefill away from a
+slowed submesh."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import tpu_pod_slices
+from repro.serve import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_cfg():
+    return ARCHS["xlstm-125m"].reduced()
+
+
+def test_requests_complete_and_decode_chains(engine_cfg):
+    topo = tpu_pod_slices(2, 2)
+    eng = ServingEngine(engine_cfg, topo, scheduler="DAM-P", max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, engine_cfg.vocab, 16), max_new_tokens=3)
+            for _ in range(4)]
+    m = eng.run(timeout=300)
+    stats = eng.latency_stats()
+    assert stats["completed"] == 4
+    for r in reqs:
+        assert len(r.out_tokens) == 3              # prefill + 2 decode steps
+        assert r.t_first_token >= r.t_submit
+        assert r.t_done >= r.t_first_token
+    # prefill is HIGH and unstealable under DAM-P
+    assert any(rec.priority == 1 for rec in m.records)
+
+
+def test_hlo_analysis_on_toy_program():
+    """The roofline extractor counts a scanned matmul exactly."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(w @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                         jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    res = analyze_hlo(c.as_text())
+    want = 7 * 2 * 128 ** 3
+    assert res["flops"] == pytest.approx(want, rel=1e-6)
+    assert res["collective_bytes"]["total"] == 0

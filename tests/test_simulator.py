@@ -1,0 +1,91 @@
+"""Discrete-event simulator: conservation, determinism, and the paper's
+headline interference results."""
+import pytest
+
+from repro.core import (ALL_SCHEDULERS, SpeedProfile, copy_type, corun_chain,
+                        dvfs_denver, make_scheduler, matmul_type, simulate,
+                        synthetic_dag, tx2)
+
+
+def _run(name, *, P=2, total=800, background=(), speed=None, seed=1):
+    sched = make_scheduler(name, tx2(), seed=seed)
+    dag = synthetic_dag(matmul_type(64), parallelism=P, total_tasks=total)
+    return simulate(dag, sched, background=list(background), speed=speed)
+
+
+def test_all_tasks_run_exactly_once():
+    for name in ALL_SCHEDULERS:
+        m = _run(name)
+        assert m.n_tasks == 800, name
+        assert m.makespan > 0
+
+
+def test_deterministic_given_seed():
+    a = _run("DAM-C", seed=7)
+    b = _run("DAM-C", seed=7)
+    assert a.makespan == b.makespan
+    assert a.priority_placement() == b.priority_placement()
+
+
+def test_high_tasks_respect_binding():
+    """Non-RWS schedulers: HIGH tasks execute exactly at their bound place
+    (paper: stealing of high-priority tasks is disabled)."""
+    sched = make_scheduler("DA", tx2(), seed=3)
+    dag = synthetic_dag(matmul_type(64), parallelism=2, total_tasks=400)
+    m = simulate(dag, sched)
+    assert all(r.width == 1 for r in m.records if r.priority == 1)
+
+
+def test_no_time_travel_and_no_overlap():
+    m = _run("DAM-P", total=400)
+    busy = {}
+    for r in m.records:
+        assert r.t_end >= r.t_start >= r.t_ready >= 0
+        for c in range(r.leader, r.leader + r.width):
+            busy.setdefault(c, []).append((r.t_start, r.t_end))
+    for intervals in busy.values():
+        intervals.sort()
+        for (s1, e1), (s2, e2) in zip(intervals, intervals[1:]):
+            assert s2 >= e1 - 1e-9          # no core runs two tasks at once
+
+
+def test_corun_interference_ordering():
+    """Paper Fig. 4: dynamic schedulers > fixed > random under co-running
+    interference, and DA-family avoids the interfered core."""
+    bg = [corun_chain(matmul_type(64), core=0)]
+    rws = _run("RWS", total=2000, background=bg)
+    fa = _run("FA", total=2000, background=bg)
+    dam = _run("DAM-C", total=2000, background=bg)
+    assert dam.throughput > fa.throughput > rws.throughput
+    assert dam.throughput / rws.throughput > 2.0   # paper: up to 3.5x
+    pp = dam.priority_placement()
+    on_c0 = sum(v for k, v in pp.items() if k.startswith("(C0"))
+    assert on_c0 < 0.02                            # paper Fig 5: ~0-2%
+
+
+def test_dvfs_resilience():
+    """Paper Fig. 7: DAM-family beats RWS under DVFS square waves."""
+    def run(name):
+        sched = make_scheduler(name, tx2(), seed=1)
+        dag = synthetic_dag(copy_type(1024), parallelism=2, total_tasks=4000)
+        return simulate(dag, sched, speed=dvfs_denver())
+    rws = run("RWS")
+    dam = run("DAM-P")
+    assert dam.throughput > 1.3 * rws.throughput
+
+
+def test_speed_profile_square_wave():
+    prof = SpeedProfile(2).add_square_wave((0,), period=10.0, lo=0.2)
+    assert prof.speed(0, 1.0) == 1.0
+    assert prof.speed(0, 6.0) == 0.2
+    assert prof.speed(0, 11.0) == 1.0
+    assert prof.speed(1, 6.0) == 1.0
+    bps = prof.breakpoints(30.0)
+    assert bps[:3] == [5.0, 10.0, 15.0]
+
+
+def test_windowed_throughput_reacts_to_interference():
+    bg = [corun_chain(matmul_type(64), core=0, t_start=0.0)]
+    m = _run("RWS", total=3000, background=bg)
+    series = m.windowed_throughput(m.makespan / 10)
+    assert len(series) >= 5
