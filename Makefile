@@ -1,0 +1,19 @@
+# Single-entry smoke check: unit/regression tests + the fig4 and kernel
+# benchmark suites at CI sizes.  The benchmark CSV includes per-suite wall
+# times (also embedded in each JSON artifact under _meta.suite_wall_s) so
+# perf regressions are visible in the trajectory.
+PY := PYTHONPATH=src python
+
+.PHONY: check test bench-smoke bench
+
+check: test bench-smoke
+
+test:
+	$(PY) -m pytest -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --fast --only fig4,kernels
+
+# full paper-figure sweep + scheduler-engine throughput
+bench:
+	$(PY) -m benchmarks.run

@@ -19,8 +19,11 @@ from .common import emit, write_artifact
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    warm = fn(*args)                 # single warm-up call (compile + trace)
+    if isinstance(warm, tuple):
+        warm[0].block_until_ready()
+    else:
+        jax.block_until_ready(warm)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

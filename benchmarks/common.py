@@ -7,9 +7,27 @@ import time
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
+# set by ``begin_suite`` (the orchestrator) so artifacts can self-report how
+# much wall time their suite burned — perf regressions of the harness itself
+# then show up in the artifact trajectory, not just in stdout
+_suite_name: str | None = None
+_suite_t0: float = 0.0
+
+
+def begin_suite(name: str) -> None:
+    global _suite_name, _suite_t0
+    _suite_name = name
+    _suite_t0 = time.perf_counter()
+
 
 def write_artifact(name: str, payload) -> str:
     os.makedirs(ART_DIR, exist_ok=True)
+    if isinstance(payload, dict) and _suite_name is not None:
+        payload = dict(payload)
+        payload["_meta"] = {
+            "suite": _suite_name,
+            "suite_wall_s": round(time.perf_counter() - _suite_t0, 2),
+        }
     path = os.path.join(ART_DIR, name + ".json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)

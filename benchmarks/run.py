@@ -3,8 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7,...]
 
 Prints ``name,value,derived`` CSV rows; JSON artifacts land in
-benchmarks/artifacts/.  The roofline section reads the dry-run artifacts
+benchmarks/artifacts/ (each artifact self-reports its suite's wall time
+under ``_meta``).  The roofline section reads the dry-run artifacts
 (produce them with ``python -m repro.launch.dryrun --all --mesh both``).
+
+``make check`` runs the smoke subset (fig4 + kernels) plus the test suite.
 """
 from __future__ import annotations
 
@@ -12,8 +15,9 @@ import argparse
 import time
 
 from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
-               bench_kmeans, bench_roofline, bench_sensitivity,
-               bench_task_distribution)
+               bench_kmeans, bench_roofline, bench_sched_throughput,
+               bench_sensitivity, bench_task_distribution)
+from . import common
 
 SUITES = {
     "fig4": bench_interference.run,
@@ -24,6 +28,7 @@ SUITES = {
     "fig10": bench_heat.run,
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,
+    "sched": bench_sched_throughput.run,
 }
 
 
@@ -35,10 +40,15 @@ def main() -> None:
                     help="comma-separated suite names")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {','.join(unknown)}; "
+                 f"available: {','.join(SUITES)}")
     print("name,value,derived")
     t0 = time.time()
     for name in names:
         t = time.time()
+        common.begin_suite(name)
         SUITES[name](fast=args.fast)
         print(f"suite/{name}/elapsed_s,{time.time() - t:.1f},")
     print(f"suite/total_elapsed_s,{time.time() - t0:.1f},")

@@ -16,7 +16,7 @@ from .interference import (BackgroundApp, SpeedProfile, corun_chain,
                            corun_socket, dvfs_denver)
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace, ResourcePartition, Topology, haswell, \
-    haswell_cluster, tpu_pod_slices, tx2
+    haswell_cluster, tpu_pod_slices, tx2, tx2_xl
 from .ptt import PTT, PTTBank
 from .runtime import ThreadedRuntime, run_threaded
 from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
@@ -30,7 +30,7 @@ __all__ = [
     "BackgroundApp", "SpeedProfile", "corun_chain", "corun_socket",
     "dvfs_denver", "RunMetrics", "TaskRecord", "ExecutionPlace",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
-    "tpu_pod_slices", "tx2", "PTT", "PTTBank", "ThreadedRuntime",
+    "tpu_pod_slices", "tx2", "tx2_xl", "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
     "Simulator", "simulate", "Priority", "Task", "TaskType", "copy_type",
     "kmeans_map_type", "kmeans_reduce_type", "matmul_type",

@@ -5,11 +5,20 @@ runs on cores ``[leader, leader + width)``.  A *resource partition* is a set
 of cores sharing a resource domain (an L2 cluster on the TX2, a socket on
 Haswell, an ICI domain / pod slice on TPU).  Valid widths are per-partition
 and places are width-aligned within their partition, mirroring XiTAO.
+
+The :class:`Topology` additionally pre-computes dense index arrays over its
+place list (leaders, widths, per-core local-search candidates, width-1
+subset) so the PTT searches can run as vectorized argmins instead of
+per-place Python loops, and interns the :class:`ExecutionPlace` objects so
+the simulator hot path never re-allocates them.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator, Sequence
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -19,7 +28,7 @@ class ExecutionPlace:
     leader: int
     width: int
 
-    @property
+    @functools.cached_property
     def cores(self) -> tuple[int, ...]:
         return tuple(range(self.leader, self.leader + self.width))
 
@@ -87,17 +96,47 @@ class Topology:
         self._places = tuple(pl for p in self.partitions for pl in p.places())
         self.max_width = max(w for p in self.partitions for w in p.widths)
 
+        # dense search metadata (vectorized PTT argmins + place interning)
+        self._place_idx = {(pl.leader, pl.width): i
+                           for i, pl in enumerate(self._places)}
+        self.place_leaders = np.array([pl.leader for pl in self._places],
+                                      dtype=np.int64)
+        self.place_widths = np.array([pl.width for pl in self._places],
+                                     dtype=np.int64)
+        self.place_widths_f = self.place_widths.astype(np.float64)
+        self.width1_place_indices = np.flatnonzero(self.place_widths == 1)
+        self._local_idx: dict[int, np.ndarray] = {}
+
     def partition_of(self, core: int) -> ResourcePartition:
         return self._part_of[core]
 
     def places(self) -> tuple[ExecutionPlace, ...]:
         return self._places
 
+    def place_at(self, leader: int, width: int) -> ExecutionPlace:
+        """The interned (shared) place object for ``(leader, width)``."""
+        return self._places[self._place_idx[(leader, width)]]
+
+    def place_index(self, leader: int, width: int) -> int:
+        return self._place_idx[(leader, width)]
+
     def local_places(self, core: int) -> list[ExecutionPlace]:
         """Places containing ``core`` — the *local search* candidates (one
         per valid width of the core's partition, leader kept aligned)."""
-        part = self.partition_of(core)
-        return [part.place_containing(core, w) for w in part.widths]
+        places = self._places
+        return [places[i] for i in self.local_place_indices(core)]
+
+    def local_place_indices(self, core: int) -> np.ndarray:
+        """Indices (into ``places()``) of the local-search candidates."""
+        idx = self._local_idx.get(core)
+        if idx is None:
+            part = self.partition_of(core)
+            idx = np.array(
+                [self.place_index(pl.leader, pl.width)
+                 for pl in (part.place_containing(core, w) for w in part.widths)],
+                dtype=np.int64)
+            self._local_idx[core] = idx
+        return idx
 
     def fastest_static_partition(self) -> ResourcePartition:
         return min(self.partitions, key=lambda p: p.static_rank)
@@ -120,6 +159,23 @@ def tx2() -> Topology:
         ResourcePartition("a57", "a57", 2, 4, (1, 2, 4), static_rank=1,
                           bw_domain="lpddr4"),
     ])
+
+
+def tx2_xl(clusters: int = 4) -> Topology:
+    """Synthetic scaled-up TX2-class SoC: ``clusters`` pairs of (2-core
+    Denver, 4-core A57) clusters, each pair sharing an LPDDR4-style memory
+    domain.  Not a real device — a stress topology for the scheduler sweeps
+    (6 x clusters cores, same asymmetry structure as the TX2)."""
+    parts = []
+    for i in range(clusters):
+        base = 6 * i
+        parts.append(ResourcePartition(
+            f"denver{i}", "denver", base, 2, (1, 2), static_rank=0,
+            bw_domain=f"lpddr4_{i}"))
+        parts.append(ResourcePartition(
+            f"a57_{i}", "a57", base + 2, 4, (1, 2, 4), static_rank=1,
+            bw_domain=f"lpddr4_{i}"))
+    return Topology(parts)
 
 
 def _divisor_widths(size: int) -> tuple[int, ...]:

@@ -12,11 +12,19 @@ regime.  Entries start at zero, which the schedulers interpret as
 "unexplored — try me first", guaranteeing every place is evaluated at least
 once early in the run (paper: "The entries are initialized to zero. This
 ensures that all possible execution places are evaluated at least once").
+
+The Algorithm-1 searches (``global_search`` / ``local_search`` /
+``width1_search``) run as masked argmins over the dense table using the
+topology's precomputed place-index arrays: unexplored (0.0) entries win
+automatically, ties prefer narrower places, and residual ties break
+*randomly* so equal predictions never pile onto the lowest core id.  This
+keeps wake-time placement O(1)-ish numpy work instead of a Python loop over
+every place per HIGH task.
 """
 from __future__ import annotations
 
 import threading
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -45,6 +53,17 @@ class PTT:
         for place in topology.places():
             self.table[place.leader, self._w_slot[place.width]] = 0.0
         self._lock = threading.Lock()
+
+        # Vectorized-search metadata: for the i-th valid place, its flat
+        # offset into ``table`` and its width (float).  ``_flat`` is a view,
+        # so in-place ``update``s are immediately visible to the searches.
+        self._places = topology.places()
+        n_slots = len(widths)
+        slots = np.array([self._w_slot[pl.width] for pl in self._places],
+                         dtype=np.int64)
+        self._pos = topology.place_leaders * n_slots + slots
+        self._wf = topology.place_widths_f
+        self._flat = self.table.reshape(-1)
 
     # -- queries ------------------------------------------------------------
     def get(self, place: ExecutionPlace) -> float:
@@ -85,7 +104,10 @@ class PTT:
     def best(self, places: Iterable[ExecutionPlace], *, cost: bool,
              rng=None) -> ExecutionPlace:
         """argmin with *random* final tie-break: equal predictions must not
-        systematically pile decisions onto the lowest core id."""
+        systematically pile decisions onto the lowest core id.
+
+        Generic (any candidate iterable) Python path — the hot searches
+        below use the vectorized ``_best_from_indices`` instead."""
         best_score, cands = None, []
         for pl in places:
             s = self._score(pl, cost=cost)
@@ -97,13 +119,44 @@ class PTT:
             return cands[rng.randrange(len(cands))]
         return cands[0]
 
+    def _best_from_indices(self, idx: Optional[np.ndarray], *, cost: bool,
+                           rng=None) -> ExecutionPlace:
+        """Masked argmin over the dense table restricted to place indices
+        ``idx`` (None = all valid places).  Semantics identical to ``best``
+        over the same candidates in the same order: unexplored entries (0.0)
+        sort first, ties prefer the narrowest width, residual ties are
+        broken uniformly at random."""
+        if idx is None:
+            vals = self._flat[self._pos]
+            w = self._wf
+        else:
+            vals = self._flat[self._pos[idx]]
+            w = self._wf[idx]
+        score = vals * w if cost else vals
+        tie = score == score.min()
+        cands = np.flatnonzero(tie)
+        if len(cands) > 1:
+            wt = w[cands]
+            cands = cands[wt == wt.min()]
+        if len(cands) == 1 or rng is None:
+            k = cands[0]
+        else:
+            k = cands[rng.randrange(len(cands))]
+        return self._places[int(k) if idx is None else int(idx[int(k)])]
+
     def local_search(self, core: int, *, cost: bool = True, rng=None) -> ExecutionPlace:
         """Paper: keep partition+core fixed, mold only the width."""
-        return self.best(self.topology.local_places(core), cost=cost, rng=rng)
+        return self._best_from_indices(
+            self.topology.local_place_indices(core), cost=cost, rng=rng)
 
     def global_search(self, *, cost: bool, rng=None) -> ExecutionPlace:
         """Paper: sweep all execution places in the system."""
-        return self.best(self.topology.places(), cost=cost, rng=rng)
+        return self._best_from_indices(None, cost=cost, rng=rng)
+
+    def width1_search(self, *, cost: bool = False, rng=None) -> ExecutionPlace:
+        """Global sweep restricted to width-1 places (the DA scheduler)."""
+        return self._best_from_indices(
+            self.topology.width1_place_indices, cost=cost, rng=rng)
 
     def snapshot(self) -> np.ndarray:
         return self.table.copy()

@@ -58,19 +58,20 @@ class Scheduler:
             core = part.start + self._fa_rr % part.size
             self._fa_rr += 1
             if self.moldable:
-                # FAM-C: cost-minimizing width inside the fast partition.
+                # FAM-C: cost-minimizing width inside the fast partition
+                # (the local-search candidates of ``core`` are exactly the
+                # aligned places of each valid width containing it).
                 tbl = self.ptt.for_type(task.type.name)
-                cands = [part.place_containing(core, w) for w in part.widths]
-                task.bound_place = tbl.best(cands, cost=True, rng=self.rng)
+                task.bound_place = tbl.local_search(core, cost=True,
+                                                    rng=self.rng)
             else:
-                task.bound_place = ExecutionPlace(core, 1)
+                task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
         if self.dynamic:
             tbl = self.ptt.for_type(task.type.name)
             if not self.moldable:
                 # DA: fastest single core (global search, width locked to 1).
-                cands = [p for p in self.topology.places() if p.width == 1]
-                task.bound_place = tbl.best(cands, cost=False, rng=self.rng)
+                task.bound_place = tbl.width1_search(cost=False, rng=self.rng)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
@@ -85,7 +86,7 @@ class Scheduler:
         if task.bound_place is not None:
             return task.bound_place
         if not self.moldable:
-            return ExecutionPlace(worker_core, 1)
+            return self.topology.place_at(worker_core, 1)
         # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
         tbl = self.ptt.for_type(task.type.name)
         return tbl.local_search(worker_core, cost=True, rng=self.rng)

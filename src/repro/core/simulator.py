@@ -15,15 +15,46 @@ Faithfully models the scheduler-visible machinery:
 
 Progress integration uses piecewise-constant rates: every event (task
 start/finish, speed breakpoint, background episode edge) re-derives each
-running task's rate
+*affected* running task's rate
 
     rate = min_{c in place} speed(c,t)/share(c) * min(1, bw_cap/bw_demand)^s
 
 and re-schedules versioned completion events.  All randomness is seeded.
+
+Incremental-dispatch architecture (the hot path)
+------------------------------------------------
+The original engine re-ran a shuffled fixpoint over *all* cores after every
+event and re-scanned whole queues per decision; the machinery below keeps
+scheduler-visible behavior but does O(changed state) work per event:
+
+* **Split WSQs** — each core's WSQ is a HIGH-FIFO + LOW-LIFO deque pair
+  (``_WSQ``).  Priority dequeue ("serve the oldest HIGH first, newest LOW
+  otherwise") and steal ("oldest stealable first") become O(1) pops instead
+  of O(queue) scans.  Priority-oblivious schedulers (RWS family) route all
+  tasks through the LOW deque, preserving their plain mixed-LIFO order.
+* **O(cores) victim selection** — the steal heuristic "victim with the most
+  stealable tasks, random tie-break" reads per-queue lengths instead of
+  counting matching tasks per victim (the seed engine's dominant cost:
+  O(cores x queue length) ``may_steal`` scans per steal attempt).
+* **Idle-core worklist** — ``_dispatch`` drains a dirty-set of cores whose
+  state changed since the last event (work pushed, task placed, member core
+  freed) in shuffled rounds mirroring the old two-phase (local, then steal)
+  fixpoint.  Cores that find neither local work nor a steal victim park in
+  a *starving* set and are only re-woken when stealable work appears.
+* **Dirty-flag rate refresh** — per-core effective speeds (DVFS x
+  background time-sharing) are cached and recomputed only at speed/bg
+  breakpoints; partition bandwidth demand is maintained incrementally on
+  task start/commit.  ``_refresh_rates`` touches only tasks whose inputs
+  changed: all of them after a speed/bg event, bandwidth-sensitive tasks in
+  dirtied domains after demand shifts, and freshly started tasks otherwise.
+
+Decision *distributions* (victim tie-breaks, core processing order) are
+unchanged, but the RNG draw sequence differs from the pre-refactor engine,
+so seeded runs are statistically — not bit-for-bit — identical to it;
+``tests/test_golden_schedule.py`` pins the current behavior.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
 from collections import deque
@@ -37,24 +68,42 @@ from .schedulers import Scheduler
 from .task import PARTITION_BW, Priority, Task
 
 _EPS = 1e-12
+_NO_DEMAND = (0.0, 0)
 
 
-@dataclasses.dataclass
 class _Running:
-    task: Task
-    place: ExecutionPlace
-    remaining: float            # work-seconds left at rate 1.0
-    rate: float = -1.0          # <0 = not yet scheduled a finish event
-    version: int = 0
+    __slots__ = ("task", "place", "remaining", "rate", "base", "version",
+                 "cores", "domain", "mem_s", "cap", "bw_contrib")
+
+    def __init__(self, task: Task, place: ExecutionPlace, remaining: float,
+                 domain: str, cap: float):
+        self.task = task
+        self.place = place
+        self.remaining = remaining  # work-seconds left at rate 1.0
+        self.rate = -1.0            # <0 = not yet scheduled a finish event
+        self.base = -1.0            # min core speed over place (pre-bw rate)
+        self.version = 0
+        self.cores = place.cores
+        self.domain = domain
+        self.mem_s = task.type.mem_sensitivity
+        self.cap = cap
+        self.bw_contrib = task.type.bw_demand * place.width
 
 
-@dataclasses.dataclass(order=True)
-class _Event:
-    t: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)
-    tid: int = dataclasses.field(compare=False, default=-1)
-    version: int = dataclasses.field(compare=False, default=-1)
+class _WSQ:
+    """Split work-stealing queue: HIGH tasks in FIFO order (oldest HIGH
+    gates the DAG and is served first), LOW tasks as a LIFO deque for owner
+    locality whose FIFO end feeds thieves.  Schedulers without priority
+    dequeue push everything through ``low``, i.e. one plain LIFO deque."""
+
+    __slots__ = ("high", "low")
+
+    def __init__(self):
+        self.high: deque[Task] = deque()
+        self.low: deque[Task] = deque()
+
+    def __len__(self) -> int:
+        return len(self.high) + len(self.low)
 
 
 class Simulator:
@@ -70,77 +119,141 @@ class Simulator:
         self.horizon = horizon
 
         n = self.topo.n_cores
-        self.wsq: list[deque[Task]] = [deque() for _ in range(n)]
+        self.wsq: list[_WSQ] = [_WSQ() for _ in range(n)]
         self.aq: list[deque[_Running]] = [deque() for _ in range(n)]
         self.core_busy: list[Optional[_Running]] = [None] * n
         self.running: dict[int, _Running] = {}
         self.now = 0.0
         self._seq = itertools.count()
-        self._events: list[_Event] = []
+        self._events: list[tuple] = []   # (t, seq, kind, tid, version)
         self._done = 0
         self._outstanding = 0
         self.metrics = RunMetrics(n_cores=n)
 
+        # scheduler-policy flags (hot-path locals).  HIGH tasks are routed
+        # to the split HIGH deque unless the scheduler is fully priority-
+        # oblivious (no priority dequeue AND HIGH stealable — the RWS
+        # family), where a single mixed-LIFO deque preserves its ordering.
+        # This keeps `_stealable_count`/steal-pop consistent with
+        # ``Scheduler.may_steal`` for *any* flag combination, not just the
+        # seven canonical configs.
+        self._steal_high = scheduler.steal_high
+        self._priority_dequeue = scheduler.priority_dequeue
+        self._route_high = scheduler.priority_dequeue or not scheduler.steal_high
+
+        # incremental-dispatch state: every core starts on the worklist (the
+        # first round parks workless cores in the starving set, after which
+        # only state changes re-queue them)
+        self._dirty: set[int] = set(range(n))
+        self._starving: set[int] = set()    # idle cores out of steal targets
+
+        # dirty-flag rate-refresh state
+        self._fresh: list[_Running] = []    # started since last refresh
+        self._dirty_domains: set[str] = set()
+        self._rates_global_dirty = False
+        self._demand: dict[str, tuple[float, int]] = {}  # foreground bw
+        self._speed_now = [self.speed.speed(c, 0.0) for c in range(n)]
+        self._bg_mult = [1.0] * n
+        self._bg_demand: dict[str, tuple[float, int]] = {}
+        self._core_speed = list(self._speed_now)
+        self._recompute_bg()
+
     # ------------------------------------------------------------------ util
     def _push_event(self, t: float, kind: str, tid: int = -1, version: int = -1):
-        heapq.heappush(self._events, _Event(t, next(self._seq), kind, tid, version))
+        heapq.heappush(self._events, (t, next(self._seq), kind, tid, version))
 
-    def _bg_share(self, core: int) -> tuple[int, float]:
-        """(# active co-runners on core, strongest cache-thrash factor)."""
-        n, thrash = 0, 0.0
+    def _recompute_speed(self):
+        """Re-derive cached per-core DVFS speeds (on a speed breakpoint)."""
+        now = self.now
+        sp = self.speed.speed
+        self._speed_now = [sp(c, now) for c in range(self.topo.n_cores)]
+        self._update_core_speed()
+        self._rates_global_dirty = True
+
+    def _recompute_bg(self):
+        """Re-derive background co-runner state (on an episode boundary):
+        per-core time-share/thrash multipliers and per-domain bandwidth
+        demand contributed by active background apps."""
+        n = self.topo.n_cores
+        n_bg = [0] * n
+        thrash = [0.0] * n
+        bg_demand: dict[str, tuple[float, int]] = {}
+        now = self.now
         for b in self.background:
-            if core in b.cores and b.active(self.now):
-                n += 1
-                thrash = max(thrash, b.thrash)
-        return n, thrash
-
-    def _partition_bw_demand(self) -> dict[str, tuple[float, int]]:
-        """partition -> (aggregate bytes/s demanded, # independent streams).
-        More concurrent streams also *degrade* effective DRAM bandwidth
-        (bank/row-buffer thrash) — this is the oversubscription the paper's
-        moldability avoids: one wide task is one stream, w narrow tasks are
-        w streams."""
-        demand: dict[str, tuple[float, int]] = {}
-        for rec in self.running.values():
-            if rec.task.type.bw_demand <= 0:
+            if not b.active(now):
                 continue
-            dom = self.topo.partition_of(rec.place.leader).domain
-            d, n = demand.get(dom, (0.0, 0))
-            demand[dom] = (d + rec.task.type.bw_demand * rec.place.width, n + 1)
-        for b in self.background:
-            if b.active(self.now) and b.task_type.bw_demand > 0:
+            for c in b.cores:
+                n_bg[c] += 1
+                if b.thrash > thrash[c]:
+                    thrash[c] = b.thrash
+            if b.task_type.bw_demand > 0:
                 for c in b.cores:
                     dom = self.topo.partition_of(c).domain
-                    d, n = demand.get(dom, (0.0, 0))
-                    demand[dom] = (d + b.task_type.bw_demand, n + 1)
-        return demand
+                    d, k = bg_demand.get(dom, _NO_DEMAND)
+                    bg_demand[dom] = (d + b.task_type.bw_demand, k + 1)
+        self._bg_mult = [
+            (1.0 - thrash[c]) / (1 + n_bg[c]) if n_bg[c] else 1.0
+            for c in range(n)]
+        self._bg_demand = bg_demand
+        self._update_core_speed()
+        self._rates_global_dirty = True
 
-    def _rate_of(self, rec: _Running, demand: dict[str, tuple[float, int]]) -> float:
-        core_rate = float("inf")
-        for c in rec.place.cores:
-            n_bg, thrash = self._bg_share(c)
-            r = self.speed.speed(c, self.now) / (1 + n_bg) * (1.0 - thrash) ** (n_bg > 0)
-            core_rate = min(core_rate, r)
-        s = rec.task.type.mem_sensitivity
-        if s > 0.0:
-            part = self.topo.partition_of(rec.place.leader)
-            cap = PARTITION_BW[part.kind]
-            dem, streams = demand.get(part.domain, (0.0, 0))
-            cap *= max(0.6, 1.0 - 0.08 * max(0, streams - 1))
-            if dem > cap:
-                core_rate *= (cap / dem) ** s
-        return max(core_rate, 1e-9)
+    def _update_core_speed(self):
+        self._core_speed = [s * m for s, m in
+                            zip(self._speed_now, self._bg_mult)]
 
     def _refresh_rates(self):
-        """Advance + re-derive every running task's rate; reschedule finishes."""
-        demand = self._partition_bw_demand()
-        for rec in self.running.values():
-            rate = self._rate_of(rec, demand)
-            if rec.rate < 0 or abs(rate - rec.rate) > 1e-12 * max(rate, rec.rate):
+        """Re-derive rates + reschedule finishes for tasks whose inputs
+        changed since the last event (see module docstring)."""
+        if self._rates_global_dirty:
+            recs = self.running.values()
+        elif self._dirty_domains:
+            dd = self._dirty_domains
+            recs = [r for r in self.running.values()
+                    if r.rate < 0.0 or (r.mem_s > 0.0 and r.domain in dd)]
+        elif self._fresh:
+            recs = self._fresh
+        else:
+            return
+        cs = self._core_speed
+        demand = self._demand
+        bg_demand = self._bg_demand
+        now = self.now
+        bw_factor: dict = {}    # (domain, cap, sensitivity) -> slowdown
+        global_dirty = self._rates_global_dirty
+        for rec in recs:
+            # the min-over-member-cores speed only moves on speed/bg events
+            # (global dirty) — demand-only refreshes reuse the cached value
+            if global_dirty or rec.base < 0.0:
+                cores = rec.cores
+                rec.base = cs[cores[0]] if len(cores) == 1 else \
+                    min(cs[c] for c in cores)
+            rate = rec.base
+            s = rec.mem_s
+            if s > 0.0:
+                key = (rec.domain, rec.cap, s)
+                f = bw_factor.get(key)
+                if f is None:
+                    dem, streams = demand.get(rec.domain, _NO_DEMAND)
+                    bd = bg_demand.get(rec.domain)
+                    if bd is not None:
+                        dem += bd[0]
+                        streams += bd[1]
+                    cap = rec.cap * max(0.6, 1.0 - 0.08 * max(0, streams - 1))
+                    f = (cap / dem) ** s if dem > cap else 1.0
+                    bw_factor[key] = f
+                if f != 1.0:
+                    rate *= f
+            if rate < 1e-9:
+                rate = 1e-9
+            if rec.rate < 0 or abs(rate - rec.rate) > _EPS * max(rate, rec.rate):
                 rec.rate = rate
                 rec.version += 1
-                self._push_event(self.now + rec.remaining / rate, "finish",
+                self._push_event(now + rec.remaining / rate, "finish",
                                  rec.task.tid, rec.version)
+        self._fresh.clear()
+        self._dirty_domains.clear()
+        self._rates_global_dirty = False
 
     def _advance(self, t: float):
         dt = t - self.now
@@ -153,121 +266,164 @@ class Simulator:
         self.now = t
 
     # ----------------------------------------------------------------- wake
+    def _mark(self, core: int):
+        self._dirty.add(core)
+        self._starving.discard(core)
+
     def _wake(self, task: Task, waker_core: int):
         task.t_ready = self.now
         target = self.sched.place_on_wake(task, waker_core)
-        self.wsq[waker_core if target is None else target].append(task)
+        core = waker_core if target is None else target
+        q = self.wsq[core]
+        if self._route_high and task.priority == Priority.HIGH:
+            q.high.append(task)
+        else:
+            q.low.append(task)
         self._outstanding += 1
+        self._mark(core)
+        # new stealable work re-opens the starving cores' steal loop
+        if self._starving and (self._steal_high
+                               or task.priority != Priority.HIGH):
+            self._dirty |= self._starving
+            self._starving.clear()
 
     def submit(self, dag: DAG):
         for root in dag.roots:
             self._wake(root, waker_core=0)
 
     # -------------------------------------------------------------- dispatch
+    def _stealable_count(self, core: int) -> int:
+        q = self.wsq[core]
+        return len(q.low) + len(q.high) if self._steal_high else len(q.low)
+
     def _try_assign_from_wsq(self, core: int) -> bool:
         """Pop own WSQ and place the task into AQs.  HIGH tasks are served
         first (oldest HIGH — they gate the DAG); LOW tasks pop LIFO for
         locality, as in a classic work-stealing deque."""
         q = self.wsq[core]
-        if not q:
+        if self._priority_dequeue and q.high:
+            task = q.high.popleft()      # oldest HIGH first
+        elif q.low:
+            task = q.low.pop()           # newest (plain LIFO deque)
+        elif q.high:                     # non-priority dequeue, only HIGHs left
+            task = q.high.popleft()
+        else:
             return False
-        task = None
-        if self.sched.priority_dequeue:
-            for i, t in enumerate(q):           # oldest HIGH first
-                if t.priority == Priority.HIGH:
-                    task = t
-                    del q[i]
-                    break
-        if task is None:
-            task = q.pop()                      # newest (plain LIFO deque)
         self._place_into_aqs(task, core)
         return True
 
     def _try_steal(self, thief: int) -> bool:
         """Steal from the WSQ with the most stealable tasks (paper step 3),
-        FIFO end; re-run the place search at the thief (steps 4-5)."""
-        best, best_n = -1, 0
-        order = list(range(self.topo.n_cores))
-        self.rng.shuffle(order)          # random tie-breaking
-        for v in order:
+        FIFO end; re-run the place search at the thief (steps 4-5).  Victim
+        selection reads O(cores) queue lengths; maxima tie-break uniformly
+        at random, as the shuffled scan did."""
+        best_n = 0
+        best: list[int] = []
+        for v in range(self.topo.n_cores):
             if v == thief:
                 continue
-            n = sum(1 for t in self.wsq[v] if self.sched.may_steal(t))
+            n = self._stealable_count(v)
             if n > best_n:
-                best, best_n = v, n
-        if best < 0:
+                best_n = n
+                best = [v]
+            elif n and n == best_n:
+                best.append(v)
+        if not best:
             return False
-        victim_q = self.wsq[best]
-        for i, t in enumerate(victim_q):          # oldest stealable first
-            if self.sched.may_steal(t):
-                del victim_q[i]
-                t.bound_place = None              # stolen -> decision redone
-                self._place_into_aqs(t, thief)
-                return True
-        return False
+        victim = best[0] if len(best) == 1 else \
+            best[self.rng.randrange(len(best))]
+        q = self.wsq[victim]
+        t = q.low.popleft() if q.low else q.high.popleft()  # oldest stealable
+        t.bound_place = None              # stolen -> decision redone
+        self._place_into_aqs(t, thief)
+        return True
 
     def _place_into_aqs(self, task: Task, worker_core: int):
         place = self.sched.place_on_dequeue(task, worker_core)
+        part = self.topo.partition_of(place.leader)
         rec = _Running(task, place,
-                       remaining=task.type.duration(
-                           self.topo.partition_of(place.leader).kind, place.width))
-        for c in place.cores:
+                       remaining=task.type.duration(part.kind, place.width),
+                       domain=part.domain, cap=PARTITION_BW[part.kind])
+        for c in rec.cores:
             self.aq[c].append(rec)
+            self._mark(c)
 
     def _try_start_aq(self, core: int) -> bool:
         """Start the AQ head if every member core has it at head and is idle."""
-        if self.core_busy[core] is not None or not self.aq[core]:
+        aq = self.aq
+        busy = self.core_busy
+        if busy[core] is not None or not aq[core]:
             return False
-        rec = self.aq[core][0]
-        for c in rec.place.cores:
-            if self.core_busy[c] is not None or not self.aq[c] or self.aq[c][0] is not rec:
+        rec = aq[core][0]
+        for c in rec.cores:
+            if busy[c] is not None or not aq[c] or aq[c][0] is not rec:
                 return False
-        for c in rec.place.cores:
-            self.aq[c].popleft()
-            self.core_busy[c] = rec
-        rec.task.place = rec.place
-        rec.task.t_start = self.now
-        self.running[rec.task.tid] = rec
-        # rate + finish event are set by the caller's _refresh_rates()
+        for c in rec.cores:
+            aq[c].popleft()
+            busy[c] = rec
+        task = rec.task
+        task.place = rec.place
+        task.t_start = self.now
+        self.running[task.tid] = rec
+        self._fresh.append(rec)          # rate + finish set by _refresh_rates
+        if rec.bw_contrib > 0.0:
+            dom = rec.domain
+            d, k = self._demand.get(dom, _NO_DEMAND)
+            self._demand[dom] = (d + rec.bw_contrib, k + 1)
+            self._dirty_domains.add(dom)
         return True
 
     def _dispatch(self):
-        """Run idle cores to fixpoint.  Two-phase, mirroring real stealing
-        latencies: owners pop their local WSQ essentially for free (phase A),
-        while thieves race at a much coarser granularity (phase B).  Core
-        order is shuffled per pass so ties are broken randomly, not by id."""
-        progress = True
-        order = list(range(self.topo.n_cores))
-        while progress:
-            progress = False
-            self.rng.shuffle(order)
+        """Drain the idle-core worklist.  Each round mirrors one pass of the
+        old all-cores fixpoint — phase A: local work (AQ head, then own WSQ);
+        phase B: idle cores with no local work attempt one steal — but only
+        over cores whose state changed.  Round order is shuffled so ties
+        break randomly, not by core id."""
+        dirty = self._dirty
+        busy = self.core_busy
+        aq = self.aq
+        while dirty:
+            batch = sorted(dirty, reverse=True)
+            dirty.clear()
+            if len(batch) > 1:
+                self.rng.shuffle(batch)
             # phase A: local work only (AQ head, then own WSQ)
-            for core in order:
-                if self.core_busy[core] is not None:
+            for c in batch:
+                if busy[c] is not None:
                     continue
-                if self._try_start_aq(core):
-                    progress = True
-                elif not self.aq[core] and self._try_assign_from_wsq(core):
-                    progress = True
-            # phase B: idle cores with empty AQs attempt to steal
-            self.rng.shuffle(order)
-            for core in order:
-                if self.core_busy[core] is not None or self.aq[core]:
+                if self._try_start_aq(c):
                     continue
-                if self._try_start_aq(core):
-                    progress = True
-                elif not self.wsq[core] and self._try_steal(core):
-                    progress = True
+                if not aq[c]:
+                    self._try_assign_from_wsq(c)
+            # phase B: idle cores with empty AQs and WSQs attempt to steal
+            # (re-shuffled, like the pre-refactor fixpoint: steal order must
+            # not correlate with local-work order)
+            if len(batch) > 1:
+                self.rng.shuffle(batch)
+            for c in batch:
+                if busy[c] is not None or aq[c] or len(self.wsq[c]):
+                    continue
+                if not self._try_steal(c):
+                    self._starving.add(c)
 
     # --------------------------------------------------------------- commit
     def _commit(self, rec: _Running):
         task = rec.task
         task.t_end = self.now
-        for c in rec.place.cores:
+        for c in rec.cores:
             self.core_busy[c] = None
+            self._mark(c)
         del self.running[task.tid]
         self._done += 1
         self._outstanding -= 1
+        if rec.bw_contrib > 0.0:
+            dom = rec.domain
+            d, k = self._demand[dom]
+            # pin the total back to exactly zero when the domain drains so
+            # incremental +/- never accumulates float residue
+            self._demand[dom] = _NO_DEMAND if k <= 1 else \
+                (d - rec.bw_contrib, k - 1)
+            self._dirty_domains.add(dom)
 
         # Leader measures and updates the PTT (with measurement noise +
         # heavy-tailed spikes from OS jitter on short tasks).
@@ -306,26 +462,32 @@ class Simulator:
 
         self._dispatch()
         self._refresh_rates()
-        while self._events:
-            ev = heapq.heappop(self._events)
-            if ev.t > self.horizon:
+        events = self._events
+        running = self.running
+        while events:
+            t, _, kind, tid, version = heapq.heappop(events)
+            if t > self.horizon:
                 break
-            if ev.kind == "finish":
-                rec = self.running.get(ev.tid)
-                if rec is None or rec.version != ev.version:
+            if kind == "finish":
+                rec = running.get(tid)
+                if rec is None or rec.version != version:
                     continue                       # stale
-                self._advance(ev.t)
+                self._advance(t)
                 if rec.remaining > 1e-9 * max(rec.rate, 1.0):
                     rec.version += 1               # numeric drift: reschedule
                     self._push_event(self.now + rec.remaining / rec.rate,
-                                     "finish", ev.tid, rec.version)
+                                     "finish", tid, rec.version)
                     continue
                 self._commit(rec)
-            else:                                  # speed / bg / noop
-                self._advance(ev.t)
+            else:                                  # speed / bg breakpoint
+                self._advance(t)
+                if kind == "speed":
+                    self._recompute_speed()
+                elif kind == "bg":
+                    self._recompute_bg()
             self._dispatch()
             self._refresh_rates()
-            if self._outstanding == 0 and not self.running:
+            if self._outstanding == 0 and not running:
                 break
         self.metrics.finish(self.now)
         return self.metrics

@@ -58,16 +58,25 @@ class TaskType:
     # matter in the paper's Fig. 8)
     spike_prob: float = 0.0
     spike_mag: float = 1.0
+    # (kind, width) -> molded duration; cost models are pure so the value is
+    # computed (and validated) once.  Excluded from eq/repr; mutating a dict
+    # inside a frozen dataclass is fine.
+    _dur_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                         repr=False, compare=False)
 
     def duration(self, kind: str, width: int) -> float:
         """Unperturbed molded duration (the DES divides this by the
         time-varying rate)."""
-        if kind not in self.serial_time:
-            raise KeyError(f"{self.name}: no cost for partition kind {kind!r}")
-        eff = self.efficiency(width)
-        if not 0.0 < eff <= 1.5:
-            raise ValueError(f"{self.name}: efficiency({width})={eff} out of (0,1.5]")
-        return self.serial_time[kind] / (width * eff)
+        d = self._dur_cache.get((kind, width))
+        if d is None:
+            if kind not in self.serial_time:
+                raise KeyError(f"{self.name}: no cost for partition kind {kind!r}")
+            eff = self.efficiency(width)
+            if not 0.0 < eff <= 1.5:
+                raise ValueError(f"{self.name}: efficiency({width})={eff} out of (0,1.5]")
+            d = self.serial_time[kind] / (width * eff)
+            self._dur_cache[(kind, width)] = d
+        return d
 
 
 _task_ids = itertools.count()

@@ -1,0 +1,13 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` before jax 0.5;
+the kernels target the new name but must run on the container's pinned
+jax.  Import ``CompilerParams`` from here instead of from
+``jax.experimental.pallas.tpu``.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")

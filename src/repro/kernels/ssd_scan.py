@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk):
     ci = pl.program_id(2)
@@ -88,7 +90,7 @@ def ssd_scan_pallas(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, c_: (b_, h_, c_, 0)),
         out_shape=jax.ShapeDtypeStruct(xt.shape, x.dtype),
         scratch_shapes=[pltpu.VMEM((d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xt, at, b, c)

@@ -1,0 +1,134 @@
+"""Golden-schedule regression tests for the discrete-event engine.
+
+Small seeded runs of all 7 schedulers under combined interference (core-0
+co-runner + a Denver DVFS square wave) with makespan/throughput and the
+full task-placement histogram pinned.  Purpose: any change to the
+simulator/scheduler hot path that alters scheduler-visible behavior —
+queue ordering, steal victim choice, placement search, rate integration —
+shows up here immediately, per scheduler, instead of as a silent drift in
+the paper-figure benchmarks.
+
+The pinned values are from the incremental-dispatch engine; on the same
+workload the pre-refactor scan-everything engine lands within 5% on every
+scheduler (FA/FAM-C to the last digit), and the placement *structure*
+(FA pinned to Denver, DA/DAM families avoiding the interfered core 0,
+DAM-P molding wide) matches the paper's Figs. 4-7 expectations.
+
+If an intentional behavior change shifts these numbers, regenerate with
+``python tests/test_golden_schedule.py``.
+"""
+import json
+
+import pytest
+
+from repro.core import (ALL_SCHEDULERS, SpeedProfile, corun_chain,
+                        make_scheduler, matmul_type, simulate, synthetic_dag,
+                        tx2)
+
+GOLDEN = {
+    "RWS": {
+        "makespan": 0.032919298643,
+        "places": {"(C0,1)": 39, "(C2,1)": 50, "(C3,1)": 40, "(C1,1)": 54,
+                   "(C5,1)": 36, "(C4,1)": 21},
+        "high_places": {"(C2,1)": 25, "(C3,1)": 20, "(C1,1)": 27,
+                        "(C0,1)": 19, "(C5,1)": 18, "(C4,1)": 11},
+    },
+    "RWSM-C": {
+        "makespan": 0.034431414253,
+        "places": {"(C0,1)": 43, "(C2,1)": 39, "(C2,2)": 1, "(C4,1)": 60,
+                   "(C0,2)": 7, "(C4,2)": 21, "(C3,1)": 33, "(C1,1)": 34,
+                   "(C2,4)": 1, "(C5,1)": 1},
+        "high_places": {"(C2,1)": 20, "(C4,1)": 21, "(C0,2)": 3, "(C3,1)": 17,
+                        "(C1,1)": 17, "(C0,1)": 22, "(C5,1)": 1, "(C4,2)": 19},
+    },
+    "FA": {
+        "makespan": 0.036449251282,
+        "places": {"(C0,1)": 120, "(C1,1)": 119, "(C2,1)": 1},
+        "high_places": {"(C0,1)": 60, "(C1,1)": 60},
+    },
+    "FAM-C": {
+        "makespan": 0.036155490674,
+        "places": {"(C0,1)": 104, "(C1,1)": 113, "(C2,1)": 1, "(C0,2)": 16,
+                   "(C3,1)": 1, "(C5,1)": 1, "(C2,2)": 1, "(C4,1)": 1,
+                   "(C4,2)": 1, "(C2,4)": 1},
+        "high_places": {"(C0,1)": 52, "(C1,1)": 60, "(C0,2)": 8},
+    },
+    "DA": {
+        "makespan": 0.013368136306,
+        "places": {"(C0,1)": 30, "(C2,1)": 24, "(C1,1)": 117, "(C5,1)": 24,
+                   "(C4,1)": 23, "(C3,1)": 22},
+        "high_places": {"(C2,1)": 1, "(C1,1)": 114, "(C5,1)": 1, "(C4,1)": 1,
+                        "(C3,1)": 1, "(C0,1)": 2},
+    },
+    "DAM-C": {
+        "makespan": 0.016532781546,
+        "places": {"(C0,1)": 21, "(C2,1)": 23, "(C1,1)": 114, "(C0,2)": 10,
+                   "(C2,2)": 1, "(C3,1)": 25, "(C4,1)": 21, "(C2,4)": 1,
+                   "(C5,1)": 22, "(C4,2)": 2},
+        "high_places": {"(C2,1)": 1, "(C1,1)": 113, "(C3,1)": 1, "(C4,1)": 1,
+                        "(C5,1)": 1, "(C4,2)": 1, "(C0,2)": 1, "(C0,1)": 1},
+    },
+    "DAM-P": {
+        "makespan": 0.018024604741,
+        "places": {"(C0,1)": 19, "(C2,1)": 17, "(C1,1)": 88, "(C0,2)": 23,
+                   "(C2,2)": 6, "(C3,1)": 16, "(C4,1)": 20, "(C2,4)": 31,
+                   "(C5,1)": 18, "(C4,2)": 2},
+        "high_places": {"(C2,1)": 1, "(C1,1)": 71, "(C3,1)": 1, "(C4,1)": 1,
+                        "(C5,1)": 1, "(C4,2)": 1, "(C0,2)": 9, "(C2,2)": 5,
+                        "(C2,4)": 30},
+    },
+}
+
+N_TASKS = 240
+
+
+def _golden_run(name):
+    sched = make_scheduler(name, tx2(), seed=7)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=2, total_tasks=N_TASKS)
+    speed = SpeedProfile(6).add_square_wave((0, 1), period=0.004, lo=0.17,
+                                            t_end=0.2)
+    return simulate(dag, sched, background=[corun_chain(tt, core=0)],
+                    speed=speed)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_golden_makespan_and_throughput(name):
+    m = _golden_run(name)
+    assert m.n_tasks == N_TASKS
+    want = GOLDEN[name]["makespan"]
+    assert m.makespan == pytest.approx(want, rel=1e-9), name
+    assert m.throughput == pytest.approx(N_TASKS / want, rel=1e-9), name
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_golden_placement_histogram(name):
+    m = _golden_run(name)
+    assert m.placement_counts() == GOLDEN[name]["places"], name
+    assert m.placement_counts(priority=1) == GOLDEN[name]["high_places"], name
+
+
+def test_golden_structure_matches_paper():
+    """Scheduler-family sanity independent of exact pins: FA binds HIGH to
+    the static-fast Denver cores; the dynamic families route HIGH work away
+    from the interfered core 0; DAM-P (performance) molds wider than DAM-C
+    (cost)."""
+    assert set(GOLDEN["FA"]["high_places"]) == {"(C0,1)", "(C1,1)"}
+    for fam in ("DA", "DAM-C"):
+        high = GOLDEN[fam]["high_places"]
+        on_c0 = sum(v for k, v in high.items() if k.startswith("(C0"))
+        assert on_c0 / sum(high.values()) < 0.05, fam
+    wide = lambda h: sum(v for k, v in h.items() if k.endswith(",4)"))
+    assert wide(GOLDEN["DAM-P"]["places"]) > wide(GOLDEN["DAM-C"]["places"])
+
+
+if __name__ == "__main__":                       # regenerate the pins
+    out = {}
+    for sched_name in ALL_SCHEDULERS:
+        m = _golden_run(sched_name)
+        out[sched_name] = {
+            "makespan": round(m.makespan, 12),
+            "places": m.placement_counts(),
+            "high_places": m.placement_counts(priority=1),
+        }
+    print(json.dumps(out, indent=2))

@@ -1,6 +1,7 @@
 """Topology / execution-place invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _ht import given, settings, st
 
 from repro.core import (ExecutionPlace, ResourcePartition, Topology, haswell,
                         haswell_cluster, tpu_pod_slices, tx2)

@@ -1,7 +1,8 @@
 """PTT unit + property tests (paper §4.1.1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _ht import given, settings, st
 
 from repro.core import ExecutionPlace, PTT, PTTBank, tx2
 
@@ -72,6 +73,30 @@ def test_invalid_place_rejected():
         ptt.update(ExecutionPlace(0, 4), 1.0)      # width 4 invalid on denver
     with pytest.raises(ValueError):
         ptt.update(ExecutionPlace(0, 1), float("nan"))
+
+
+def test_vectorized_searches_agree_with_generic_best():
+    """The masked-argmin searches must keep the exact semantics of the
+    generic ``best`` path (value, then width, then the same random draw)
+    on every candidate set, explored or not."""
+    import random
+
+    topo = tx2()
+    ptt = PTT(topo)
+    rng = random.Random(0)
+    for step in range(60):
+        cands = list(topo.places())
+        for cost in (True, False):
+            assert ptt.global_search(cost=cost) == ptt.best(cands, cost=cost)
+            r1, r2 = random.Random(step), random.Random(step)
+            assert ptt.global_search(cost=cost, rng=r1) == \
+                ptt.best(cands, cost=cost, rng=r2)
+        core = rng.randrange(topo.n_cores)
+        assert ptt.local_search(core) == \
+            ptt.best(topo.local_places(core), cost=True)
+        assert ptt.width1_search() == \
+            ptt.best([p for p in cands if p.width == 1], cost=False)
+        ptt.update(cands[rng.randrange(len(cands))], rng.uniform(0.5, 2.0))
 
 
 def test_bank_one_table_per_type():

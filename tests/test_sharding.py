@@ -71,7 +71,10 @@ SUBPROCESS_DRYRUN = textwrap.dedent("""
     with mesh, sharding_ctx(mesh):
         c = jax.jit(step, in_shardings=to_named((p_spec, o_spec, b_spec), mesh)
                     ).lower(p_shape, opt_shape, batch).compile()
-    results["train_flops"] = c.cost_analysis().get("flops", 0.0)
+    ca = c.cost_analysis()          # dict (jax>=0.5) or list of dicts (older)
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else dict()
+    results["train_flops"] = ca.get("flops", 0.0)
 
     # decode step
     st_shape = jax.eval_shape(lambda: init_decode_state(cfg, 8, 64))

@@ -49,6 +49,26 @@ def test_no_time_travel_and_no_overlap():
             assert s2 >= e1 - 1e-9          # no core runs two tasks at once
 
 
+def test_noncanonical_flags_respect_may_steal():
+    """A scheduler outside the 7 canonical configs (no priority dequeue AND
+    no HIGH stealing) must still honor may_steal: HIGH tasks execute exactly
+    at their binding decision (a steal would have cleared/changed it)."""
+    import random
+
+    from repro.core import PTTBank
+    from repro.core.schedulers import Scheduler
+
+    topo = tx2()
+    sched = Scheduler("X", topo, PTTBank(topo), random.Random(5),
+                      dynamic=True, priority_dequeue=False, steal_high=False)
+    dag = synthetic_dag(matmul_type(64), parallelism=4, total_tasks=400)
+    m = simulate(dag, sched)
+    assert m.n_tasks == 400
+    for t in dag.all_tasks():
+        if t.priority == 1:
+            assert t.bound_place is not None and t.place == t.bound_place
+
+
 def test_corun_interference_ordering():
     """Paper Fig. 4: dynamic schedulers > fixed > random under co-running
     interference, and DA-family avoids the interfered core."""
