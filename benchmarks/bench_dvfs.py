@@ -1,40 +1,56 @@
 """Paper Fig. 7: DVFS interference — the Denver cluster alternates between
-2035 MHz and 345 MHz with a 10 s period (5 s + 5 s)."""
+2035 MHz and 345 MHz with a 10 s period (5 s + 5 s).
+
+Paper-faithful sizes by default (matmul 32000 / copy 10000 / stencil
+20000); ``--fast`` keeps the old CI sizes.  The grid runs through the
+multi-run engine (see bench_interference.py).
+"""
 from __future__ import annotations
 
-from repro.core import (ALL_SCHEDULERS, copy_type, dvfs_denver,
-                        make_scheduler, matmul_type, simulate, stencil_type,
-                        synthetic_dag, tx2)
+from repro.core import ALL_SCHEDULERS, RunSpec, run_cells
 
 from .common import emit, write_artifact
 
 KERNELS = {
-    "matmul": (matmul_type(64), 16000),   # paper: 32000 (halved: same dynamics, 2x faster CI)
-    "copy": (copy_type(1024), 6000),      # paper: 10000
-    "stencil": (stencil_type(1024), 10000),  # paper: 20000
+    "matmul": (("matmul", {"tile": 64}), 32000, 2000),
+    "copy": (("copy", {"tile": 1024}), 10000, 750),
+    "stencil": (("stencil", {"tile": 1024}), 20000, 1250),
 }
 
 
-def run(fast: bool = False) -> dict:
-    out: dict = {}
-    kernels = KERNELS if not fast else {
-        k: (t, n // 8) for k, (t, n) in KERNELS.items()}
-    par = (2, 3, 4, 5, 6) if not fast else (2, 6)
-    for kname, (tt, total) in kernels.items():
+def _parallelism(fast: bool) -> tuple[int, ...]:
+    return (2, 3, 4, 5, 6) if not fast else (2, 6)
+
+
+def grid(fast: bool = False) -> list[RunSpec]:
+    par = _parallelism(fast)
+    specs = []
+    for kname, (tt, full, ci) in KERNELS.items():
+        total = ci if fast else full
         for p in par:
             for name in ALL_SCHEDULERS:
-                sched = make_scheduler(name, tx2(), seed=1)
-                dag = synthetic_dag(tt, parallelism=p, total_tasks=total)
-                m = simulate(dag, sched, speed=dvfs_denver())
-                out[f"fig7/{kname}/P{p}/{name}"] = m.throughput
-                emit(f"fig7/{kname}/P{p}/{name}", round(m.throughput, 1),
-                     "tasks_per_s")
+                specs.append(RunSpec(
+                    key=f"fig7/{kname}/P{p}/{name}",
+                    dag=("synthetic", {"task_type": tt, "parallelism": p,
+                                       "total_tasks": total}),
+                    scheduler=name,
+                    topology=("tx2", {}),
+                    seed=1,
+                    speed=("dvfs_denver", {}),
+                ))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    par = _parallelism(fast)
+    results = run_cells(grid(fast), workers=workers)
+    out = {key: res["throughput_tps"] for key, res in results.items()}
+    for key, v in out.items():
+        emit(key, round(v, 1), "tasks_per_s")
     # paper: for copy, DAM-C ~2.2x RWS / 1.9x RWSM-C average across P
-    for kname in kernels:
-        ratios = []
-        for p in par:
-            ratios.append(out[f"fig7/{kname}/P{p}/DAM-P"] /
-                          out[f"fig7/{kname}/P{p}/RWS"])
+    for kname in KERNELS:
+        ratios = [out[f"fig7/{kname}/P{p}/DAM-P"] /
+                  out[f"fig7/{kname}/P{p}/RWS"] for p in par]
         emit(f"fig7/{kname}/DAM-P_vs_RWS_avg",
              round(sum(ratios) / len(ratios), 2),
              "paper(copy): ~2.2x")

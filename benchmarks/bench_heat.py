@@ -11,8 +11,8 @@ from .common import emit, write_artifact
 SCHEDULERS = ("RWS", "RWSM-C", "DA", "DAM-C", "DAM-P")
 
 
-def run(fast: bool = False) -> dict:
-    out: dict = {}
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    out: dict = {}                 # workers: unused (5 serial runs)
     iters = 20 if fast else 60
     topo = haswell_cluster(4, 2, 10)
     for name in SCHEDULERS:

@@ -1,45 +1,60 @@
 """Paper Fig. 4: throughput of all 7 schedulers under a co-running
 application, DAG parallelism 2..6, for the matmul/copy/stencil DAGs.
 
-Paper-faithful sizes: matmul 32000 tasks (tile 64), copy 10000 (tile 1024),
-stencil 20000 (tile 1024); co-runner = single chain of the same kernel
-pinned to core 0 (CPU interference for matmul/stencil, memory interference
-for copy), persisting for the whole run.
+Paper-faithful sizes (the default): matmul 32000 tasks (tile 64), copy
+10000 (tile 1024), stencil 20000 (tile 1024); co-runner = single chain of
+the same kernel pinned to core 0 (CPU interference for matmul/stencil,
+memory interference for copy), persisting for the whole run.  ``--fast``
+keeps the old CI sizes (2000/750/1250).
+
+The (kernel x parallelism x scheduler) grid — 105 independent seeded runs
+at full size — is fanned across host cores by the multi-run engine;
+per-cell results are bit-identical for any worker count.
 """
 from __future__ import annotations
 
-from repro.core import (ALL_SCHEDULERS, copy_type, corun_chain,
-                        make_scheduler, matmul_type, simulate, stencil_type,
-                        synthetic_dag, tx2)
+from repro.core import ALL_SCHEDULERS, RunSpec, run_cells
 
 from .common import emit, write_artifact
 
+# kernel -> (task-type spec, paper-full tasks, CI-fast tasks)
 KERNELS = {
-    "matmul": (matmul_type(64), 16000),   # paper: 32000 (halved: same dynamics, 2x faster CI)
-    "copy": (copy_type(1024), 6000),      # paper: 10000
-    "stencil": (stencil_type(1024), 10000),  # paper: 20000
+    "matmul": (("matmul", {"tile": 64}), 32000, 2000),
+    "copy": (("copy", {"tile": 1024}), 10000, 750),
+    "stencil": (("stencil", {"tile": 1024}), 20000, 1250),
 }
 PARALLELISM = (2, 3, 4, 5, 6)
 
 
-def run(fast: bool = False) -> dict:
-    out: dict = {}
-    kernels = KERNELS if not fast else {
-        k: (t, n // 8) for k, (t, n) in KERNELS.items()}
+def grid(fast: bool = False) -> list[RunSpec]:
     par = PARALLELISM if not fast else (2, 4, 6)
-    for kname, (tt, total) in kernels.items():
+    specs = []
+    for kname, (tt, full, ci) in KERNELS.items():
+        total = ci if fast else full
         for p in par:
             for sched_name in ALL_SCHEDULERS:
-                sched = make_scheduler(sched_name, tx2(), seed=1)
-                dag = synthetic_dag(tt, parallelism=p, total_tasks=total)
-                m = simulate(dag, sched,
-                             background=[corun_chain(tt, core=0)])
-                key = f"fig4/{kname}/P{p}/{sched_name}"
-                out[key] = {"throughput_tps": m.throughput,
-                            "makespan_s": m.makespan}
-                emit(key, round(m.throughput, 1), "tasks_per_s")
+                specs.append(RunSpec(
+                    key=f"fig4/{kname}/P{p}/{sched_name}",
+                    dag=("synthetic", {"task_type": tt, "parallelism": p,
+                                       "total_tasks": total}),
+                    scheduler=sched_name,
+                    topology=("tx2", {}),
+                    seed=1,
+                    background=(("chain", {"task_type": tt, "core": 0}),),
+                ))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    specs = grid(fast)
+    results = run_cells(specs, workers=workers)
+    out: dict = {}
+    for key, res in results.items():
+        out[key] = {"throughput_tps": res["throughput_tps"],
+                    "makespan_s": res["makespan_s"]}
+        emit(key, round(res["throughput_tps"], 1), "tasks_per_s")
     # paper headline ratios at the most contended point
-    for kname in kernels:
+    for kname in KERNELS:
         base = out[f"fig4/{kname}/P2/RWS"]["throughput_tps"]
         fa = out[f"fig4/{kname}/P2/FA"]["throughput_tps"]
         dam = out[f"fig4/{kname}/P2/DAM-C"]["throughput_tps"]

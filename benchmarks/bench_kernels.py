@@ -30,8 +30,8 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(fast: bool = False) -> dict:
-    out = {}
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    out = {}                       # workers: unused (single-process suite)
     k = jax.random.PRNGKey(0)
 
     a = jax.random.normal(k, (512, 512))

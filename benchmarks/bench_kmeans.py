@@ -14,8 +14,8 @@ SCHEDULERS = ("RWS", "RWSM-C", "DA", "DAM-C", "DAM-P")   # FA dropped: no
 #                                      static asymmetry on Haswell (paper)
 
 
-def run(fast: bool = False) -> dict:
-    out: dict = {}
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    out: dict = {}                 # workers: unused (5 serial runs)
     iters = 30 if fast else 70
     topo = haswell(2, 8)
     for name in SCHEDULERS:

@@ -21,8 +21,8 @@ def load_cells() -> list[dict]:
     return cells
 
 
-def run(fast: bool = False) -> dict:
-    cells = load_cells()
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    cells = load_cells()           # workers: unused (artifact reader)
     if not cells:
         emit("roofline/NO_ARTIFACTS", 0,
              "run python -m repro.launch.dryrun --all --mesh both first")

@@ -9,65 +9,81 @@ the headline cell is the Fig. 4 acceptance workload (matmul / P4 / DAM-C /
 ``haswell`` sweeps demonstrate the headroom on larger topologies where the
 old all-cores fixpoint scaled worst.
 
-Emits ``name,value,derived`` CSV rows and a ``BENCH_sched.json`` artifact.
+The sweep cells run through the multi-run engine (each worker times its
+own ``simulate`` call; with ``workers>1`` those wall numbers include host
+contention, which is fine for breadth cells).  The headline is always
+measured serially in-process — one untimed warmup + best-of-5 — so the
+trajectory number is never polluted by sibling workers.
+
+Emits ``name,value,derived`` CSV rows and a ``BENCH_sched.json`` artifact,
+which is also mirrored to the repo root for the perf-trajectory tracker.
 """
 from __future__ import annotations
 
-import time
+from repro.core import ALL_SCHEDULERS, RunSpec, run_cell, run_cells
 
-from repro.core import (ALL_SCHEDULERS, corun_chain, haswell, make_scheduler,
-                        matmul_type, simulate, synthetic_dag, tx2, tx2_xl)
+from .common import emit, write_artifact
 
-from .common import Timer, emit, write_artifact
-
-# (workload name, topology factory, parallelism, total tasks, bg cores);
+# (workload name, topology spec, parallelism, total tasks, bg cores);
 # the emitted key carries the *actual* task count so --fast (halved) runs
 # never alias full-size trajectory cells
 WORKLOADS = (
-    ("tx2/P4", tx2, 4, 2000, (0,)),
-    ("tx2_xl4/P16", lambda: tx2_xl(4), 16, 8000, (0, 6)),
-    ("haswell/P10", haswell, 10, 6000, (0,)),
+    ("tx2/P4", ("tx2", {}), 4, 2000, (0,)),
+    ("tx2_xl4/P16", ("tx2_xl", {"clusters": 4}), 16, 8000, (0, 6)),
+    ("haswell/P10", ("haswell", {}), 10, 6000, (0,)),
 )
 
-
-def _bench(topo_factory, parallelism, total, bg_cores, sched_name,
-           *, seed: int = 1) -> dict:
-    tt = matmul_type(64)
-    sched = make_scheduler(sched_name, topo_factory(), seed=seed)
-    dag = synthetic_dag(tt, parallelism=parallelism, total_tasks=total)
-    bg = [corun_chain(tt, core=c) for c in bg_cores]
-    with Timer() as t:
-        m = simulate(dag, sched, background=bg)
-    assert m.n_tasks == total, (sched_name, m.n_tasks)
-    return {
-        "wall_s": round(t.s, 4),
-        "sim_tasks_per_s": round(m.n_tasks / t.s, 1),
-        "throughput_tps": round(m.throughput, 1),
-        "makespan_s": round(m.makespan, 6),
-    }
+_TT = ("matmul", {"tile": 64})
 
 
-def run(fast: bool = False) -> dict:
+def _spec(key, topo_spec, parallelism, total, bg_cores, sched_name, *,
+          seed: int = 1) -> RunSpec:
+    return RunSpec(
+        key=key,
+        dag=("synthetic", {"task_type": _TT, "parallelism": parallelism,
+                           "total_tasks": total}),
+        scheduler=sched_name,
+        topology=topo_spec,
+        seed=seed,
+        background=tuple(("chain", {"task_type": _TT, "core": c})
+                         for c in bg_cores),
+        measure_wall=True,
+    )
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
     out: dict = {}
     workloads = WORKLOADS if not fast else WORKLOADS[:1]
     scheds = ALL_SCHEDULERS if not fast else ("RWS", "FA", "DAM-C")
-    for wname, topo_factory, p, total, bg in workloads:
+    specs, expected = [], {}
+    for wname, topo_spec, p, total, bg in workloads:
         n = total if not fast else total // 2
         for sched_name in scheds:
-            res = _bench(topo_factory, p, n, bg, sched_name)
             key = f"sched_throughput/{wname}/{n // 1000}k/{sched_name}"
-            out[key] = res
-            emit(key, res["sim_tasks_per_s"], "sim_tasks_per_wall_s")
+            specs.append(_spec(key, topo_spec, p, n, bg, sched_name))
+            expected[key] = n
+    for key, res in run_cells(specs, workers=workers).items():
+        assert res["n_tasks"] == expected[key], key
+        out[key] = {k: res[k] for k in
+                    ("wall_s", "sim_tasks_per_s", "throughput_tps")}
+        out[key]["makespan_s"] = round(res["makespan_s"], 6)
+        emit(key, res["sim_tasks_per_s"], "sim_tasks_per_wall_s")
     # headline: the acceptance-criterion cell (full size even under --fast).
-    # One untimed warmup + best-of-5 so interpreter/numpy cold-start and
-    # machine jitter (shared CI hosts) don't pollute the trajectory number.
-    _bench(tx2, 4, 500, (0,), "DAM-C")
-    headline = max((_bench(tx2, 4, 2000, (0,), "DAM-C") for _ in range(5)),
+    # One untimed warmup + best-of-5, serial and in-process, so
+    # interpreter/numpy cold-start, machine jitter, and sibling sweep
+    # workers don't pollute the trajectory number.
+    tx2_spec = ("tx2", {})
+    run_cell(_spec("warmup", tx2_spec, 4, 500, (0,), "DAM-C"))
+    headline = max((run_cell(_spec("headline", tx2_spec, 4, 2000, (0,),
+                                   "DAM-C")) for _ in range(5)),
                    key=lambda r: r["sim_tasks_per_s"])
+    headline = {k: headline[k] for k in
+                ("wall_s", "sim_tasks_per_s", "throughput_tps")} | {
+                    "makespan_s": round(headline["makespan_s"], 6)}
     out["headline/fig4_matmul_P4_DAM-C_2k"] = headline
     emit("sched_throughput/headline/DAM-C", headline["sim_tasks_per_s"],
          "acceptance: >=5x seed (seed engine: ~2.9k)")
-    write_artifact("BENCH_sched", out)
+    write_artifact("BENCH_sched", out, root_copy=True)
     return out
 
 

@@ -1,10 +1,12 @@
 """Paper Fig. 8: sensitivity to the PTT update weight ratio (1/5..4/5) and
 to the matmul tile size (32/64/80/96).  The paper finds the ratio matters
-only for tile 32 (noisy ~10 us tasks), with 1/5 best, and selects 1:4."""
+only for tile 32 (noisy ~10 us tasks), with 1/5 best, and selects 1:4.
+
+The 16-cell (tile x weight) grid runs through the multi-run engine.
+"""
 from __future__ import annotations
 
-from repro.core import (corun_chain, make_scheduler, matmul_type, simulate,
-                        synthetic_dag, tx2)
+from repro.core import RunSpec, run_cells
 
 from .common import emit, write_artifact
 
@@ -12,19 +14,31 @@ TILES = (32, 64, 80, 96)
 WEIGHTS = ((1, 4), (2, 3), (3, 2), (4, 1))      # new:old
 
 
-def run(fast: bool = False) -> dict:
-    out: dict = {}
+def grid(fast: bool = False) -> list[RunSpec]:
     total = 4000 if fast else 12000
+    specs = []
     for tile in TILES:
-        tt = matmul_type(tile)
+        tt = ("matmul", {"tile": tile})
         for new_w, old_w in WEIGHTS:
-            sched = make_scheduler("DAM-C", tx2(), seed=1,
-                                   ptt_new_weight=new_w, ptt_old_weight=old_w)
-            dag = synthetic_dag(tt, parallelism=2, total_tasks=total)
-            m = simulate(dag, sched, background=[corun_chain(tt, core=0)])
-            key = f"fig8/tile{tile}/w{new_w}_{new_w + old_w}"
-            out[key] = m.throughput
-            emit(key, round(m.throughput, 1), "tasks_per_s")
+            specs.append(RunSpec(
+                key=f"fig8/tile{tile}/w{new_w}_{new_w + old_w}",
+                dag=("synthetic", {"task_type": tt, "parallelism": 2,
+                                   "total_tasks": total}),
+                scheduler="DAM-C",
+                topology=("tx2", {}),
+                seed=1,
+                sched_kwargs={"ptt_new_weight": new_w,
+                              "ptt_old_weight": old_w},
+                background=(("chain", {"task_type": tt, "core": 0}),),
+            ))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    results = run_cells(grid(fast), workers=workers)
+    out = {key: res["throughput_tps"] for key, res in results.items()}
+    for key, v in out.items():
+        emit(key, round(v, 1), "tasks_per_s")
     for tile in TILES:
         vals = [out[f"fig8/tile{tile}/w{n}_{n + o}"] for n, o in WEIGHTS]
         spread = (max(vals) - min(vals)) / max(vals)

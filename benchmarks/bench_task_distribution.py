@@ -1,23 +1,35 @@
 """Paper Fig. 5 + Fig. 6: distribution of priority tasks over execution
 places and cumulative per-core work time, matmul DAG parallelism 2 with a
-co-runner on Denver core 0 (50% of tasks are critical)."""
+co-runner on Denver core 0 (50% of tasks are critical).
+
+Runs through the multi-run engine using the priority-placement and
+per-core-worktime collectors (7 cells, one per scheduler).
+"""
 from __future__ import annotations
 
-from repro.core import (ALL_SCHEDULERS, corun_chain, make_scheduler,
-                        matmul_type, simulate, synthetic_dag, tx2)
+from repro.core import ALL_SCHEDULERS, RunSpec, run_cells
 
 from .common import emit, write_artifact
 
+_TT = ("matmul", {"tile": 64})
 
-def run(fast: bool = False) -> dict:
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
     total = 4000 if fast else 16000   # paper: 32000
+    specs = [RunSpec(
+        key=name,
+        dag=("synthetic", {"task_type": _TT, "parallelism": 2,
+                           "total_tasks": total}),
+        scheduler=name,
+        topology=("tx2", {}),
+        seed=1,
+        background=(("chain", {"task_type": _TT, "core": 0}),),
+        collect=("priority_placement", "per_core_worktime_s"),
+    ) for name in ALL_SCHEDULERS]
     out: dict = {}
-    for name in ALL_SCHEDULERS:
-        sched = make_scheduler(name, tx2(), seed=1)
-        dag = synthetic_dag(matmul_type(64), parallelism=2, total_tasks=total)
-        m = simulate(dag, sched, background=[corun_chain(matmul_type(64), 0)])
-        pp = m.priority_placement()
-        wt = m.per_core_worktime()
+    for name, res in run_cells(specs, workers=workers).items():
+        pp = res["priority_placement"]
+        wt = res["per_core_worktime_s"]
         out[name] = {"priority_placement": pp, "per_core_worktime_s": wt}
         on_c0 = sum(v for k, v in pp.items() if k.startswith("(C0"))
         top = max(pp.items(), key=lambda kv: kv[1]) if pp else ("-", 0)

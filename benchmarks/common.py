@@ -3,9 +3,11 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # set by ``begin_suite`` (the orchestrator) so artifacts can self-report how
 # much wall time their suite burned — perf regressions of the harness itself
@@ -20,7 +22,28 @@ def begin_suite(name: str) -> None:
     _suite_t0 = time.perf_counter()
 
 
-def write_artifact(name: str, payload) -> str:
+def _atomic_write_json(path: str, payload) -> None:
+    """Write-temp-then-rename so concurrent writers (parallel suite
+    workers, a reader mid-``make bench``) never observe partial JSON."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=os.path.basename(path) + ".tmp.")
+    try:
+        os.fchmod(fd, 0o644)                   # mkstemp defaults to 0600
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        os.replace(tmp, path)                  # atomic on POSIX
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def write_artifact(name: str, payload, *, root_copy: bool = False) -> str:
+    """Write ``artifacts/<name>.json`` atomically.  ``root_copy=True`` also
+    mirrors it to ``<repo root>/<name>.json`` (the perf-trajectory tracker
+    reads headline artifacts from the repo root, e.g. BENCH_sched.json)."""
     os.makedirs(ART_DIR, exist_ok=True)
     if isinstance(payload, dict) and _suite_name is not None:
         payload = dict(payload)
@@ -29,20 +52,12 @@ def write_artifact(name: str, payload) -> str:
             "suite_wall_s": round(time.perf_counter() - _suite_t0, 2),
         }
     path = os.path.join(ART_DIR, name + ".json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=str)
+    _atomic_write_json(path, payload)
+    if root_copy:
+        _atomic_write_json(os.path.join(REPO_ROOT, name + ".json"), payload)
     return path
 
 
 def emit(name: str, value, derived: str = "") -> None:
     """CSV row: name,value,derived."""
     print(f"{name},{value},{derived}")
-
-
-class Timer:
-    def __enter__(self):
-        self.t0 = time.perf_counter()
-        return self
-
-    def __exit__(self, *a):
-        self.s = time.perf_counter() - self.t0

@@ -1,13 +1,22 @@
 """Benchmark orchestrator — one harness per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,fig7,...]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--workers N] [--only fig4,fig7,...]
 
 Prints ``name,value,derived`` CSV rows; JSON artifacts land in
 benchmarks/artifacts/ (each artifact self-reports its suite's wall time
-under ``_meta``).  The roofline section reads the dry-run artifacts
-(produce them with ``python -m repro.launch.dryrun --all --mesh both``).
+under ``_meta``).  The grid suites (fig4/fig7/fig8/sched) fan their cells
+across ``--workers`` processes via the multi-run engine
+(``repro.core.multirun``); the default uses every host core, ``--workers 1``
+runs serially with bit-identical per-cell results.  Full paper sizes are
+the default; ``--fast`` drops to CI sizes.  The roofline section reads the
+dry-run artifacts (produce them with ``python -m repro.launch.dryrun --all
+--mesh both``).
 
-``make check`` runs the smoke subset (fig4 + kernels) plus the test suite.
+Running the ``sched`` suite also refreshes the repo-root ``BENCH_sched.json``
+headline artifact that the perf-trajectory tracker reads.
+
+``make check`` runs the smoke subset (fig4 + kernels, 2 workers) plus the
+test suite.
 """
 from __future__ import annotations
 
@@ -35,7 +44,11 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="reduced task counts (CI-speed)")
+                    help="reduced task counts (CI-speed); default is "
+                         "paper-full sizes")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="processes for the grid suites (default: all host "
+                         "cores; 1 = serial in-process)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
     args = ap.parse_args()
@@ -49,7 +62,7 @@ def main() -> None:
     for name in names:
         t = time.time()
         common.begin_suite(name)
-        SUITES[name](fast=args.fast)
+        SUITES[name](fast=args.fast, workers=args.workers)
         print(f"suite/{name}/elapsed_s,{time.time() - t:.1f},")
     print(f"suite/total_elapsed_s,{time.time() - t0:.1f},")
 

@@ -8,6 +8,7 @@ Public surface:
   schedulers  — RWS, RWSM-C, FA, FAM-C, DA, DAM-C, DAM-P (Algorithm 1)
   interference— co-running apps + DVFS speed profiles
   simulator   — discrete-event engine (paper-scale evaluation)
+  multirun    — batched multi-run engine (sweeps fanned across host cores)
   runtime     — threaded executor running real payloads (JAX kernels)
   metrics     — throughput / placement / worktime aggregation
 """
@@ -15,6 +16,7 @@ from .dag import DAG, chain_dag, heat_dag, kmeans_dag, synthetic_dag
 from .interference import (BackgroundApp, SpeedProfile, corun_chain,
                            corun_socket, dvfs_denver)
 from .metrics import RunMetrics, TaskRecord
+from .multirun import RunSpec, default_workers, run_cell, run_cells
 from .places import ExecutionPlace, ResourcePartition, Topology, haswell, \
     haswell_cluster, tpu_pod_slices, tx2, tx2_xl
 from .ptt import PTT, PTTBank
@@ -32,6 +34,7 @@ __all__ = [
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
     "tpu_pod_slices", "tx2", "tx2_xl", "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
+    "RunSpec", "default_workers", "run_cell", "run_cells",
     "Simulator", "simulate", "Priority", "Task", "TaskType", "copy_type",
     "kmeans_map_type", "kmeans_reduce_type", "matmul_type",
     "mpi_exchange_type", "stencil_type",

@@ -1,0 +1,267 @@
+"""Batched multi-run DES engine: sweep-level parallelism across host cores.
+
+The paper's headline results are *grids* of independent discrete-event
+runs — Fig. 4 is (3 kernels x 5 parallelism x 7 schedulers) cells, Fig. 8
+is (4 tiles x 4 PTT weights), the sensitivity and throughput sweeps add
+seeds and topologies on top.  A single run was made ~6x faster by the
+incremental-dispatch engine; this module makes the *sweep* scale with the
+host by fanning cells across a ``multiprocessing`` pool.
+
+Design rules
+------------
+* **Declarative, spawn-safe specs.**  A :class:`RunSpec` cell names
+  registry entries (task types, DAG builders, topologies, background
+  apps, speed profiles) plus plain-data kwargs, so the whole grid is
+  picklable under the ``spawn`` start method: no live ``Topology`` /
+  ``random.Random`` / lambda objects ever cross the process boundary.
+  ``spawn`` is used unconditionally (never ``fork``) so results cannot
+  depend on parent-process state and the engine behaves identically on
+  every platform.
+* **Deterministic per-cell seeding.**  Every cell carries its own seed
+  and is rebuilt from scratch inside whichever process runs it, so
+  results are bit-identical for any ``workers`` value — including the
+  in-process ``workers=1`` path — and any chunk layout.  (Global counters
+  such as ``Task.tid`` differ between processes, but nothing in the
+  engine's behavior depends on absolute tid values.)
+* **Chunked distribution.**  Cells are handed to the pool in contiguous
+  chunks (``len/(workers*4)`` by default) so a 100+-cell grid amortizes
+  IPC without serializing the tail onto one worker.
+* **Compact results.**  Workers reduce each :class:`~.metrics.RunMetrics`
+  to a plain dict (makespan/throughput + requested collectors), so a
+  32k-task run ships a few hundred bytes back, not 32k ``TaskRecord``\\ s.
+
+The benchmark harnesses (``benchmarks/bench_interference.py`` etc.) build
+their grids out of these specs; see ``benchmarks/README.md`` for the
+worker/seed semantics contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from multiprocessing import get_context
+from typing import Iterable, Optional, Sequence
+
+from .dag import DAG, heat_dag, kmeans_dag, synthetic_dag
+from .interference import (BackgroundApp, SpeedProfile, corun_chain,
+                           corun_socket, dvfs_denver)
+from .metrics import RunMetrics
+from .places import (Topology, haswell, haswell_cluster, tpu_pod_slices, tx2,
+                     tx2_xl)
+from .schedulers import make_scheduler
+from .simulator import simulate
+from .task import (TaskType, copy_type, kmeans_map_type, kmeans_reduce_type,
+                   matmul_type, mpi_exchange_type, stencil_type)
+
+# --------------------------------------------------------------------------
+# Registries: every name a RunSpec may reference.  Specs are (name, kwargs)
+# pairs; builders are looked up here inside the worker process.
+# --------------------------------------------------------------------------
+
+TASK_TYPES = {
+    "matmul": matmul_type,
+    "copy": copy_type,
+    "stencil": stencil_type,
+    "mpi_exchange": mpi_exchange_type,
+    "kmeans_map": kmeans_map_type,
+    "kmeans_reduce": kmeans_reduce_type,
+}
+
+TOPOLOGIES = {
+    "tx2": tx2,
+    "tx2_xl": tx2_xl,
+    "haswell": haswell,
+    "haswell_cluster": haswell_cluster,
+    "tpu_pod_slices": tpu_pod_slices,
+}
+
+
+def _synthetic(task_type: TaskType, **kw) -> DAG:
+    return synthetic_dag(task_type, **kw)
+
+
+def _heat(task_type=None, **kw) -> DAG:          # heat builds its own types
+    return heat_dag(**kw)
+
+
+def _kmeans(task_type=None, **kw) -> DAG:
+    return kmeans_dag(**kw)
+
+
+DAG_BUILDERS = {
+    "synthetic": _synthetic,
+    "heat": _heat,
+    "kmeans": _kmeans,
+}
+
+
+def _bg_chain(task_type: TaskType, **kw) -> BackgroundApp:
+    return corun_chain(task_type, **kw)
+
+
+def _bg_socket(task_type: TaskType, cores: Sequence[int], **kw) -> BackgroundApp:
+    return corun_socket(task_type, tuple(cores), **kw)
+
+
+BACKGROUND_BUILDERS = {
+    "chain": _bg_chain,
+    "socket": _bg_socket,
+}
+
+
+def _speed_dvfs_denver(n_cores: int, **kw) -> SpeedProfile:
+    return dvfs_denver(n_cores=n_cores, **kw)
+
+
+def _speed_square_wave(n_cores: int, cores: Sequence[int], **kw) -> SpeedProfile:
+    return SpeedProfile(n_cores).add_square_wave(tuple(cores), **kw)
+
+
+def _speed_constant(n_cores: int, cores: Sequence[int], speed: float) -> SpeedProfile:
+    return SpeedProfile(n_cores).set_constant(tuple(cores), speed)
+
+
+SPEED_BUILDERS = {
+    "dvfs_denver": _speed_dvfs_denver,
+    "square_wave": _speed_square_wave,
+    "constant": _speed_constant,
+}
+
+# Result collectors beyond the always-present makespan/throughput summary.
+COLLECTORS = {
+    "placement_counts": lambda m: m.placement_counts(),
+    "high_placement_counts": lambda m: m.placement_counts(priority=1),
+    "priority_placement": lambda m: m.priority_placement(),
+    "per_core_worktime_s": lambda m: m.per_core_worktime(),
+    "per_type_mean_duration_s": lambda m: m.per_type_mean_duration(),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One cell of a sweep grid — everything needed to reproduce one
+    seeded DES run, expressed as registry names + plain kwargs.
+
+    ``dag`` / ``topology`` / ``speed`` are ``(name, kwargs)`` pairs;
+    ``background`` is a tuple of such pairs.  DAG and background kwargs
+    may contain a ``task_type`` entry that is itself a ``(name, kwargs)``
+    pair resolved through :data:`TASK_TYPES`.  ``collect`` names extra
+    :data:`COLLECTORS` to evaluate in the worker; ``measure_wall`` times
+    the ``simulate`` call (wall seconds + simulated-tasks/s).
+    """
+
+    key: str
+    dag: tuple
+    scheduler: str
+    topology: tuple = ("tx2", {})
+    seed: int = 1
+    sched_kwargs: dict = dataclasses.field(default_factory=dict)
+    background: tuple = ()
+    speed: Optional[tuple] = None
+    horizon: float = 1e6
+    collect: tuple = ()
+    measure_wall: bool = False
+
+
+def _lookup(registry: dict, spec, what: str):
+    name, kwargs = spec
+    try:
+        builder = registry[name]
+    except KeyError:
+        raise KeyError(f"unknown {what} {name!r}; "
+                       f"known: {', '.join(sorted(registry))}") from None
+    return builder, dict(kwargs)
+
+
+def _build_task_type(spec) -> TaskType:
+    builder, kwargs = _lookup(TASK_TYPES, spec, "task type")
+    return builder(**kwargs)
+
+
+def _resolve_task_type(kwargs: dict) -> dict:
+    if "task_type" in kwargs:
+        kwargs["task_type"] = _build_task_type(kwargs["task_type"])
+    return kwargs
+
+
+def run_cell(spec: RunSpec) -> dict:
+    """Execute one cell (in whatever process this is called from) and
+    reduce it to a plain result dict."""
+    topo_builder, topo_kwargs = _lookup(TOPOLOGIES, spec.topology, "topology")
+    topo: Topology = topo_builder(**topo_kwargs)
+    sched = make_scheduler(spec.scheduler, topo, seed=spec.seed,
+                           **spec.sched_kwargs)
+    dag_builder, dag_kwargs = _lookup(DAG_BUILDERS, spec.dag, "dag builder")
+    dag = dag_builder(**_resolve_task_type(dag_kwargs))
+    background = []
+    for bg_spec in spec.background:
+        bg_builder, bg_kwargs = _lookup(BACKGROUND_BUILDERS, bg_spec,
+                                        "background app")
+        background.append(bg_builder(**_resolve_task_type(bg_kwargs)))
+    speed = None
+    if spec.speed is not None:
+        speed_builder, speed_kwargs = _lookup(SPEED_BUILDERS, spec.speed,
+                                              "speed profile")
+        speed = speed_builder(topo.n_cores, **speed_kwargs)
+
+    t0 = time.perf_counter()
+    m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
+                             horizon=spec.horizon)
+    wall = time.perf_counter() - t0
+
+    out = {
+        "n_tasks": m.n_tasks,
+        "makespan_s": m.makespan,
+        "throughput_tps": m.throughput,
+    }
+    if spec.measure_wall:
+        out["wall_s"] = round(wall, 4)
+        out["sim_tasks_per_s"] = round(m.n_tasks / wall, 1) if wall > 0 else 0.0
+    for name in spec.collect:
+        try:
+            collector = COLLECTORS[name]
+        except KeyError:
+            raise KeyError(f"unknown collector {name!r}; "
+                           f"known: {', '.join(sorted(COLLECTORS))}") from None
+        out[name] = collector(m)
+    return out
+
+
+def default_workers() -> int:
+    """Worker count used when the caller passes ``workers=None``."""
+    return os.cpu_count() or 1
+
+
+def run_cells(specs: Iterable[RunSpec], *, workers: Optional[int] = None,
+              chunksize: Optional[int] = None) -> dict:
+    """Run a grid of cells, fanned across ``workers`` processes.
+
+    Returns ``{spec.key: result_dict}`` in the order the specs were
+    given.  ``workers=None`` uses every host core; ``workers<=1`` (or a
+    single-cell grid) runs in-process through the exact same
+    :func:`run_cell` path, so results are bit-identical for every worker
+    count and chunk layout (each cell is rebuilt from its spec with its
+    own seed wherever it runs).
+    """
+    specs = list(specs)
+    keys = [s.key for s in specs]
+    if len(set(keys)) != len(keys):
+        dupes = sorted({k for k in keys if keys.count(k) > 1})
+        raise ValueError(f"duplicate RunSpec keys: {', '.join(dupes)}")
+    if not specs:
+        return {}
+    if workers is None:
+        workers = default_workers()
+    workers = max(1, min(int(workers), len(specs)))
+    if workers == 1:
+        results = [run_cell(s) for s in specs]
+    else:
+        if chunksize is None:
+            chunksize = max(1, len(specs) // (workers * 4))
+        # spawn, never fork: workers import a fresh interpreter so cell
+        # results cannot depend on inherited parent state (and the same
+        # start method runs everywhere).
+        ctx = get_context("spawn")
+        with ctx.Pool(processes=workers) as pool:
+            results = pool.map(run_cell, specs, chunksize=chunksize)
+    return dict(zip(keys, results))

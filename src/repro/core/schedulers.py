@@ -19,6 +19,23 @@ Two decision points, mirroring XiTAO's task lifetime (paper Fig. 3):
 * ``place_on_dequeue`` — when a worker (owner or thief) pulls a LOW task:
   the width is (re)chosen by local search (paper steps 4-5 re-visit the
   PTT after a steal).
+
+PTT tie-break modes
+-------------------
+Equal PTT predictions (ubiquitous early in a run, when every entry is the
+"unexplored" 0.0) are broken uniformly at random.  By default
+(``ptt_tiebreak="shared"``) those draws come from the scheduler's main RNG
+— the same stream that drives measurement noise, spike injection, and
+steal-victim shuffles.  That coupling makes runs *globally* sensitive to
+any local perturbation: one extra or missing draw (e.g. a measurement
+spike that changes whether a tie occurs) shifts every subsequent draw in
+the run, which is how RWSM-C/P6-class cells end up bistable — the same
+configuration lands in one of two basins of the PTT explore-exploit trap
+depending on irrelevant draw-sequence details.  ``ptt_tiebreak="seeded"``
+gives placement tie-breaks their own deterministic seeded stream (derived
+from the scheduler seed), so tie-break decisions depend only on the
+sequence of tie situations and perturbations stay local.  Golden tests pin
+trap-prone cells in seeded mode.
 """
 from __future__ import annotations
 
@@ -44,7 +61,14 @@ class Scheduler:
     high_target_cost: bool = True    # DAM-C (cost) vs DAM-P (performance)
     steal_high: bool = False         # only RWS-family steals HIGH tasks
     priority_dequeue: bool = True    # serve HIGH first from own WSQ
+    # dedicated RNG for PTT-search tie-breaks ("seeded" mode); None = draw
+    # from the shared scheduler RNG (see module docstring)
+    tiebreak_rng: Optional[random.Random] = None
     _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
+
+    @property
+    def search_rng(self) -> random.Random:
+        return self.tiebreak_rng if self.tiebreak_rng is not None else self.rng
 
     # -- wake-time placement -------------------------------------------------
     def place_on_wake(self, task: Task, waker_core: int) -> Optional[int]:
@@ -63,7 +87,7 @@ class Scheduler:
                 # aligned places of each valid width containing it).
                 tbl = self.ptt.for_type(task.type.name)
                 task.bound_place = tbl.local_search(core, cost=True,
-                                                    rng=self.rng)
+                                                    rng=self.search_rng)
             else:
                 task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
@@ -71,12 +95,12 @@ class Scheduler:
             tbl = self.ptt.for_type(task.type.name)
             if not self.moldable:
                 # DA: fastest single core (global search, width locked to 1).
-                task.bound_place = tbl.width1_search(cost=False, rng=self.rng)
+                task.bound_place = tbl.width1_search(cost=False, rng=self.search_rng)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
                 task.bound_place = tbl.global_search(
-                    cost=self.high_target_cost, rng=self.rng)
+                    cost=self.high_target_cost, rng=self.search_rng)
             return task.bound_place.leader
         return None                          # RWS/RWSM-C: no special handling
 
@@ -89,19 +113,37 @@ class Scheduler:
             return self.topology.place_at(worker_core, 1)
         # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
         tbl = self.ptt.for_type(task.type.name)
-        return tbl.local_search(worker_core, cost=True, rng=self.rng)
+        return tbl.local_search(worker_core, cost=True, rng=self.search_rng)
 
     def may_steal(self, task: Task) -> bool:
         return self.steal_high or task.priority != Priority.HIGH
 
 
 def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
-                   ptt_new_weight: float = 1.0, ptt_old_weight: float = 4.0) -> Scheduler:
-    """Factory for the paper's seven configurations (Table 1)."""
+                   ptt_new_weight: float = 1.0, ptt_old_weight: float = 4.0,
+                   ptt_tiebreak: str = "shared") -> Scheduler:
+    """Factory for the paper's seven configurations (Table 1).
+
+    ``ptt_tiebreak`` selects where PTT-search tie-breaks draw from:
+    ``"shared"`` (paper-faithful default) uses the scheduler's main RNG;
+    ``"seeded"`` uses a dedicated deterministic stream derived from
+    ``seed``, decoupling placement tie-breaks from the measurement-noise
+    and steal streams (see module docstring).
+    """
     bank = PTTBank(topology, new_weight=ptt_new_weight, old_weight=ptt_old_weight)
     rng = random.Random(seed)
+    if ptt_tiebreak == "shared":
+        tiebreak_rng = None
+    elif ptt_tiebreak == "seeded":
+        # string seeding hashes via sha512 — stable across processes and
+        # Python versions, unlike hash() of a tuple
+        tiebreak_rng = random.Random(f"ptt-tiebreak:{seed}")
+    else:
+        raise ValueError(f"unknown ptt_tiebreak {ptt_tiebreak!r} "
+                         "(expected 'shared' or 'seeded')")
     n = name.upper()
-    common = dict(topology=topology, ptt=bank, rng=rng)
+    common = dict(topology=topology, ptt=bank, rng=rng,
+                  tiebreak_rng=tiebreak_rng)
     if n == "RWS":
         # priority-oblivious: plain LIFO dequeue, HIGH stealable
         return Scheduler("RWS", steal_high=True, priority_dequeue=False,

@@ -47,6 +47,25 @@ scheduler-visible behavior but does O(changed state) work per event:
   task start/commit.  ``_refresh_rates`` touches only tasks whose inputs
   changed: all of them after a speed/bg event, bandwidth-sensitive tasks in
   dirtied domains after demand shifts, and freshly started tasks otherwise.
+* **Vectorized rate refresh** — when a refresh touches many running tasks
+  at once (wide topologies such as ``tx2_xl(8+)`` / ``haswell_cluster``
+  with hundreds of cores), the per-task Python loop switches to a numpy
+  pass over the running-task rate vector: gathered per-leader speeds,
+  per-bandwidth-key slowdown factors, and a vectorized changed-rate mask
+  so only tasks whose rate actually moved re-enter the event queue.  Both
+  paths perform the identical float64 operations, so results are
+  bit-for-bit the same whichever one runs (``_VEC_MIN`` sets the
+  crossover).
+* **Lazy-deletion event-queue compaction** — every rate change makes the
+  task's previously scheduled finish event stale (versioned events; stale
+  ones are skipped on pop).  On bandwidth-heavy workloads rates change at
+  nearly every event, so stale entries can dominate the heap.  The engine
+  counts outstanding stale events and, when they exceed
+  ``_COMPACT_MIN_STALE`` *and* half the heap, rebuilds the heap keeping
+  only live events (O(heap) re-heapify, amortized O(1) per push).  Pop
+  order of surviving events is untouched — the (t, seq) key is a total
+  order — so compaction is behavior-invisible; ``heap_peak`` records the
+  high-water mark for tests and diagnostics.
 
 Decision *distributions* (victim tie-breaks, core processing order) are
 unchanged, but the RNG draw sequence differs from the pre-refactor engine,
@@ -60,6 +79,8 @@ import itertools
 from collections import deque
 from typing import Iterable, Optional
 
+import numpy as np
+
 from .dag import DAG
 from .interference import BackgroundApp, SpeedProfile
 from .metrics import RunMetrics, TaskRecord
@@ -69,14 +90,21 @@ from .task import PARTITION_BW, Priority, Task
 
 _EPS = 1e-12
 _NO_DEMAND = (0.0, 0)
+# refresh batches at least this large take the numpy path (see module
+# docstring); below it the plain Python loop is faster (tx2-class runs
+# rarely have more than ~6 running tasks)
+_VEC_MIN = 32
+# compact the event heap when stale entries exceed this count AND half of
+# the heap (hysteresis: small runs never pay the rebuild)
+_COMPACT_MIN_STALE = 64
 
 
 class _Running:
     __slots__ = ("task", "place", "remaining", "rate", "base", "version",
-                 "cores", "domain", "mem_s", "cap", "bw_contrib")
+                 "cores", "domain", "mem_s", "cap", "bw_contrib", "bwkey")
 
     def __init__(self, task: Task, place: ExecutionPlace, remaining: float,
-                 domain: str, cap: float):
+                 domain: str, cap: float, bwkey: int):
         self.task = task
         self.place = place
         self.remaining = remaining  # work-seconds left at rate 1.0
@@ -88,6 +116,7 @@ class _Running:
         self.mem_s = task.type.mem_sensitivity
         self.cap = cap
         self.bw_contrib = task.type.bw_demand * place.width
+        self.bwkey = bwkey          # interned (domain, cap, mem_s) id; -1 = bw-insensitive
 
 
 class _WSQ:
@@ -156,11 +185,48 @@ class Simulator:
         self._bg_mult = [1.0] * n
         self._bg_demand: dict[str, tuple[float, int]] = {}
         self._core_speed = list(self._speed_now)
+        self._core_speed_arr: Optional[np.ndarray] = None  # lazy np mirror
+        self._vec_min = _VEC_MIN
+
+        # bandwidth-key interning for the vectorized refresh: one id per
+        # distinct (domain, cap, mem_sensitivity) combination seen
+        self._bwkey_id: dict[tuple, int] = {}
+        self._bwkeys: list[tuple] = []
+
+        # lazy-deletion event-queue state
+        self._stale = 0                     # outstanding dead finish events
+        self._compact_min_stale = _COMPACT_MIN_STALE
+        self.heap_peak = 0                  # high-water mark of the heap
+        self.compactions = 0
         self._recompute_bg()
 
     # ------------------------------------------------------------------ util
     def _push_event(self, t: float, kind: str, tid: int = -1, version: int = -1):
-        heapq.heappush(self._events, (t, next(self._seq), kind, tid, version))
+        events = self._events
+        heapq.heappush(events, (t, next(self._seq), kind, tid, version))
+        if len(events) > self.heap_peak:
+            self.heap_peak = len(events)
+
+    def _maybe_compact(self):
+        """Rebuild the heap without stale finish events once they dominate.
+        Surviving events keep their (t, seq) keys — a total order — so pop
+        order (and therefore every simulation result) is unchanged."""
+        if (self._stale <= self._compact_min_stale
+                or self._stale * 2 <= len(self._events)):
+            return
+        running = self.running
+        live = []
+        for ev in self._events:
+            if ev[2] == "finish":
+                rec = running.get(ev[3])
+                if rec is None or rec.version != ev[4]:
+                    continue
+            live.append(ev)
+        heapq.heapify(live)
+        # in-place so the run loop's local alias of ``self._events`` stays valid
+        self._events[:] = live
+        self._stale = 0
+        self.compactions += 1
 
     def _recompute_speed(self):
         """Re-derive cached per-core DVFS speeds (on a speed breakpoint)."""
@@ -201,12 +267,25 @@ class Simulator:
     def _update_core_speed(self):
         self._core_speed = [s * m for s, m in
                             zip(self._speed_now, self._bg_mult)]
+        self._core_speed_arr = None          # np mirror rebuilt on demand
+
+    def _bw_factor(self, key: tuple) -> float:
+        """Bandwidth-share slowdown for one (domain, cap, sensitivity)
+        combination under the current foreground + background demand."""
+        dom, cap0, s = key
+        dem, streams = self._demand.get(dom, _NO_DEMAND)
+        bd = self._bg_demand.get(dom)
+        if bd is not None:
+            dem += bd[0]
+            streams += bd[1]
+        cap = cap0 * max(0.6, 1.0 - 0.08 * max(0, streams - 1))
+        return (cap / dem) ** s if dem > cap else 1.0
 
     def _refresh_rates(self):
         """Re-derive rates + reschedule finishes for tasks whose inputs
         changed since the last event (see module docstring)."""
         if self._rates_global_dirty:
-            recs = self.running.values()
+            recs = list(self.running.values())
         elif self._dirty_domains:
             dd = self._dirty_domains
             recs = [r for r in self.running.values()
@@ -215,9 +294,17 @@ class Simulator:
             recs = self._fresh
         else:
             return
+        if len(recs) >= self._vec_min:
+            self._refresh_rates_np(recs)
+        else:
+            self._refresh_rates_py(recs)
+        self._fresh.clear()
+        self._dirty_domains.clear()
+        self._rates_global_dirty = False
+
+    def _refresh_rates_py(self, recs: list[_Running]):
+        """Per-task Python path (small refresh batches)."""
         cs = self._core_speed
-        demand = self._demand
-        bg_demand = self._bg_demand
         now = self.now
         bw_factor: dict = {}    # (domain, cap, sensitivity) -> slowdown
         global_dirty = self._rates_global_dirty
@@ -229,31 +316,76 @@ class Simulator:
                 rec.base = cs[cores[0]] if len(cores) == 1 else \
                     min(cs[c] for c in cores)
             rate = rec.base
-            s = rec.mem_s
-            if s > 0.0:
-                key = (rec.domain, rec.cap, s)
+            if rec.mem_s > 0.0:
+                key = (rec.domain, rec.cap, rec.mem_s)
                 f = bw_factor.get(key)
                 if f is None:
-                    dem, streams = demand.get(rec.domain, _NO_DEMAND)
-                    bd = bg_demand.get(rec.domain)
-                    if bd is not None:
-                        dem += bd[0]
-                        streams += bd[1]
-                    cap = rec.cap * max(0.6, 1.0 - 0.08 * max(0, streams - 1))
-                    f = (cap / dem) ** s if dem > cap else 1.0
-                    bw_factor[key] = f
+                    f = bw_factor[key] = self._bw_factor(key)
                 if f != 1.0:
                     rate *= f
             if rate < 1e-9:
                 rate = 1e-9
             if rec.rate < 0 or abs(rate - rec.rate) > _EPS * max(rate, rec.rate):
+                if rec.rate >= 0:
+                    self._stale += 1     # previous finish event is now dead
                 rec.rate = rate
                 rec.version += 1
                 self._push_event(now + rec.remaining / rate, "finish",
                                  rec.task.tid, rec.version)
-        self._fresh.clear()
-        self._dirty_domains.clear()
-        self._rates_global_dirty = False
+
+    def _refresh_rates_np(self, recs: list[_Running]):
+        """Vectorized path over the running-task rate vector.  Performs the
+        same float64 operations as the Python path (gather/min for bases,
+        one shared slowdown factor per bandwidth key, identical change
+        test), so the two paths are bit-for-bit interchangeable."""
+        n = len(recs)
+        cs_list = self._core_speed
+        cs = self._core_speed_arr
+        if cs is None:
+            cs = self._core_speed_arr = np.array(cs_list, dtype=np.float64)
+        if self._rates_global_dirty:
+            leaders = np.fromiter((r.cores[0] for r in recs), np.int64,
+                                  count=n)
+            base = cs[leaders]
+            for i, rec in enumerate(recs):
+                cores = rec.cores
+                if len(cores) > 1:
+                    base[i] = min(cs_list[c] for c in cores)
+                rec.base = base[i]
+        else:
+            base = np.fromiter((r.base for r in recs), np.float64, count=n)
+            for i in np.flatnonzero(base < 0.0):
+                rec = recs[i]
+                cores = rec.cores
+                b = cs_list[cores[0]] if len(cores) == 1 else \
+                    min(cs_list[c] for c in cores)
+                rec.base = b
+                base[i] = b
+        rate = base                          # reuse; base is not read again
+        if self._bwkeys:
+            kid = np.fromiter((r.bwkey for r in recs), np.int64, count=n)
+            sens = kid >= 0
+            if sens.any():
+                fmap = np.ones(len(self._bwkeys), dtype=np.float64)
+                for u in np.unique(kid[sens]):
+                    fmap[u] = self._bw_factor(self._bwkeys[u])
+                # rate * 1.0 is an exact identity for positive floats, so
+                # multiplying the insensitive lanes too changes nothing
+                rate = rate * np.where(sens, fmap[np.maximum(kid, 0)], 1.0)
+        np.maximum(rate, 1e-9, out=rate)
+        old = np.fromiter((r.rate for r in recs), np.float64, count=n)
+        changed = (old < 0.0) | (np.abs(rate - old)
+                                 > _EPS * np.maximum(rate, old))
+        now = self.now
+        push = self._push_event
+        for i in np.flatnonzero(changed):
+            rec = recs[i]
+            if rec.rate >= 0:
+                self._stale += 1             # previous finish event is now dead
+            r = rate[i]
+            rec.rate = r
+            rec.version += 1
+            push(now + rec.remaining / r, "finish", rec.task.tid, rec.version)
 
     def _advance(self, t: float):
         dt = t - self.now
@@ -341,9 +473,19 @@ class Simulator:
     def _place_into_aqs(self, task: Task, worker_core: int):
         place = self.sched.place_on_dequeue(task, worker_core)
         part = self.topo.partition_of(place.leader)
+        cap = PARTITION_BW[part.kind]
+        mem_s = task.type.mem_sensitivity
+        if mem_s > 0.0:
+            key = (part.domain, cap, mem_s)
+            bwkey = self._bwkey_id.get(key)
+            if bwkey is None:
+                bwkey = self._bwkey_id[key] = len(self._bwkeys)
+                self._bwkeys.append(key)
+        else:
+            bwkey = -1
         rec = _Running(task, place,
                        remaining=task.type.duration(part.kind, place.width),
-                       domain=part.domain, cap=PARTITION_BW[part.kind])
+                       domain=part.domain, cap=cap, bwkey=bwkey)
         for c in rec.cores:
             self.aq[c].append(rec)
             self._mark(c)
@@ -457,8 +599,15 @@ class Simulator:
                 self._push_event(b.t_start, "bg")
             if b.t_end < self.horizon:
                 self._push_event(b.t_end, "bg")
-        for t in self.speed.breakpoints(self.horizon):
-            self._push_event(t, "speed")
+        # speed breakpoints are scheduled lazily — one outstanding event at
+        # a time, the next pushed when it fires — so a DVFS square wave
+        # spanning the 1e6 s horizon contributes O(1) heap entries instead
+        # of flooding the queue with ~horizon/period events upfront
+        speed_bps = self.speed.breakpoints(self.horizon)
+        next_bp = 0
+        if speed_bps:
+            self._push_event(speed_bps[0], "speed")
+            next_bp = 1
 
         self._dispatch()
         self._refresh_rates()
@@ -471,7 +620,8 @@ class Simulator:
             if kind == "finish":
                 rec = running.get(tid)
                 if rec is None or rec.version != version:
-                    continue                       # stale
+                    self._stale -= 1               # stale (lazy deletion)
+                    continue
                 self._advance(t)
                 if rec.remaining > 1e-9 * max(rec.rate, 1.0):
                     rec.version += 1               # numeric drift: reschedule
@@ -483,10 +633,14 @@ class Simulator:
                 self._advance(t)
                 if kind == "speed":
                     self._recompute_speed()
+                    if next_bp < len(speed_bps):
+                        self._push_event(speed_bps[next_bp], "speed")
+                        next_bp += 1
                 elif kind == "bg":
                     self._recompute_bg()
             self._dispatch()
             self._refresh_rates()
+            self._maybe_compact()
             if self._outstanding == 0 and not running:
                 break
         self.metrics.finish(self.now)

@@ -1,0 +1,63 @@
+"""benchmarks/common.py: atomic artifact writes (parallel suite workers
+must never interleave partial JSON) and the repo-root mirror."""
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from benchmarks import common  # noqa: E402
+
+
+@pytest.fixture
+def art_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "ART_DIR", str(tmp_path / "artifacts"))
+    monkeypatch.setattr(common, "REPO_ROOT", str(tmp_path))
+    monkeypatch.setattr(common, "_suite_name", None)
+    return tmp_path
+
+
+def test_write_artifact_atomic_no_temp_residue(art_dir):
+    path = common.write_artifact("x", {"a": 1})
+    assert json.load(open(path)) == {"a": 1}
+    # rename-into-place leaves no temp files behind
+    assert os.listdir(os.path.dirname(path)) == ["x.json"]
+
+
+def test_write_artifact_root_copy(art_dir):
+    common.write_artifact("BENCH_x", {"v": 2}, root_copy=True)
+    mirrored = art_dir / "BENCH_x.json"
+    assert json.load(open(mirrored)) == {"v": 2}
+
+
+def test_write_artifact_no_root_copy_by_default(art_dir):
+    common.write_artifact("y", {"v": 3})
+    assert not (art_dir / "y.json").exists()
+
+
+def test_failed_write_leaves_old_artifact_intact(art_dir):
+    path = common.write_artifact("z", {"ok": True})
+
+    class Unserializable:
+        pass
+
+    # default=str makes most objects serializable; a circular structure
+    # still raises mid-dump — the old artifact must survive untouched
+    circ: list = []
+    circ.append(circ)
+    with pytest.raises(ValueError):
+        common.write_artifact("z", circ)
+    assert json.load(open(path)) == {"ok": True}
+    assert os.listdir(os.path.dirname(path)) == ["z.json"]
+
+
+def test_suite_meta_embedded(art_dir):
+    common.begin_suite("figX")
+    path = common.write_artifact("meta_demo", {"v": 1})
+    data = json.load(open(path))
+    assert data["_meta"]["suite"] == "figX"
+    assert data["_meta"]["suite_wall_s"] >= 0

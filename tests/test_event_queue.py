@@ -1,0 +1,115 @@
+"""Event-queue hygiene: lazy-deletion compaction, lazy DVFS breakpoints,
+and the vectorized rate-refresh path.
+
+All three are required to be *behavior-invisible*: they may only change
+wall time and heap size, never a makespan or a placement."""
+import pytest
+
+from repro.core import (SpeedProfile, copy_type, corun_chain, dvfs_denver,
+                        haswell, make_scheduler, matmul_type, synthetic_dag,
+                        tx2, tx2_xl)
+from repro.core.simulator import _COMPACT_MIN_STALE, Simulator
+
+NEVER = 10 ** 9
+
+
+def _bw_heavy_run(compact_min_stale, *, total=800, P=20):
+    """Bandwidth-heavy copy DAG under a harsh all-core DVFS square wave:
+    every recovery edge makes rates jump ~50x, so the rescheduled (earlier)
+    finish events leave the old ones stranded far in the future — the
+    worst case for stale-event accumulation."""
+    tt = copy_type(2048)
+    topo = haswell()
+    sched = make_scheduler("RWS", topo, seed=5)
+    dag = synthetic_dag(tt, parallelism=P, total_tasks=total)
+    speed = SpeedProfile(topo.n_cores).add_square_wave(
+        range(topo.n_cores), period=0.002, lo=0.02, t_end=10.0)
+    sim = Simulator(sched, speed=speed)
+    sim._compact_min_stale = compact_min_stale
+    sim.submit(dag)
+    return sim.run(), sim
+
+
+def test_compaction_is_behavior_invisible():
+    m_raw, s_raw = _bw_heavy_run(NEVER)
+    m_cmp, s_cmp = _bw_heavy_run(_COMPACT_MIN_STALE)
+    assert s_cmp.compactions > 0            # the workload provokes it
+    assert s_raw.compactions == 0
+    assert m_cmp.makespan == m_raw.makespan
+    assert m_cmp.placement_counts() == m_raw.placement_counts()
+    assert m_cmp.placement_counts(priority=1) == \
+        m_raw.placement_counts(priority=1)
+
+
+def test_compaction_bounds_heap():
+    _, s_raw = _bw_heavy_run(NEVER)
+    _, s_cmp = _bw_heavy_run(_COMPACT_MIN_STALE)
+    # compaction triggers once stale > max(threshold, heap/2), so the heap
+    # never exceeds ~2x threshold + live events (one finish per running
+    # task + the single outstanding speed breakpoint)
+    n_cores = haswell().n_cores
+    assert s_cmp.heap_peak <= 2 * _COMPACT_MIN_STALE + n_cores + 16
+    # and the uncompacted run really did bloat (this is the regression
+    # guard: if rate-refresh churn stops staling events, or compaction
+    # silently stops firing, one of these trips)
+    assert s_raw.heap_peak > 4 * s_cmp.heap_peak
+
+
+def test_stale_counter_never_goes_negative():
+    _, sim = _bw_heavy_run(_COMPACT_MIN_STALE)
+    assert sim._stale >= 0
+
+
+def test_lazy_speed_breakpoints():
+    """dvfs_denver() carries ~200k breakpoints up to the 1e6 s horizon; the
+    engine must schedule them one at a time, not flood the heap upfront."""
+    tt = matmul_type(64)
+    sched = make_scheduler("DAM-C", tx2(), seed=1)
+    dag = synthetic_dag(tt, parallelism=4, total_tasks=200)
+    sim = Simulator(sched, speed=dvfs_denver())
+    sim.submit(dag)
+    m = sim.run()
+    assert m.n_tasks == 200
+    assert sim.heap_peak < 100
+
+
+def _xl_run(vec_min, *, seed=3, total=900):
+    """tx2_xl(8) = 48 cores with DVFS + co-runners: refresh batches large
+    enough to cross the numpy path when vec_min is the default."""
+    tt = copy_type(1024)
+    topo = tx2_xl(8)
+    sched = make_scheduler("DAM-C", topo, seed=seed)
+    dag = synthetic_dag(tt, parallelism=24, total_tasks=total)
+    sim = Simulator(sched, speed=dvfs_denver(topo.n_cores),
+                    background=[corun_chain(tt, core=0),
+                                corun_chain(tt, core=7)])
+    sim._vec_min = vec_min
+    sim.submit(dag)
+    return sim.run()
+
+
+def test_vectorized_refresh_matches_scalar_bitwise():
+    m_py = _xl_run(NEVER)       # always the Python loop
+    m_np = _xl_run(1)           # always the numpy path
+    assert m_np.makespan == m_py.makespan
+    assert m_np.placement_counts() == m_py.placement_counts()
+    mix = _xl_run(32)           # default crossover: mixed paths
+    assert mix.makespan == m_py.makespan
+
+
+@pytest.mark.parametrize("sched_name", ("RWS", "DA", "DAM-P"))
+def test_vectorized_refresh_other_schedulers(sched_name):
+    tt = copy_type(1024)
+    topo = tx2_xl(8)
+
+    def go(vec_min):
+        sched = make_scheduler(sched_name, topo, seed=2)
+        dag = synthetic_dag(tt, parallelism=30, total_tasks=600)
+        sim = Simulator(sched, background=[corun_chain(tt, core=2)])
+        sim._vec_min = vec_min
+        sim.submit(dag)
+        return sim.run()
+
+    a, b = go(NEVER), go(1)
+    assert a.makespan == b.makespan
+    assert a.placement_counts() == b.placement_counts()

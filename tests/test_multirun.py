@@ -1,0 +1,116 @@
+"""Batched multi-run engine: spec resolution, deterministic seeding, and
+bit-identical results across worker counts / chunk layouts."""
+import dataclasses
+
+import pytest
+
+from repro.core import RunSpec, run_cell, run_cells
+
+_TT = ("matmul", {"tile": 64})
+
+
+def _grid(total=120, seeds=(1,), scheds=("RWS", "DAM-C")):
+    return [RunSpec(
+        key=f"{s}/seed{seed}",
+        dag=("synthetic", {"task_type": _TT, "parallelism": 2,
+                           "total_tasks": total}),
+        scheduler=s,
+        topology=("tx2", {}),
+        seed=seed,
+        background=(("chain", {"task_type": _TT, "core": 0}),),
+        collect=("placement_counts", "high_placement_counts"),
+    ) for s in scheds for seed in seeds]
+
+
+def test_run_cell_result_shape():
+    res = run_cell(_grid()[0])
+    assert res["n_tasks"] == 120
+    assert res["makespan_s"] > 0
+    assert res["throughput_tps"] == pytest.approx(120 / res["makespan_s"])
+    assert sum(res["placement_counts"].values()) == 120
+    assert sum(res["high_placement_counts"].values()) == 60  # P=2: half HIGH
+    assert "wall_s" not in res                    # measure_wall off
+
+
+def test_measure_wall():
+    res = run_cell(dataclasses.replace(_grid()[0], measure_wall=True))
+    assert res["wall_s"] >= 0
+    assert res["sim_tasks_per_s"] > 0
+
+
+def test_in_process_deterministic():
+    specs = _grid(seeds=(3,))
+    a = run_cells(specs, workers=1)
+    b = run_cells(specs, workers=1)
+    assert a == b
+
+
+def test_seed_changes_result():
+    a, b = (run_cell(s) for s in _grid(scheds=("DAM-C",), seeds=(1, 2)))
+    assert a["makespan_s"] != b["makespan_s"]
+
+
+def test_bit_identical_across_worker_counts_and_chunking():
+    """The acceptance contract: per-cell results must be bit-identical for
+    any worker count (spawned subprocesses vs in-process) and chunk size."""
+    specs = _grid(seeds=(1, 2), scheds=("RWS", "DAM-C", "FA"))
+    serial = run_cells(specs, workers=1)
+    spawned = run_cells(specs, workers=2)
+    assert serial == spawned
+    rechunked = run_cells(specs, workers=2, chunksize=3)
+    assert serial == rechunked
+    assert list(serial) == [s.key for s in specs]  # spec order preserved
+
+
+def test_more_workers_than_cells():
+    specs = _grid()[:1]
+    assert run_cells(specs, workers=8) == run_cells(specs, workers=1)
+
+
+def test_duplicate_keys_rejected():
+    specs = _grid() + _grid()
+    with pytest.raises(ValueError, match="duplicate"):
+        run_cells(specs, workers=1)
+
+
+def test_empty_grid():
+    assert run_cells([], workers=2) == {}
+
+
+def test_unknown_registry_names_rejected():
+    bad_topo = dataclasses.replace(_grid()[0], topology=("cray1", {}))
+    with pytest.raises(KeyError, match="topology"):
+        run_cell(bad_topo)
+    bad_collect = dataclasses.replace(_grid()[0], collect=("vibes",))
+    with pytest.raises(KeyError, match="collector"):
+        run_cell(bad_collect)
+
+
+def test_speed_and_sched_kwargs_specs():
+    spec = RunSpec(
+        key="dvfs",
+        dag=("synthetic", {"task_type": _TT, "parallelism": 2,
+                           "total_tasks": 120}),
+        scheduler="DAM-C",
+        seed=1,
+        sched_kwargs={"ptt_new_weight": 2, "ptt_old_weight": 3,
+                      "ptt_tiebreak": "seeded"},
+        speed=("dvfs_denver", {}),
+    )
+    res = run_cell(spec)
+    assert res["n_tasks"] == 120
+
+
+def test_dynamic_dag_builders():
+    km = RunSpec(key="km", dag=("kmeans", {"n_points": 4000, "dims": 4,
+                                           "k": 2, "n_chunks": 4,
+                                           "iterations": 3}),
+                 scheduler="DAM-C", topology=("haswell", {}), seed=1)
+    res = run_cell(km)
+    assert res["n_tasks"] == 3 * (4 + 1)
+    heat = RunSpec(key="heat", dag=("heat", {"nodes": 2, "tiles_per_node": 2,
+                                             "iterations": 2}),
+                   scheduler="DA", topology=("haswell_cluster", {"nodes": 2}),
+                   seed=1)
+    res = run_cell(heat)
+    assert res["n_tasks"] == 2 * (2 * 2 + 2)      # compute + exchanges
