@@ -3,7 +3,10 @@
 
 Paper-faithful sizes by default (matmul 32000 / copy 10000 / stencil
 20000); ``--fast`` keeps the old CI sizes.  The grid runs through the
-multi-run engine (see bench_interference.py).
+multi-run engine (see bench_interference.py).  ``dvfs_denver`` is a
+closed-form ``PeriodicProfile``: per-cell construction no longer
+materializes ~200k square-wave segments (which used to cost ~0.2 s per
+cell), and results are bit-identical to the materialized form.
 """
 from __future__ import annotations
 

@@ -1,0 +1,137 @@
+"""Scenario sweeps beyond the paper's figures: bursty co-runners,
+per-partition DVFS governors, and trace-driven asymmetry on scaled
+topologies.
+
+Three *dynamic* interference scenarios (the regimes where adaptive
+schedulers differentiate — cf. Mage, arXiv:1804.06462, and the
+learning-based dynamic-pinning line, arXiv:1803.00355), swept over
+scaled topologies (``tx2_xl(8)`` = 48 cores, ``haswell_cluster`` = 80
+cores) and DAG parallelism beyond the paper's P=6, with multi-seed
+error bars per cell:
+
+* ``bursty``   — seeded on/off co-runner episodes (exponential idle/busy
+  lengths) on a few cores: interference arrives and leaves while the DAG
+  runs, so static placements go stale mid-run.
+* ``governor`` — every partition runs its own phase-staggered, slightly
+  detuned DVFS square-wave governor (closed-form periodic profiles; no
+  segment materialization at any horizon).
+* ``trace``    — per-core random-walk speed traces (stand-ins for
+  recorded co-tenancy traces) plus a persistent core-0 co-runner.
+
+Each (scenario, topology, P, scheduler) cell runs at several seeds; the
+emitted aggregates are mean ± population-std of throughput across seeds.
+All cells fan out through the multi-run engine and its cached worker
+pool.  ``--fast`` shrinks the grid to CI size.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import RunSpec, run_cells
+
+from .common import emit, write_artifact
+
+_TT = ("matmul", {"tile": 64})
+
+# interference timescales are chosen against the ~0.01-0.05 s makespans of
+# these cells: several episodes / dozens of governor flips / many trace
+# steps land inside every run
+_T_END = 0.5
+
+SCHEDULERS = ("RWS", "FA", "DAM-C", "DAM-P")
+TOPOLOGIES = (
+    ("tx2_xl8", ("tx2_xl", {"clusters": 8})),
+    ("haswell_cluster", ("haswell_cluster", {})),
+)
+PARALLELISM = (8, 16, 24)
+SEEDS = (1, 2, 3)
+FULL_TASKS, CI_TASKS = 2000, 600
+
+
+def _scenario_kwargs(scenario: str, seed: int) -> dict:
+    """RunSpec speed/background fields for one scenario cell.  The cell
+    seed also seeds the interference pattern, so seeds vary both the
+    scheduler RNG and the environment."""
+    if scenario == "bursty":
+        return dict(background=(
+            ("bursty", {"task_type": _TT, "cores": (0, 1, 2), "seed": seed,
+                        "t_end": _T_END, "mean_on": 0.002,
+                        "mean_off": 0.004}),))
+    if scenario == "governor":
+        return dict(speed=("governor", {"period": 0.004, "lo": 0.2,
+                                        "t_end": _T_END,
+                                        "period_spread": 0.05}))
+    if scenario == "trace":
+        return dict(
+            background=(("chain", {"task_type": _TT, "core": 0}),),
+            speed=("trace_walk", {"seed": seed, "dt": 0.002, "t_end": _T_END,
+                                  "lo": 0.25, "step": 0.2}))
+    raise ValueError(f"unknown scenario {scenario!r}")
+
+
+SCENARIOS = ("bursty", "governor", "trace")
+
+
+def grid(fast: bool = False) -> list[RunSpec]:
+    topos = TOPOLOGIES if not fast else (("tx2_xl4", ("tx2_xl", {"clusters": 4})),)
+    par = PARALLELISM if not fast else (8,)
+    scheds = SCHEDULERS if not fast else ("RWS", "DAM-C")
+    seeds = SEEDS if not fast else (1, 2)
+    total = FULL_TASKS if not fast else CI_TASKS
+    specs = []
+    for scenario in SCENARIOS:
+        for tname, topo_spec in topos:
+            for p in par:
+                for sched_name in scheds:
+                    for seed in seeds:
+                        specs.append(RunSpec(
+                            key=f"scenarios/{scenario}/{tname}/P{p}/"
+                                f"{sched_name}/seed{seed}",
+                            dag=("synthetic", {"task_type": _TT,
+                                               "parallelism": p,
+                                               "total_tasks": total}),
+                            scheduler=sched_name,
+                            topology=topo_spec,
+                            seed=seed,
+                            **_scenario_kwargs(scenario, seed)))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    specs = grid(fast)
+    results = run_cells(specs, workers=workers)
+    out: dict = {k: {"throughput_tps": r["throughput_tps"],
+                     "makespan_s": r["makespan_s"]}
+                 for k, r in results.items()}
+    # aggregate across seeds: mean ± population std per cell
+    groups: dict[str, list[float]] = {}
+    for key, res in results.items():
+        cell = key.rsplit("/seed", 1)[0]
+        groups.setdefault(cell, []).append(res["throughput_tps"])
+    for cell, tps in groups.items():
+        mean = statistics.mean(tps)
+        std = statistics.pstdev(tps)
+        out[f"{cell}/mean"] = round(mean, 1)
+        out[f"{cell}/std"] = round(std, 1)
+        emit(f"{cell}/mean_tps", round(mean, 1),
+             f"±{round(std, 1)} over {len(tps)} seeds")
+    # headline ratios: adaptive vs random under each dynamic scenario
+    adaptive = "DAM-C"
+    for scenario in SCENARIOS:
+        ratios = []
+        for cell, tps in groups.items():
+            if f"/{scenario}/" in f"/{cell}/" and cell.endswith(f"/{adaptive}"):
+                base_cell = cell.rsplit("/", 1)[0] + "/RWS"
+                if base_cell in groups:
+                    ratios.append(statistics.mean(tps)
+                                  / statistics.mean(groups[base_cell]))
+        if ratios:
+            emit(f"scenarios/{scenario}/DAM-C_vs_RWS_avg",
+                 round(sum(ratios) / len(ratios), 2),
+                 "adaptive vs random, mean over topo x P")
+    write_artifact("scenarios", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -24,8 +24,9 @@ import argparse
 import time
 
 from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
-               bench_kmeans, bench_roofline, bench_sched_throughput,
-               bench_sensitivity, bench_task_distribution)
+               bench_kmeans, bench_roofline, bench_scenarios,
+               bench_sched_throughput, bench_sensitivity,
+               bench_task_distribution)
 from . import common
 
 SUITES = {
@@ -37,6 +38,7 @@ SUITES = {
     "fig10": bench_heat.run,
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,
+    "scenarios": bench_scenarios.run,
     "sched": bench_sched_throughput.run,
 }
 

@@ -13,10 +13,13 @@ Public surface:
   metrics     — throughput / placement / worktime aggregation
 """
 from .dag import DAG, chain_dag, heat_dag, kmeans_dag, synthetic_dag
-from .interference import (BackgroundApp, SpeedProfile, corun_chain,
-                           corun_socket, dvfs_denver)
+from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
+                           SpeedProfileBase, TraceProfile, burst_episodes,
+                           corun_chain, corun_socket, dvfs_denver,
+                           governor_profile, random_walk_trace)
 from .metrics import RunMetrics, TaskRecord
-from .multirun import RunSpec, default_workers, run_cell, run_cells
+from .multirun import (RunSpec, default_workers, run_cell, run_cells,
+                       shutdown_pool)
 from .places import ExecutionPlace, ResourcePartition, Topology, haswell, \
     haswell_cluster, tpu_pod_slices, tx2, tx2_xl
 from .ptt import PTT, PTTBank
@@ -29,12 +32,14 @@ from .task import (Priority, Task, TaskType, copy_type, kmeans_map_type,
 
 __all__ = [
     "DAG", "chain_dag", "heat_dag", "kmeans_dag", "synthetic_dag",
-    "BackgroundApp", "SpeedProfile", "corun_chain", "corun_socket",
-    "dvfs_denver", "RunMetrics", "TaskRecord", "ExecutionPlace",
+    "BackgroundApp", "PeriodicProfile", "SpeedProfile", "SpeedProfileBase",
+    "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
+    "dvfs_denver", "governor_profile", "random_walk_trace",
+    "RunMetrics", "TaskRecord", "ExecutionPlace",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
     "tpu_pod_slices", "tx2", "tx2_xl", "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
-    "RunSpec", "default_workers", "run_cell", "run_cells",
+    "RunSpec", "default_workers", "run_cell", "run_cells", "shutdown_pool",
     "Simulator", "simulate", "Priority", "Task", "TaskType", "copy_type",
     "kmeans_map_type", "kmeans_reduce_type", "matmul_type",
     "mpi_exchange_type", "stencil_type",

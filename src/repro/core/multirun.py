@@ -29,6 +29,11 @@ Design rules
 * **Compact results.**  Workers reduce each :class:`~.metrics.RunMetrics`
   to a plain dict (makespan/throughput + requested collectors), so a
   32k-task run ships a few hundred bytes back, not 32k ``TaskRecord``\\ s.
+* **Cached pool.**  The spawn pool is kept alive between ``run_cells``
+  calls (spawning costs ~0.65 s/worker of fixed interpreter+import
+  overhead per call otherwise) and torn down by :func:`shutdown_pool`
+  (registered atexit).  Reuse cannot change results: every cell is
+  rebuilt from its spec inside whichever worker runs it.
 
 The benchmark harnesses (``benchmarks/bench_interference.py`` etc.) build
 their grids out of these specs; see ``benchmarks/README.md`` for the
@@ -36,6 +41,7 @@ worker/seed semantics contract.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import os
 import time
@@ -43,8 +49,10 @@ from multiprocessing import get_context
 from typing import Iterable, Optional, Sequence
 
 from .dag import DAG, heat_dag, kmeans_dag, synthetic_dag
-from .interference import (BackgroundApp, SpeedProfile, corun_chain,
-                           corun_socket, dvfs_denver)
+from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
+                           SpeedProfileBase, burst_episodes, corun_chain,
+                           corun_socket, dvfs_denver, governor_profile,
+                           random_walk_trace)
 from .metrics import RunMetrics
 from .places import (Topology, haswell, haswell_cluster, tpu_pod_slices, tx2,
                      tx2_xl)
@@ -103,28 +111,57 @@ def _bg_socket(task_type: TaskType, cores: Sequence[int], **kw) -> BackgroundApp
     return corun_socket(task_type, tuple(cores), **kw)
 
 
+def _bg_bursty(task_type: TaskType, cores: Sequence[int],
+               **kw) -> tuple[BackgroundApp, ...]:
+    return burst_episodes(task_type, tuple(cores), **kw)
+
+
+# Builders may return one BackgroundApp or a tuple of them (bursty
+# episodes); run_cell flattens.
 BACKGROUND_BUILDERS = {
     "chain": _bg_chain,
     "socket": _bg_socket,
+    "bursty": _bg_bursty,
 }
 
 
-def _speed_dvfs_denver(n_cores: int, **kw) -> SpeedProfile:
-    return dvfs_denver(n_cores=n_cores, **kw)
+# Speed builders receive the cell's built Topology (per-partition governors
+# need the partition layout, everything else just reads n_cores).
+def _speed_dvfs_denver(topo: Topology, **kw) -> SpeedProfileBase:
+    return dvfs_denver(n_cores=topo.n_cores, **kw)
 
 
-def _speed_square_wave(n_cores: int, cores: Sequence[int], **kw) -> SpeedProfile:
-    return SpeedProfile(n_cores).add_square_wave(tuple(cores), **kw)
+def _speed_square_wave(topo: Topology, cores: Sequence[int],
+                       **kw) -> SpeedProfile:
+    return SpeedProfile(topo.n_cores).add_square_wave(tuple(cores), **kw)
 
 
-def _speed_constant(n_cores: int, cores: Sequence[int], speed: float) -> SpeedProfile:
-    return SpeedProfile(n_cores).set_constant(tuple(cores), speed)
+def _speed_constant(topo: Topology, cores: Sequence[int],
+                    speed: float) -> SpeedProfile:
+    return SpeedProfile(topo.n_cores).set_constant(tuple(cores), speed)
+
+
+def _speed_periodic_square(topo: Topology, cores: Sequence[int],
+                           **kw) -> PeriodicProfile:
+    return PeriodicProfile.square_wave(topo.n_cores, tuple(cores), **kw)
+
+
+def _speed_governor(topo: Topology, **kw) -> PeriodicProfile:
+    return governor_profile(topo, **kw)
+
+
+def _speed_trace_walk(topo: Topology, cores: Sequence[int] = (),
+                      **kw) -> SpeedProfileBase:
+    return random_walk_trace(topo.n_cores, tuple(cores), **kw)
 
 
 SPEED_BUILDERS = {
     "dvfs_denver": _speed_dvfs_denver,
     "square_wave": _speed_square_wave,
     "constant": _speed_constant,
+    "periodic_square": _speed_periodic_square,
+    "governor": _speed_governor,
+    "trace_walk": _speed_trace_walk,
 }
 
 # Result collectors beyond the always-present makespan/throughput summary.
@@ -197,12 +234,16 @@ def run_cell(spec: RunSpec) -> dict:
     for bg_spec in spec.background:
         bg_builder, bg_kwargs = _lookup(BACKGROUND_BUILDERS, bg_spec,
                                         "background app")
-        background.append(bg_builder(**_resolve_task_type(bg_kwargs)))
+        built = bg_builder(**_resolve_task_type(bg_kwargs))
+        if isinstance(built, BackgroundApp):
+            background.append(built)
+        else:                       # episode tuple (e.g. bursty)
+            background.extend(built)
     speed = None
     if spec.speed is not None:
         speed_builder, speed_kwargs = _lookup(SPEED_BUILDERS, spec.speed,
                                               "speed profile")
-        speed = speed_builder(topo.n_cores, **speed_kwargs)
+        speed = speed_builder(topo, **speed_kwargs)
 
     t0 = time.perf_counter()
     m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
@@ -232,6 +273,44 @@ def default_workers() -> int:
     return os.cpu_count() or 1
 
 
+# -- cached spawn pool -------------------------------------------------------
+# Spawning a pool costs ~0.65 s per worker (fresh interpreter + imports), a
+# fixed overhead every ``run_cells`` call used to pay.  The pool is cached
+# across calls (suites reuse it); ``shutdown_pool`` releases it explicitly
+# and runs at interpreter exit.  Cells are rebuilt from their specs inside
+# whichever worker runs them, so reuse cannot change any result.
+_pool = None
+_pool_workers = 0
+
+
+def _get_pool(workers: int):
+    global _pool, _pool_workers
+    if _pool is not None and _pool_workers != workers:
+        shutdown_pool()
+    if _pool is None:
+        # spawn, never fork: workers import a fresh interpreter so cell
+        # results cannot depend on inherited parent state (and the same
+        # start method runs everywhere).
+        _pool = get_context("spawn").Pool(processes=workers)
+        _pool_workers = workers
+    return _pool
+
+
+def shutdown_pool() -> None:
+    """Release the cached worker pool (idempotent).  Registered atexit, so
+    callers only need it to free workers early (e.g. before a fork-hostile
+    section or between test suites)."""
+    global _pool, _pool_workers
+    if _pool is not None:
+        _pool.terminate()       # what Pool.__exit__ does; workers are idle
+        _pool.join()
+        _pool = None
+        _pool_workers = 0
+
+
+atexit.register(shutdown_pool)
+
+
 def run_cells(specs: Iterable[RunSpec], *, workers: Optional[int] = None,
               chunksize: Optional[int] = None) -> dict:
     """Run a grid of cells, fanned across ``workers`` processes.
@@ -241,7 +320,8 @@ def run_cells(specs: Iterable[RunSpec], *, workers: Optional[int] = None,
     single-cell grid) runs in-process through the exact same
     :func:`run_cell` path, so results are bit-identical for every worker
     count and chunk layout (each cell is rebuilt from its spec with its
-    own seed wherever it runs).
+    own seed wherever it runs).  The worker pool is cached across calls
+    (see :func:`shutdown_pool`).
     """
     specs = list(specs)
     keys = [s.key for s in specs]
@@ -258,10 +338,10 @@ def run_cells(specs: Iterable[RunSpec], *, workers: Optional[int] = None,
     else:
         if chunksize is None:
             chunksize = max(1, len(specs) // (workers * 4))
-        # spawn, never fork: workers import a fresh interpreter so cell
-        # results cannot depend on inherited parent state (and the same
-        # start method runs everywhere).
-        ctx = get_context("spawn")
-        with ctx.Pool(processes=workers) as pool:
+        pool = _get_pool(workers)
+        try:
             results = pool.map(run_cell, specs, chunksize=chunksize)
+        except BaseException:   # incl. KeyboardInterrupt: workers may still
+            shutdown_pool()     # be chewing abandoned chunks — don't reuse
+            raise
     return dict(zip(keys, results))

@@ -50,6 +50,10 @@ class PTT:
         self._w_slot = {w: i for i, w in enumerate(widths)}
         self.table = np.full((topology.n_cores, len(widths)), np.nan)
         self.visits = np.zeros_like(self.table, dtype=np.int64)
+        # update-order tick per entry (-1 = never updated): staleness metric
+        # for the forced-revisit escape hatch (see ``stalest``)
+        self.last_update = np.full(self.table.shape, -1, dtype=np.int64)
+        self._tick = 0
         for place in topology.places():
             self.table[place.leader, self._w_slot[place.width]] = 0.0
         self._lock = threading.Lock()
@@ -64,6 +68,7 @@ class PTT:
         self._pos = topology.place_leaders * n_slots + slots
         self._wf = topology.place_widths_f
         self._flat = self.table.reshape(-1)
+        self._lu_flat = self.last_update.reshape(-1)
 
     # -- queries ------------------------------------------------------------
     def get(self, place: ExecutionPlace) -> float:
@@ -90,6 +95,8 @@ class PTT:
                     self.old_weight + self.new_weight)
             self.table[r, c] = new
             self.visits[r, c] += 1
+            self.last_update[r, c] = self._tick
+            self._tick += 1
             return new
 
     # -- searches (Algorithm 1 primitives) ------------------------------------
@@ -119,22 +126,18 @@ class PTT:
             return cands[rng.randrange(len(cands))]
         return cands[0]
 
-    def _best_from_indices(self, idx: Optional[np.ndarray], *, cost: bool,
-                           rng=None) -> ExecutionPlace:
-        """Masked argmin over the dense table restricted to place indices
-        ``idx`` (None = all valid places).  Semantics identical to ``best``
-        over the same candidates in the same order: unexplored entries (0.0)
-        sort first, ties prefer the narrowest width, residual ties are
-        broken uniformly at random."""
+    def _gather(self, flat: np.ndarray, idx: Optional[np.ndarray]):
+        """Per-candidate values + widths for place indices ``idx``
+        (None = all valid places)."""
         if idx is None:
-            vals = self._flat[self._pos]
-            w = self._wf
-        else:
-            vals = self._flat[self._pos[idx]]
-            w = self._wf[idx]
-        score = vals * w if cost else vals
-        tie = score == score.min()
-        cands = np.flatnonzero(tie)
+            return flat[self._pos], self._wf
+        return flat[self._pos[idx]], self._wf[idx]
+
+    def _pick_min(self, score: np.ndarray, w: np.ndarray,
+                  idx: Optional[np.ndarray], rng) -> ExecutionPlace:
+        """Shared argmin tail of every search: minimal score, ties prefer
+        the narrowest width, residual ties break uniformly at random."""
+        cands = np.flatnonzero(score == score.min())
         if len(cands) > 1:
             wt = w[cands]
             cands = cands[wt == wt.min()]
@@ -143,6 +146,16 @@ class PTT:
         else:
             k = cands[rng.randrange(len(cands))]
         return self._places[int(k) if idx is None else int(idx[int(k)])]
+
+    def _best_from_indices(self, idx: Optional[np.ndarray], *, cost: bool,
+                           rng=None) -> ExecutionPlace:
+        """Masked argmin over the dense table restricted to place indices
+        ``idx`` (None = all valid places).  Semantics identical to ``best``
+        over the same candidates in the same order: unexplored entries (0.0)
+        sort first, ties prefer the narrowest width, residual ties are
+        broken uniformly at random."""
+        vals, w = self._gather(self._flat, idx)
+        return self._pick_min(vals * w if cost else vals, w, idx, rng)
 
     def local_search(self, core: int, *, cost: bool = True, rng=None) -> ExecutionPlace:
         """Paper: keep partition+core fixed, mold only the width."""
@@ -157,6 +170,17 @@ class PTT:
         """Global sweep restricted to width-1 places (the DA scheduler)."""
         return self._best_from_indices(
             self.topology.width1_place_indices, cost=cost, rng=rng)
+
+    def stalest(self, idx: Optional[np.ndarray] = None, *,
+                rng=None) -> ExecutionPlace:
+        """The least-recently-*updated* candidate (never-updated entries are
+        stalest of all) — the forced-revisit pick for the explore-exploit
+        escape hatch.  A poisoned entry (one bad measurement, then shunned
+        by every argmin forever) is exactly the entry whose update tick
+        stops advancing, so it is what this returns.  Ties prefer narrower
+        places, then break uniformly at random, like the searches."""
+        ages, w = self._gather(self._lu_flat, idx)
+        return self._pick_min(ages, w, idx, rng)
 
     def snapshot(self) -> np.ndarray:
         return self.table.copy()

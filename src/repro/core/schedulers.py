@@ -64,11 +64,25 @@ class Scheduler:
     # dedicated RNG for PTT-search tie-breaks ("seeded" mode); None = draw
     # from the shared scheduler RNG (see module docstring)
     tiebreak_rng: Optional[random.Random] = None
+    # forced-revisit escape hatch for the PTT explore-exploit trap: with
+    # probability ``revisit_eps`` a placement search returns the *stalest*
+    # candidate (least-recently-updated PTT entry — a poisoned entry's
+    # signature) instead of the argmin, so one bad measurement can't shun
+    # a place forever.  Draws come from a dedicated seeded stream so the
+    # measurement-noise/steal and tie-break streams are untouched; with
+    # ``revisit_rng`` None (the default) this path costs nothing and
+    # behavior is bit-identical to pre-escape-hatch runs.
+    revisit_eps: float = 0.0
+    revisit_rng: Optional[random.Random] = None
     _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
 
     @property
     def search_rng(self) -> random.Random:
         return self.tiebreak_rng if self.tiebreak_rng is not None else self.rng
+
+    def _force_revisit(self) -> bool:
+        return (self.revisit_rng is not None
+                and self.revisit_rng.random() < self.revisit_eps)
 
     # -- wake-time placement -------------------------------------------------
     def place_on_wake(self, task: Task, waker_core: int) -> Optional[int]:
@@ -86,8 +100,13 @@ class Scheduler:
                 # (the local-search candidates of ``core`` are exactly the
                 # aligned places of each valid width containing it).
                 tbl = self.ptt.for_type(task.type.name)
-                task.bound_place = tbl.local_search(core, cost=True,
-                                                    rng=self.search_rng)
+                if self._force_revisit():
+                    task.bound_place = tbl.stalest(
+                        self.topology.local_place_indices(core),
+                        rng=self.revisit_rng)
+                else:
+                    task.bound_place = tbl.local_search(core, cost=True,
+                                                        rng=self.search_rng)
             else:
                 task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
@@ -95,12 +114,21 @@ class Scheduler:
             tbl = self.ptt.for_type(task.type.name)
             if not self.moldable:
                 # DA: fastest single core (global search, width locked to 1).
-                task.bound_place = tbl.width1_search(cost=False, rng=self.search_rng)
+                if self._force_revisit():
+                    task.bound_place = tbl.stalest(
+                        self.topology.width1_place_indices,
+                        rng=self.revisit_rng)
+                else:
+                    task.bound_place = tbl.width1_search(
+                        cost=False, rng=self.search_rng)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
-                task.bound_place = tbl.global_search(
-                    cost=self.high_target_cost, rng=self.search_rng)
+                if self._force_revisit():
+                    task.bound_place = tbl.stalest(rng=self.revisit_rng)
+                else:
+                    task.bound_place = tbl.global_search(
+                        cost=self.high_target_cost, rng=self.search_rng)
             return task.bound_place.leader
         return None                          # RWS/RWSM-C: no special handling
 
@@ -113,6 +141,9 @@ class Scheduler:
             return self.topology.place_at(worker_core, 1)
         # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
         tbl = self.ptt.for_type(task.type.name)
+        if self._force_revisit():
+            return tbl.stalest(self.topology.local_place_indices(worker_core),
+                               rng=self.revisit_rng)
         return tbl.local_search(worker_core, cost=True, rng=self.search_rng)
 
     def may_steal(self, task: Task) -> bool:
@@ -121,7 +152,8 @@ class Scheduler:
 
 def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
                    ptt_new_weight: float = 1.0, ptt_old_weight: float = 4.0,
-                   ptt_tiebreak: str = "shared") -> Scheduler:
+                   ptt_tiebreak: str = "shared",
+                   ptt_revisit: float = 0.0) -> Scheduler:
     """Factory for the paper's seven configurations (Table 1).
 
     ``ptt_tiebreak`` selects where PTT-search tie-breaks draw from:
@@ -129,6 +161,13 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
     ``"seeded"`` uses a dedicated deterministic stream derived from
     ``seed``, decoupling placement tie-breaks from the measurement-noise
     and steal streams (see module docstring).
+
+    ``ptt_revisit`` (off at 0.0, the paper-faithful default) enables the
+    explore-exploit escape hatch: each PTT placement search returns the
+    stalest candidate instead of the argmin with this probability, so a
+    poisoned entry is eventually re-measured.  Draws use a dedicated
+    stream seeded from ``seed``; 0.0 is bit-identical to builds without
+    the hatch.
     """
     bank = PTTBank(topology, new_weight=ptt_new_weight, old_weight=ptt_old_weight)
     rng = random.Random(seed)
@@ -141,9 +180,14 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
     else:
         raise ValueError(f"unknown ptt_tiebreak {ptt_tiebreak!r} "
                          "(expected 'shared' or 'seeded')")
+    if not 0.0 <= ptt_revisit < 1.0:
+        raise ValueError(f"ptt_revisit {ptt_revisit!r} outside [0, 1)")
+    revisit_rng = (random.Random(f"ptt-revisit:{seed}")
+                   if ptt_revisit > 0.0 else None)
     n = name.upper()
     common = dict(topology=topology, ptt=bank, rng=rng,
-                  tiebreak_rng=tiebreak_rng)
+                  tiebreak_rng=tiebreak_rng, revisit_eps=ptt_revisit,
+                  revisit_rng=revisit_rng)
     if n == "RWS":
         # priority-oblivious: plain LIFO dequeue, HIGH stealable
         return Scheduler("RWS", steal_high=True, priority_dequeue=False,

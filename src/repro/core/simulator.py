@@ -82,7 +82,7 @@ from typing import Iterable, Optional
 import numpy as np
 
 from .dag import DAG
-from .interference import BackgroundApp, SpeedProfile
+from .interference import BackgroundApp, SpeedProfile, SpeedProfileBase
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
 from .schedulers import Scheduler
@@ -137,7 +137,7 @@ class _WSQ:
 
 class Simulator:
     def __init__(self, scheduler: Scheduler, *,
-                 speed: Optional[SpeedProfile] = None,
+                 speed: Optional[SpeedProfileBase] = None,
                  background: Iterable[BackgroundApp] = (),
                  horizon: float = 1e6):
         self.sched = scheduler
@@ -599,15 +599,13 @@ class Simulator:
                 self._push_event(b.t_start, "bg")
             if b.t_end < self.horizon:
                 self._push_event(b.t_end, "bg")
-        # speed breakpoints are scheduled lazily — one outstanding event at
-        # a time, the next pushed when it fires — so a DVFS square wave
-        # spanning the 1e6 s horizon contributes O(1) heap entries instead
-        # of flooding the queue with ~horizon/period events upfront
-        speed_bps = self.speed.breakpoints(self.horizon)
-        next_bp = 0
-        if speed_bps:
-            self._push_event(speed_bps[0], "speed")
-            next_bp = 1
+        # speed breakpoints are *pulled* lazily — one outstanding event at
+        # a time, the next asked of the profile only when it fires — so a
+        # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
+        # entries and closed-form profiles never enumerate anything
+        nb = self.speed.next_breakpoint(0.0)
+        if nb is not None and nb <= self.horizon:
+            self._push_event(nb, "speed")
 
         self._dispatch()
         self._refresh_rates()
@@ -633,9 +631,9 @@ class Simulator:
                 self._advance(t)
                 if kind == "speed":
                     self._recompute_speed()
-                    if next_bp < len(speed_bps):
-                        self._push_event(speed_bps[next_bp], "speed")
-                        next_bp += 1
+                    nb = self.speed.next_breakpoint(t)
+                    if nb is not None and nb <= self.horizon:
+                        self._push_event(nb, "speed")
                 elif kind == "bg":
                     self._recompute_bg()
             self._dispatch()
@@ -648,7 +646,7 @@ class Simulator:
 
 
 def simulate(dag: DAG, scheduler: Scheduler, *,
-             speed: Optional[SpeedProfile] = None,
+             speed: Optional[SpeedProfileBase] = None,
              background: Iterable[BackgroundApp] = (),
              horizon: float = 1e6) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,

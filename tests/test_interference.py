@@ -1,0 +1,397 @@
+"""Interference layer: add_window correctness, closed-form periodic
+profiles (bit-equivalence vs materialized segments), trace replay, bursty
+episodes, per-partition governors, and the lazy next_breakpoint pull model.
+"""
+import math
+
+import pytest
+
+from repro.core import (BackgroundApp, PeriodicProfile, SpeedProfile,
+                        SpeedProfileBase, TraceProfile, burst_episodes,
+                        dvfs_denver, governor_profile, make_scheduler,
+                        matmul_type, random_walk_trace, simulate,
+                        synthetic_dag, tx2)
+
+INF = float("inf")
+
+
+# -- add_window (the tail-restore bug) --------------------------------------
+
+def test_add_window_tail_restore_over_infinite_segment():
+    """Regression: an episode applied over the final (infinite) segment
+    must be lifted at t1.  The pre-fix overlap logic dropped the tail
+    restore (its ``te != inf`` clause), so the episode speed stayed in
+    force forever."""
+    prof = SpeedProfile(2).add_window((0,), 2.0, 5.0, 0.5)
+    assert prof.speed(0, 1.0) == 1.0
+    assert prof.speed(0, 2.0) == 0.5
+    assert prof.speed(0, 4.999) == 0.5
+    assert prof.speed(0, 5.0) == 1.0        # was 0.5 before the fix
+    assert prof.speed(0, 100.0) == 1.0      # ... forever
+    assert prof.speed(1, 3.0) == 1.0        # other cores untouched
+
+
+def test_add_window_past_last_square_wave_breakpoint():
+    """A window entirely beyond the last materialized breakpoint sits on
+    the persisted final phase and must restore *that* speed at t1."""
+    prof = SpeedProfile(1).add_square_wave((0,), period=2.0, lo=0.3,
+                                           t_end=4.0)
+    assert prof.speed(0, 50.0) == 0.3       # last phase (lo) persists
+    prof.add_window((0,), 10.0, 20.0, 0.8)
+    assert prof.speed(0, 9.0) == 0.3
+    assert prof.speed(0, 15.0) == 0.8
+    assert prof.speed(0, 20.0) == 0.3       # restored to the lo tail
+    assert prof.speed(0, 1e6) == 0.3
+
+
+def test_add_window_at_t0_zero():
+    prof = SpeedProfile(1).add_window((0,), 0.0, 1.0, 0.6)
+    assert prof.speed(0, 0.0) == 0.6
+    assert prof.speed(0, 0.999) == 0.6
+    assert prof.speed(0, 1.0) == 1.0
+
+
+def test_add_window_nested():
+    prof = SpeedProfile(1).add_window((0,), 1.0, 9.0, 0.5)
+    prof.add_window((0,), 3.0, 5.0, 0.25)
+    for t, want in ((0.5, 1.0), (2.0, 0.5), (4.0, 0.25), (7.0, 0.5),
+                    (9.0, 1.0), (50.0, 1.0)):
+        assert prof.speed(0, t) == want, t
+
+
+def test_add_window_unbounded_episode():
+    prof = SpeedProfile(1).add_window((0,), 2.0, INF, 0.4)
+    assert prof.speed(0, 1.0) == 1.0
+    assert prof.speed(0, 1e9) == 0.4        # no restore for t1 = inf
+
+
+def test_add_window_aligned_with_existing_breakpoints():
+    prof = SpeedProfile(1).add_square_wave((0,), period=2.0, lo=0.3,
+                                           t_end=8.0)
+    prof.add_window((0,), 1.0, 3.0, 0.9)    # t0/t1 on existing edges
+    assert prof.speed(0, 0.5) == 1.0
+    assert prof.speed(0, 1.5) == 0.9
+    assert prof.speed(0, 2.5) == 0.9
+    assert prof.speed(0, 3.0) == 0.3        # the (3.0, lo) segment resumes
+    assert prof.speed(0, 4.5) == 1.0
+
+
+def test_add_window_rejects_bad_bounds():
+    with pytest.raises(ValueError):
+        SpeedProfile(1).add_window((0,), 5.0, 5.0, 0.5)
+    with pytest.raises(ValueError):
+        SpeedProfile(1).add_window((0,), -1.0, 5.0, 0.5)
+
+
+def test_add_window_updates_breakpoints():
+    prof = SpeedProfile(1)
+    assert prof.next_breakpoint(0.0) is None
+    prof.add_window((0,), 2.0, 5.0, 0.5)
+    assert prof.breakpoints(10.0) == [2.0, 5.0]
+
+
+# -- the lazy pull model ----------------------------------------------------
+
+def test_pull_model_matches_eager_breakpoints():
+    prof = SpeedProfile(3).add_square_wave((0, 2), period=2.0, lo=0.5,
+                                           t_end=21.0)
+    prof.add_window((1,), 3.25, 7.75, 0.9)
+    eager = prof.breakpoints(15.0)
+    walk, t = [], 0.0
+    while True:
+        nb = prof.next_breakpoint(t)
+        if nb is None or nb > 15.0:
+            break
+        walk.append(nb)
+        t = nb
+    assert walk == eager
+    # the base-class eager helper is the same pull loop
+    assert SpeedProfileBase.breakpoints(prof, 15.0) == eager
+    assert prof.next_breakpoint(21.0) is None
+
+
+# -- PeriodicProfile: closed form vs materialized segments ------------------
+
+def test_dvfs_denver_is_closed_form_with_zero_materialization():
+    """Acceptance: fig7-class periodic profiles must not materialize
+    square-wave segments (the old form built ~200k per core)."""
+    prof = dvfs_denver()
+    assert isinstance(prof, PeriodicProfile)
+    assert not hasattr(prof, "_segs")
+
+
+def test_periodic_dvfs_denver_bit_identical_to_materialized():
+    """The Denver 5 s + 5 s phase boundaries are exact in floating point,
+    so the closed form must reproduce the materialized profile bit-for-bit:
+    same breakpoint sequence over the full 1e6 s horizon, same speeds at
+    every breakpoint."""
+    per = dvfs_denver()
+    mat = SpeedProfile(6).add_square_wave((0, 1), period=10.0,
+                                          lo=345.0 / 2035.0)
+    bm = mat.breakpoints(1e6)
+    assert per.breakpoints(1e6) == bm
+    assert len(bm) == 199999
+    for t in bm:
+        assert per.speed(0, t) == mat.speed(0, t)
+        assert per.speed(1, t) == mat.speed(1, t)
+    # off-pattern cores and mid-phase instants
+    for t in (0.0, 2.5, 7.5, 12.5, 999997.5, 1.5e6):
+        for c in range(6):
+            assert per.speed(c, t) == mat.speed(c, t), (c, t)
+
+
+def test_periodic_square_wave_matches_materialized_dyadic():
+    """Any dyadic period (phase boundaries exact in fp) is bit-identical
+    between the two representations, including the persisted final phase
+    beyond t_end."""
+    period, t_end = 0.25, 3.3
+    per = PeriodicProfile.square_wave(1, (0,), period=period, lo=0.4,
+                                      hi_first=False, t_end=t_end)
+    mat = SpeedProfile(1).add_square_wave((0,), period=period, lo=0.4,
+                                          hi_first=False, t_end=t_end)
+    assert per.breakpoints(100.0) == mat.breakpoints(100.0)
+    probes = [k * period / 2 for k in range(30)] + [3.2, 3.3, 7.0, 1e4]
+    for t in probes:
+        assert per.speed(0, t) == mat.speed(0, t), t
+
+
+def test_periodic_multiphase_pattern():
+    prof = PeriodicProfile(2).set_pattern(
+        (0,), ((1.0, 1.0), (0.5, 0.3), (0.5, 0.6)), t_end=INF)
+    for t, want in ((0.5, 1.0), (1.2, 0.3), (1.7, 0.6), (2.5, 1.0),
+                    (7.25, 0.3), (103.75, 0.6)):
+        assert prof.speed(0, t) == want, t
+    assert prof.speed(1, 5.0) == 1.0            # core without a pattern
+    assert prof.next_breakpoint(0.0) == 1.0
+    assert prof.next_breakpoint(1.0) == 1.5
+    assert prof.next_breakpoint(1.5) == 2.0
+    assert prof.next_breakpoint(1e6) is not None    # unbounded pattern
+
+
+def test_periodic_t_end_final_phase_persists():
+    per = PeriodicProfile.square_wave(1, (0,), period=2.0, lo=0.3, t_end=3.5)
+    assert per.breakpoints(100.0) == [1.0, 2.0, 3.0]
+    assert per.next_breakpoint(3.0) is None
+    assert per.speed(0, 3.2) == 0.3
+    assert per.speed(0, 1e9) == 0.3
+
+
+def test_periodic_speed_consistent_with_next_breakpoint_nondyadic():
+    """Regression: at non-dyadic periods the pulled breakpoint instants
+    round differently from an arithmetically reconstructed within-period
+    remainder, and speed() at the pulled instant used to return the
+    *pre*-flip phase — the simulator then silently lost most flips.  A
+    square wave must alternate at every one of its own breakpoints."""
+    per = PeriodicProfile.square_wave(1, (0,), period=0.0042, lo=0.17,
+                                      t_end=0.5)
+    bps = per.breakpoints(0.5)
+    assert len(bps) > 200
+    speeds = [per.speed(0, t) for t in bps]
+    assert speeds[0] == 0.17                    # first flip is hi -> lo
+    assert all(a != b for a, b in zip(speeds, speeds[1:]))
+    # the two representations place each flip instant one ulp apart at
+    # non-dyadic periods (closed form vs accumulation — documented), but
+    # away from the boundaries, i.e. mid-phase, they must agree exactly
+    mat = SpeedProfile(1).add_square_wave((0,), period=0.0042, lo=0.17,
+                                          t_end=0.5)
+    for t in mat.breakpoints(0.5):
+        mid = t + 0.0042 / 4
+        assert per.speed(0, mid) == mat.speed(0, mid), mid
+
+
+def test_governor_patterns_deduped_by_value():
+    """governor_profile with zero spread builds one _Pattern per
+    partition; value equality must collapse them so next_breakpoint scans
+    O(distinct waves), not O(partitions)."""
+    from repro.core import haswell_cluster
+    gov = governor_profile(haswell_cluster(), period=2.0, lo=0.5,
+                           t_end=100.0, period_spread=0.0)
+    assert len(gov._distinct) == 2              # hi-first + lo-first
+
+
+def test_breakpoints_rejects_infinite_horizon():
+    """An unbounded periodic profile has infinitely many breakpoints; the
+    eager helper must refuse rather than loop forever."""
+    prof = PeriodicProfile(1).set_pattern((0,), ((1.0, 1.0), (1.0, 0.5)),
+                                          t_end=INF)
+    with pytest.raises(ValueError, match="finite horizon"):
+        prof.breakpoints(INF)
+
+
+def test_periodic_rejects_bad_patterns():
+    with pytest.raises(ValueError):
+        PeriodicProfile(1).set_pattern((0,), ())
+    with pytest.raises(ValueError):
+        PeriodicProfile(1).set_pattern((0,), ((0.0, 1.0),))
+
+
+def test_periodic_schedule_bit_identical_to_materialized():
+    """Acceptance: swapping a materialized square wave for its closed-form
+    periodic equivalent must leave the produced *schedule* bit-identical
+    (dyadic period so every breakpoint is exact)."""
+    period = 1 / 256
+
+    def run(speed):
+        sched = make_scheduler("DAM-C", tx2(), seed=3)
+        dag = synthetic_dag(matmul_type(64), parallelism=4, total_tasks=1200)
+        return simulate(dag, sched, speed=speed)
+
+    mat = run(SpeedProfile(6).add_square_wave((0, 1), period=period, lo=0.17,
+                                              t_end=0.5))
+    per = run(PeriodicProfile.square_wave(6, (0, 1), period=period, lo=0.17,
+                                          t_end=0.5))
+    assert mat.makespan > 8 * period    # the wave actually fired, many times
+    assert per.makespan == mat.makespan
+    assert per.placement_counts() == mat.placement_counts()
+    assert per.placement_counts(priority=1) == mat.placement_counts(priority=1)
+
+
+# -- TraceProfile -----------------------------------------------------------
+
+def test_trace_profile_replay():
+    prof = TraceProfile(3, {1: [(0.0, 0.8), (1.0, 0.5), (2.5, 1.2)]})
+    for t, want in ((0.0, 0.8), (0.9, 0.8), (1.0, 0.5), (2.49, 0.5),
+                    (2.5, 1.2), (1e6, 1.2)):
+        assert prof.speed(1, t) == want, t
+    assert prof.speed(0, 1.5) == 1.0            # untraced core
+    assert prof.breakpoints(10.0) == [1.0, 2.5]
+
+
+def test_trace_profile_implicit_head():
+    prof = TraceProfile(1, {0: [(2.0, 0.5)]})
+    assert prof.speed(0, 1.0) == 1.0            # 1.0 before the first point
+    assert prof.speed(0, 3.0) == 0.5
+
+
+def test_trace_profile_validation():
+    with pytest.raises(ValueError):
+        TraceProfile(1, {2: [(0.0, 1.0)]})      # core out of range
+    with pytest.raises(ValueError):
+        TraceProfile(1, {0: [(1.0, 1.0), (1.0, 0.5)]})  # non-increasing t
+    with pytest.raises(ValueError):
+        TraceProfile(1, {0: [(0.0, -0.5)]})     # non-positive speed
+
+
+def test_random_walk_trace_reproducible_and_bounded():
+    a = random_walk_trace(4, (0, 2), seed=9, dt=0.01, t_end=0.3, lo=0.2,
+                          hi=0.9, step=0.3)
+    b = random_walk_trace(4, (0, 2), seed=9, dt=0.01, t_end=0.3, lo=0.2,
+                          hi=0.9, step=0.3)
+    assert a._segs == b._segs
+    for c in (0, 2):
+        assert len(a._segs[c]) == 30
+        assert all(0.2 <= sp <= 0.9 for _, sp in a._segs[c])
+    assert a.speed(1, 0.1) == 1.0               # unlisted core untouched
+    c = random_walk_trace(4, (0, 2), seed=10, dt=0.01, t_end=0.3)
+    assert c._segs != a._segs                   # seed matters
+    with pytest.raises(ValueError):
+        random_walk_trace(4, seed=1, dt=0.01, t_end=INF)
+
+
+# -- bursty background episodes ---------------------------------------------
+
+def test_burst_episodes_seeded_and_bounded():
+    tt = matmul_type(64)
+    eps = burst_episodes(tt, (0, 1), seed=4, t_end=1.0,
+                         mean_on=0.05, mean_off=0.1)
+    assert eps == burst_episodes(tt, (0, 1), seed=4, t_end=1.0,
+                                 mean_on=0.05, mean_off=0.1)
+    assert len(eps) > 0
+    prev_end = 0.0
+    for e in eps:
+        assert isinstance(e, BackgroundApp)
+        assert e.cores == (0, 1)
+        assert prev_end <= e.t_start < e.t_end <= 1.0
+        assert e.active((e.t_start + e.t_end) / 2)
+        assert not e.active(e.t_end)
+        prev_end = e.t_end
+    other = burst_episodes(tt, (0, 1), seed=5, t_end=1.0,
+                           mean_on=0.05, mean_off=0.1)
+    assert other != eps
+
+
+def test_burst_episodes_validation():
+    with pytest.raises(ValueError):
+        burst_episodes(matmul_type(64), (0,), seed=1, t_end=INF,
+                       mean_on=0.1, mean_off=0.1)
+    with pytest.raises(ValueError):
+        burst_episodes(matmul_type(64), (0,), seed=1, t_end=1.0,
+                       mean_on=0.0, mean_off=0.1)
+
+
+def test_burst_episodes_interfere():
+    """Bounded bursts slow the run down, but less than a persistent
+    co-runner on the same cores."""
+    tt = matmul_type(64)
+
+    def run(background):
+        sched = make_scheduler("RWS", tx2(), seed=2)
+        dag = synthetic_dag(tt, parallelism=4, total_tasks=300)
+        return simulate(dag, sched, background=list(background)).makespan
+
+    clean = run(())
+    bursts = burst_episodes(tt, (0, 1, 2), seed=3, t_end=1.0,
+                            mean_on=0.005, mean_off=0.005)
+    persistent = [BackgroundApp(tt, (0, 1, 2))]
+    assert clean < run(bursts) < run(persistent)
+
+
+# -- per-partition governors ------------------------------------------------
+
+def test_governor_staggers_partitions():
+    topo = tx2()            # denver (cores 0-1), a57 (cores 2-5)
+    gov = governor_profile(topo, period=2.0, lo=0.5, t_end=100.0)
+    assert isinstance(gov, PeriodicProfile)
+    # partition 0 starts hi, partition 1 starts lo (staggered phases)
+    assert gov.speed(0, 0.5) == 1.0 and gov.speed(1, 0.5) == 1.0
+    assert gov.speed(2, 0.5) == 0.5 and gov.speed(5, 0.5) == 0.5
+    assert gov.speed(0, 1.5) == 0.5 and gov.speed(2, 1.5) == 1.0
+
+
+def test_governor_period_spread_detunes():
+    topo = tx2()
+    gov = governor_profile(topo, period=2.0, lo=0.5, t_end=1e6,
+                           period_spread=0.25, stagger=False)
+    # partition 1's period is 2.0*(1+0.25) = 2.5: first edges at 1.0, 1.25
+    assert gov.next_breakpoint(0.0) == 1.0
+    assert gov.next_breakpoint(1.0) == 1.25
+    assert gov.speed(0, 1.1) == 0.5             # denver flipped at 1.0
+    assert gov.speed(2, 1.1) == 1.0             # a57 flips only at 1.25
+
+
+def test_governor_kinds_filter_still_staggers():
+    """Stagger/detune index over *governed* partitions: filtering to one
+    kind on an alternating topology must not put the governed clusters
+    back in lockstep."""
+    from repro.core import tx2_xl
+    topo = tx2_xl(2)        # denver0, a57_0, denver1, a57_1
+    gov = governor_profile(topo, period=2.0, lo=0.5, t_end=100.0,
+                           kinds=("denver",))
+    # the two denver clusters (cores 0-1 and 6-7) are phase-opposed
+    assert gov.speed(0, 0.5) == 1.0 and gov.speed(6, 0.5) == 0.5
+    assert gov.speed(0, 1.5) == 0.5 and gov.speed(6, 1.5) == 1.0
+    assert gov.speed(2, 0.5) == 1.0          # a57s ungoverned
+
+
+def test_governor_kinds_filter():
+    topo = tx2()
+    gov = governor_profile(topo, period=2.0, lo=0.5, t_end=100.0,
+                           kinds=("denver",))
+    assert gov.speed(0, 1.5) == 0.5
+    assert gov.speed(2, 1.5) == 1.0             # a57 ungoverned
+    with pytest.raises(ValueError):
+        governor_profile(topo, kinds=("pod",))
+
+
+def test_governor_drives_the_simulator():
+    tt = matmul_type(64)
+
+    def run(speed):
+        sched = make_scheduler("DAM-C", tx2(), seed=1)
+        dag = synthetic_dag(tt, parallelism=4, total_tasks=300)
+        return simulate(dag, sched, speed=speed).makespan
+
+    plain = run(None)
+    governed = run(governor_profile(tx2(), period=0.004, lo=0.2, t_end=1.0))
+    assert governed > plain                     # the governor costs time
+    assert math.isfinite(governed)

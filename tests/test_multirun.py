@@ -1,10 +1,12 @@
-"""Batched multi-run engine: spec resolution, deterministic seeding, and
-bit-identical results across worker counts / chunk layouts."""
+"""Batched multi-run engine: spec resolution, deterministic seeding,
+bit-identical results across worker counts / chunk layouts, and the
+cached worker pool."""
 import dataclasses
 
 import pytest
 
-from repro.core import RunSpec, run_cell, run_cells
+from repro.core import RunSpec, run_cell, run_cells, shutdown_pool
+from repro.core import multirun
 
 _TT = ("matmul", {"tile": 64})
 
@@ -99,6 +101,62 @@ def test_speed_and_sched_kwargs_specs():
     )
     res = run_cell(spec)
     assert res["n_tasks"] == 120
+
+
+def test_scenario_speed_and_background_builders():
+    """The scenario registry entries: bursty episode tuples are flattened
+    into the background list; governor / trace_walk / periodic_square
+    speed builders resolve against the cell's topology."""
+    base = dict(
+        dag=("synthetic", {"task_type": _TT, "parallelism": 4,
+                           "total_tasks": 160}),
+        scheduler="DAM-C", topology=("tx2_xl", {"clusters": 2}), seed=2)
+    bursty = RunSpec(key="bursty", background=(
+        ("bursty", {"task_type": _TT, "cores": (0, 1), "seed": 2,
+                    "t_end": 0.5, "mean_on": 0.002, "mean_off": 0.004}),),
+        **base)
+    gov = RunSpec(key="gov", speed=("governor", {"period": 0.004, "lo": 0.3,
+                                                 "t_end": 0.5}), **base)
+    trace = RunSpec(key="trace", speed=("trace_walk", {"seed": 7, "dt": 0.002,
+                                                       "t_end": 0.5}), **base)
+    periodic = RunSpec(key="per", speed=("periodic_square",
+                                         {"cores": (0, 1), "period": 0.004,
+                                          "lo": 0.2, "t_end": 0.5}), **base)
+    for spec in (bursty, gov, trace, periodic):
+        res = run_cell(spec)
+        assert res["n_tasks"] == 160, spec.key
+        assert res == run_cell(spec), spec.key      # deterministic
+
+
+def test_pool_reused_across_calls():
+    """The spawn pool survives run_cells calls (the ~1.3 s fixed spawn
+    cost is paid once per worker count), without changing any result."""
+    specs = _grid(seeds=(1, 2))
+    serial = run_cells(specs, workers=1)
+    assert multirun._pool is None or multirun._pool_workers  # sanity
+    a = run_cells(specs, workers=2)
+    pool = multirun._pool
+    assert pool is not None
+    b = run_cells(specs, workers=2)
+    assert multirun._pool is pool                   # same pool object
+    assert a == b == serial
+    shutdown_pool()
+    assert multirun._pool is None
+    shutdown_pool()                                 # idempotent
+    c = run_cells(specs, workers=2)                 # respawns on demand
+    assert c == serial
+    shutdown_pool()
+
+
+def test_pool_worker_count_change_respawns():
+    specs = _grid(seeds=(1, 2, 3))
+    a = run_cells(specs, workers=2)
+    pool2 = multirun._pool
+    b = run_cells(specs, workers=3)
+    assert multirun._pool is not pool2
+    assert multirun._pool_workers == 3
+    assert a == b
+    shutdown_pool()
 
 
 def test_dynamic_dag_builders():

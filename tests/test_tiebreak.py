@@ -37,9 +37,24 @@ RWSM_C_P6_MAKESPANS = {
 }
 
 
-def _trap_cell(seed, *, tiebreak="seeded"):
+# the same cells with the forced-revisit escape hatch on (eps=0.05): the
+# trapped seed (5 — the slowest basin above) is pulled out of its basin,
+# and the max/min spread across seeds shrinks
+REVISIT_EPS = 0.05
+RWSM_C_P6_REVISIT_MAKESPANS = {
+    1: 0.011829552494,
+    2: 0.012165812722,
+    3: 0.010144835762,
+    4: 0.011280841729,
+    5: 0.012039180723,
+    6: 0.012071634042,
+}
+
+
+def _trap_cell(seed, *, tiebreak="seeded", revisit=0.0):
     tt = matmul_type(64)
-    sched = make_scheduler("RWSM-C", tx2(), seed=seed, ptt_tiebreak=tiebreak)
+    sched = make_scheduler("RWSM-C", tx2(), seed=seed, ptt_tiebreak=tiebreak,
+                           ptt_revisit=revisit)
     dag = synthetic_dag(tt, parallelism=6, total_tasks=N_TASKS)
     speed = SpeedProfile(6).add_square_wave((0, 1), period=0.004, lo=0.17,
                                             t_end=0.2)
@@ -105,6 +120,90 @@ def test_unknown_tiebreak_mode_rejected():
         make_scheduler("DA", tx2(), seed=1, ptt_tiebreak="bogus")
 
 
+# -- the ptt_revisit escape hatch -------------------------------------------
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_revisit_basin_pinned(seed):
+    m = _trap_cell(seed, revisit=REVISIT_EPS)
+    assert m.n_tasks == N_TASKS
+    assert m.makespan == pytest.approx(RWSM_C_P6_REVISIT_MAKESPANS[seed],
+                                       rel=1e-9)
+
+
+def test_revisit_escapes_the_trap():
+    """The hatch's purpose: the trapped seed (slowest basin) escapes —
+    its makespan with forced revisits beats its pinned trap value — and
+    the cross-seed basin spread shrinks."""
+    trapped_seed = max(RWSM_C_P6_MAKESPANS, key=RWSM_C_P6_MAKESPANS.get)
+    trapped = RWSM_C_P6_MAKESPANS[trapped_seed]
+    escaped = RWSM_C_P6_REVISIT_MAKESPANS[trapped_seed]
+    assert escaped < 0.96 * trapped
+    spread = lambda d: max(d.values()) / min(d.values())
+    assert spread(RWSM_C_P6_REVISIT_MAKESPANS) < spread(RWSM_C_P6_MAKESPANS)
+
+
+def test_revisit_off_is_bit_identical():
+    """ptt_revisit=0.0 (the default) must not change anything: no revisit
+    RNG exists, no draws happen, results equal the non-hatch pins."""
+    sched = make_scheduler("RWSM-C", tx2(), seed=3)
+    assert sched.revisit_rng is None
+    m = _trap_cell(3, revisit=0.0)
+    assert m.makespan == pytest.approx(RWSM_C_P6_MAKESPANS[3], rel=1e-9)
+
+
+def test_revisit_is_deterministic():
+    a = _trap_cell(5, revisit=REVISIT_EPS)
+    b = _trap_cell(5, revisit=REVISIT_EPS)
+    assert a.makespan == b.makespan
+    assert a.placement_counts() == b.placement_counts()
+
+
+def test_revisit_does_not_consume_other_streams():
+    """Forced-revisit draws come from their own seeded stream; the shared
+    (noise/steal) and tie-break streams must be untouched by a revisit
+    decision + stalest pick."""
+    sched = make_scheduler("DAM-C", tx2(), seed=11, ptt_tiebreak="seeded",
+                           ptt_revisit=0.5)
+    tbl = sched.ptt.for_type("matmul64")
+    state, tb_state = sched.rng.getstate(), sched.tiebreak_rng.getstate()
+    rv_state = sched.revisit_rng.getstate()
+    for _ in range(20):                  # some draws force, some don't
+        if sched._force_revisit():
+            tbl.stalest(rng=sched.revisit_rng)
+    assert sched.rng.getstate() == state
+    assert sched.tiebreak_rng.getstate() == tb_state
+    assert sched.revisit_rng.getstate() != rv_state
+
+
+def test_revisit_targets_the_stalest_entry():
+    """stalest() must return the least-recently-updated candidate — the
+    poisoned-entry signature — not merely a random one."""
+    topo = tx2()
+    sched = make_scheduler("DAM-C", topo, seed=1)
+    tbl = sched.ptt.for_type("matmul64")
+    places = topo.places()
+    for pl in places:                    # visit everything once, in order
+        tbl.update(pl, 1.0)
+    for pl in places[1:]:                # re-visit all but the first
+        tbl.update(pl, 1.0)
+    assert tbl.stalest() == places[0]
+    # and never-updated entries are stalest of all
+    sched2 = make_scheduler("DAM-C", topo, seed=1)
+    tbl2 = sched2.ptt.for_type("matmul64")
+    for pl in places[1:]:
+        tbl2.update(pl, 1.0)
+    assert tbl2.stalest() == places[0]
+
+
+def test_revisit_bad_eps_rejected():
+    with pytest.raises(ValueError, match="ptt_revisit"):
+        make_scheduler("DA", tx2(), seed=1, ptt_revisit=1.5)
+
+
 if __name__ == "__main__":                        # regenerate the pins
     for s in SEEDS:
         print(f"    {s}: {round(_trap_cell(s).makespan, 12)},")
+    print("revisit:")
+    for s in SEEDS:
+        print(f"    {s}: "
+              f"{round(_trap_cell(s, revisit=REVISIT_EPS).makespan, 12)},")
