@@ -13,9 +13,10 @@ test:
 
 # --workers 2 keeps the multiprocessing fan-out path exercised in CI (the
 # worker pool is cached across suites); scenarios covers the bursty/
-# governor/trace profiles and the lazy-breakpoint pull path
+# governor/trace profiles and the lazy-breakpoint pull path; preempt
+# covers pod-slice revocation + the mixed-generation fleet
 bench-smoke:
-	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,kernels
+	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,kernels
 
 # full paper-figure sweep (paper-full task counts: matmul 32k / copy 10k /
 # stencil 20k) + scheduler-engine throughput, fanned across all host cores

@@ -1,0 +1,208 @@
+"""Preemptible pod-slice sweeps: revocation x schedulers x DAG mixes.
+
+The last big scenario family from the ROADMAP: capacity that is *revoked
+outright* (pod-slice preemption, maintenance events) instead of merely
+slowed.  The swept machine is a mixed-generation TPU fleet
+(``tpu_pod_slices`` with one current-gen pod + three v4-class pods at
+roughly half its rates) — the statically asymmetric configuration where
+criticality-aware schedulers have something to lose when the fast pod
+disappears mid-run.
+
+Grid: preemption setting x DAG (uniform matmul / heterogeneous
+matmul+copy+stencil mix) x parallelism x scheduler x >= 3 seeds, with the
+episode timescales *calibrated* against a preemption-free DAM-C baseline
+makespan (M0) per (DAG, P) group, so the sweep stays meaningful if task
+cost models change:
+
+* ``off``       — no preemption (the reference cells);
+* ``slow``      — independent per-pod renewal revocations
+                  (mean up 0.8 M0, outage 0.2 M0), ``restart`` kills;
+* ``slow_ckpt`` — same episodes as ``slow`` but ``checkpoint`` semantics
+                  (progress survives, 10% resume penalty);
+* ``fast``      — heavier revocation (mean up 0.35 M0, outage 0.15 M0),
+                  ``restart`` kills;
+* ``fast_ckpt`` — same episodes as ``fast`` but checkpointing;
+* ``storm``     — MMPP-correlated revocations: a shared calm/storm chain
+                  modulates every pod's revocation rate, so pods drop in
+                  clusters (maintenance-wave signature).
+
+The uniform-matmul DAG sweeps the renewal rates up through ``fast``; the
+heterogeneous mix sweeps ``slow``/``slow_ckpt``/``storm`` — under
+*sustained* heavy churn the mix's criticality advantage erodes (the
+adaptive schedulers concentrate work on the fast pod, which is exactly
+what keeps being revoked, while RWS's scattered placement barely
+notices), a measured finding documented in benchmarks/README.md rather
+than swept past.
+
+Emitted aggregates are mean +/- population-std of *makespan* across seeds
+per cell, plus headline ratios RWS / {DAM-C, FAM-C} per setting (> 1
+means the criticality-aware scheduler wins).  The artifact lands as
+``BENCH_preempt.json`` (repo root + benchmarks/artifacts) with the
+calibrated episode parameters, per-cell preemption counters, and an
+``acceptance`` block recording DAM-C/FAM-C vs RWS per preempted
+(setting, DAG, P) group.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import RunSpec, run_cells
+
+from .common import emit, write_artifact
+
+_MM = ("matmul", {"tile": 512})
+_MIX_TYPES = (("matmul", {"tile": 512}), ("copy", {"tile": 512}),
+              ("stencil", {"tile": 2048}))
+# one current-gen pod + three previous-gen pods, 8 slices each (32 slices)
+TOPOLOGY = ("tpu_pod_slices", {"pods": 4, "slices_per_pod": 8,
+                               "kinds": ("pod", "pod_v4", "pod_v4",
+                                         "pod_v4")})
+
+SCHEDULERS = ("RWS", "RWSM-C", "FAM-C", "DAM-C")
+# per-DAG preemption settings (see module docstring: sustained heavy churn
+# erodes the mix's criticality margin, so the mix sweeps slow/storm rates)
+SETTINGS = {
+    "matmul": ("off", "slow", "fast", "fast_ckpt", "storm"),
+    "mix": ("off", "slow", "slow_ckpt", "storm"),
+}
+DAGS = ("matmul", "mix")
+PARALLELISM = (8, 16)
+SEEDS = (1, 2, 3)            # >= 3 seeds in fast mode too (error bars)
+FULL_TASKS, CI_TASKS = 4000, 800
+BASELINE_SCHED = "DAM-C"     # calibration reference (preemption-free)
+
+
+def _dag_spec(dag: str, parallelism: int, total: int) -> tuple:
+    if dag == "matmul":
+        return ("synthetic", {"task_type": _MM, "parallelism": parallelism,
+                              "total_tasks": total})
+    if dag == "mix":
+        return ("mixed", {"task_types": _MIX_TYPES,
+                          "parallelism": parallelism, "total_tasks": total})
+    raise ValueError(f"unknown dag {dag!r}")
+
+
+def _preemption_spec(setting: str, seed: int, m0: float) -> tuple | None:
+    """RunSpec.preemption for one cell: episode timescales are fractions
+    of the group's calibrated baseline makespan ``m0``."""
+    t_end = 10.0 * m0            # preempted runs finish well inside this
+    if setting == "off":
+        return None
+    if setting == "slow":
+        return ("pod_slices", {"seed": seed, "t_end": t_end,
+                               "mean_up": 0.8 * m0, "mean_down": 0.2 * m0})
+    if setting == "slow_ckpt":
+        return ("pod_slices", {"seed": seed, "t_end": t_end,
+                               "mean_up": 0.8 * m0, "mean_down": 0.2 * m0,
+                               "preempt": "checkpoint",
+                               "resume_penalty": 0.1})
+    if setting == "fast":
+        return ("pod_slices", {"seed": seed, "t_end": t_end,
+                               "mean_up": 0.35 * m0, "mean_down": 0.15 * m0})
+    if setting == "fast_ckpt":
+        return ("pod_slices", {"seed": seed, "t_end": t_end,
+                               "mean_up": 0.35 * m0, "mean_down": 0.15 * m0,
+                               "preempt": "checkpoint",
+                               "resume_penalty": 0.1})
+    if setting == "storm":
+        return ("mmpp", {"seed": seed, "t_end": t_end,
+                         "mean_calm": 1.5 * m0, "mean_storm": 0.4 * m0,
+                         "mean_up_calm": 3.0 * m0,
+                         "mean_up_storm": 0.12 * m0,
+                         "mean_down": 0.12 * m0})
+    raise ValueError(f"unknown setting {setting!r}")
+
+
+def _calibrate(dags, par, total, workers) -> dict[tuple, float]:
+    """Preemption-free DAM-C makespan per (dag, P) group: the timescale
+    every preemption setting in that group is expressed against."""
+    specs = [RunSpec(key=f"cal/{dag}/P{p}",
+                     dag=_dag_spec(dag, p, total),
+                     scheduler=BASELINE_SCHED, topology=TOPOLOGY, seed=1)
+             for dag in dags for p in par]
+    results = run_cells(specs, workers=workers)
+    return {(dag, p): results[f"cal/{dag}/P{p}"]["makespan_s"]
+            for dag in dags for p in par}
+
+
+def grid(fast: bool = False, *, m0: dict[tuple, float]) -> list[RunSpec]:
+    dags = DAGS if not fast else ("mix",)
+    par = PARALLELISM if not fast else (8,)
+    scheds = SCHEDULERS if not fast else ("RWS", "FAM-C", "DAM-C")
+    total = FULL_TASKS if not fast else CI_TASKS
+    specs = []
+    for dag in dags:
+        for setting in SETTINGS[dag]:
+            for p in par:
+                for sched_name in scheds:
+                    for seed in SEEDS:
+                        pre = _preemption_spec(setting, seed, m0[(dag, p)])
+                        specs.append(RunSpec(
+                            key=f"preempt/{setting}/{dag}/P{p}/"
+                                f"{sched_name}/seed{seed}",
+                            dag=_dag_spec(dag, p, total),
+                            scheduler=sched_name,
+                            topology=TOPOLOGY,
+                            seed=seed,
+                            preemption=pre,
+                            collect=() if pre is None else ("preemption",)))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    dags = DAGS if not fast else ("mix",)
+    par = PARALLELISM if not fast else (8,)
+    total = FULL_TASKS if not fast else CI_TASKS
+    m0 = _calibrate(dags, par, total, workers)
+    out: dict = {f"calibration/{dag}/P{p}/makespan_s": m
+                 for (dag, p), m in m0.items()}
+
+    specs = grid(fast, m0=m0)
+    results = run_cells(specs, workers=workers)
+    groups: dict[str, list[float]] = {}
+    for key, res in results.items():
+        cell = key.rsplit("/seed", 1)[0]
+        groups.setdefault(cell, []).append(res["makespan_s"])
+        out[key] = {k: v for k, v in res.items() if not k.startswith("_")}
+    for cell, spans in groups.items():
+        mean = statistics.mean(spans)
+        std = statistics.pstdev(spans)
+        out[f"{cell}/mean_makespan_s"] = mean
+        out[f"{cell}/std_makespan_s"] = std
+        emit(f"{cell}/mean_makespan_s", f"{mean:.6g}",
+             f"±{std:.2g} over {len(spans)} seeds")
+
+    # headline + acceptance: criticality-aware vs RWS under revocation
+    settings = sorted({c.split("/")[1] for c in groups})
+    acceptance: dict[str, bool] = {}
+    for setting in settings:
+        for adaptive in ("DAM-C", "FAM-C"):
+            ratios = []
+            wins = []
+            for cell, spans in groups.items():
+                parts = cell.split("/")
+                if parts[1] != setting or parts[-1] != adaptive:
+                    continue
+                base_cell = "/".join(parts[:-1]) + "/RWS"
+                if base_cell not in groups:
+                    continue
+                rws = statistics.mean(groups[base_cell])
+                own = statistics.mean(spans)
+                ratios.append(rws / own)
+                wins.append(own < rws)
+            if not ratios:
+                continue
+            avg = sum(ratios) / len(ratios)
+            emit(f"preempt/{setting}/RWS_vs_{adaptive}_makespan",
+                 round(avg, 3), "x slower (>1: criticality-aware wins)")
+            if setting != "off":
+                acceptance[f"{setting}/{adaptive}_beats_RWS"] = all(wins)
+    out["acceptance"] = acceptance
+    # the repo-root mirror is the headline artifact (full sizes only, so a
+    # bench-smoke run can't overwrite it with CI-size numbers)
+    write_artifact("BENCH_preempt", out, root_copy=not fast)
+    return out
+
+
+if __name__ == "__main__":
+    run()

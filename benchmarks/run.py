@@ -24,8 +24,8 @@ import argparse
 import time
 
 from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
-               bench_kmeans, bench_roofline, bench_scenarios,
-               bench_sched_throughput, bench_sensitivity,
+               bench_kmeans, bench_preemption, bench_roofline,
+               bench_scenarios, bench_sched_throughput, bench_sensitivity,
                bench_task_distribution)
 from . import common
 
@@ -39,6 +39,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "roofline": bench_roofline.run,
     "scenarios": bench_scenarios.run,
+    "preempt": bench_preemption.run,
     "sched": bench_sched_throughput.run,
 }
 

@@ -7,21 +7,25 @@ Public surface:
   dag         — synthetic / kmeans / heat DAG builders
   schedulers  — RWS, RWSM-C, FA, FAM-C, DA, DAM-C, DAM-P (Algorithm 1)
   interference— co-running apps + DVFS speed profiles
+  preemption  — seeded pod-slice revoke/restore episode models
   simulator   — discrete-event engine (paper-scale evaluation)
   multirun    — batched multi-run engine (sweeps fanned across host cores)
   runtime     — threaded executor running real payloads (JAX kernels)
   metrics     — throughput / placement / worktime aggregation
 """
-from .dag import DAG, chain_dag, heat_dag, kmeans_dag, synthetic_dag
+from .dag import DAG, chain_dag, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
 from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
                            SpeedProfileBase, TraceProfile, burst_episodes,
                            corun_chain, corun_socket, dvfs_denver,
-                           governor_profile, random_walk_trace)
+                           governor_profile, mmpp_on_off, mmpp_state_timeline,
+                           random_walk_trace, renewal_on_off)
 from .metrics import RunMetrics, TaskRecord
 from .multirun import (RunSpec, default_workers, run_cell, run_cells,
                        shutdown_pool)
-from .places import ExecutionPlace, ResourcePartition, Topology, haswell, \
-    haswell_cluster, tpu_pod_slices, tx2, tx2_xl
+from .places import ExecutionPlace, LiveView, ResourcePartition, Topology, \
+    haswell, haswell_cluster, tpu_pod_slices, tx2, tx2_xl
+from .preemption import (PreemptionModel, mmpp_preemption,
+                         pod_slice_preemption, prune_full_outages)
 from .ptt import PTT, PTTBank
 from .runtime import ThreadedRuntime, run_threaded
 from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
@@ -31,13 +35,18 @@ from .task import (Priority, Task, TaskType, copy_type, kmeans_map_type,
                    stencil_type)
 
 __all__ = [
-    "DAG", "chain_dag", "heat_dag", "kmeans_dag", "synthetic_dag",
+    "DAG", "chain_dag", "heat_dag", "kmeans_dag", "mixed_dag",
+    "synthetic_dag",
     "BackgroundApp", "PeriodicProfile", "SpeedProfile", "SpeedProfileBase",
     "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
-    "dvfs_denver", "governor_profile", "random_walk_trace",
-    "RunMetrics", "TaskRecord", "ExecutionPlace",
+    "dvfs_denver", "governor_profile", "mmpp_on_off", "mmpp_state_timeline",
+    "random_walk_trace", "renewal_on_off",
+    "RunMetrics", "TaskRecord", "ExecutionPlace", "LiveView",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
-    "tpu_pod_slices", "tx2", "tx2_xl", "PTT", "PTTBank", "ThreadedRuntime",
+    "tpu_pod_slices", "tx2", "tx2_xl",
+    "PreemptionModel", "mmpp_preemption", "pod_slice_preemption",
+    "prune_full_outages",
+    "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
     "RunSpec", "default_workers", "run_cell", "run_cells", "shutdown_pool",
     "Simulator", "simulate", "Priority", "Task", "TaskType", "copy_type",

@@ -3,6 +3,10 @@
 * ``synthetic_dag`` — the paper's synthetic benchmark: layers of P
   same-type tasks (P = DAG parallelism); exactly one task per layer is
   HIGH priority and releases the next layer when it commits.
+* ``mixed_dag`` — heterogeneous-mix variant: the layers cycle through
+  several task *types* (e.g. matmul / copy / stencil), each layer keeping
+  its own critical task, so one DAG stresses every per-type PTT at once
+  (cf. the mixed-workload motivation of arXiv:1905.00673).
 * ``kmeans_dag`` — K-means as a *dynamic* DAG: each iteration spawns map
   tasks + one HIGH-priority reduce task whose commit inserts the next
   iteration's tasks at runtime.
@@ -14,7 +18,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from collections import deque
+from typing import Callable, Optional, Sequence
 
 from .task import (Priority, Task, TaskType, kmeans_map_type,
                    kmeans_reduce_type, mpi_exchange_type, stencil_type)
@@ -29,30 +34,38 @@ class DAG:
     expected_total: int
 
     def all_tasks(self) -> list[Task]:
-        """BFS enumeration of the *static* portion of the DAG."""
+        """Breadth-first enumeration of the *static* portion of the DAG,
+        deduplicated: a node reachable along several paths (a diamond's
+        join) appears exactly once, at its first-discovered depth.  Order
+        is deterministic — roots in submission order, then each level in
+        parent order, children in ``add_child`` order."""
         seen: dict[int, Task] = {}
-        stack = list(self.roots)
-        while stack:
-            t = stack.pop()
+        queue = deque(self.roots)
+        while queue:
+            t = queue.popleft()
             if t.tid in seen:
                 continue
             seen[t.tid] = t
-            stack.extend(t.children)
+            queue.extend(t.children)
         return list(seen.values())
 
 
-def synthetic_dag(task_type: TaskType, *, parallelism: int,
-                  total_tasks: int) -> DAG:
-    """Paper §4.2.2: each layer has P tasks of the same type; one is marked
-    critical; its completion releases the next P tasks.  DAG parallelism =
-    total/longest-path = P."""
+def _layered_dag(type_of_layer: Callable[[int], TaskType], *,
+                 parallelism: int, total_tasks: int) -> DAG:
+    """Shared layered-DAG skeleton: layer i holds ``parallelism`` tasks of
+    ``type_of_layer(i)`` (the final layer holds the remainder when
+    ``total_tasks`` is not a multiple — never silently dropped), the first
+    task of each layer is the critical HIGH task and releases the next
+    layer when it commits."""
     if parallelism < 1 or total_tasks < parallelism:
         raise ValueError("need total_tasks >= parallelism >= 1")
-    n_layers = total_tasks // parallelism
     roots: list[Task] = []
     prev_critical: Optional[Task] = None
-    for layer in range(n_layers):
-        layer_tasks = [Task(task_type) for _ in range(parallelism)]
+    built, layer = 0, 0
+    while built < total_tasks:
+        width = min(parallelism, total_tasks - built)
+        task_type = type_of_layer(layer)
+        layer_tasks = [Task(task_type) for _ in range(width)]
         layer_tasks[0].priority = Priority.HIGH      # the critical task
         if prev_critical is None:
             roots.extend(layer_tasks)
@@ -60,7 +73,35 @@ def synthetic_dag(task_type: TaskType, *, parallelism: int,
             for t in layer_tasks:
                 prev_critical.add_child(t)
         prev_critical = layer_tasks[0]
-    return DAG(roots, n_layers * parallelism)
+        built += width
+        layer += 1
+    return DAG(roots, built)
+
+
+def synthetic_dag(task_type: TaskType, *, parallelism: int,
+                  total_tasks: int) -> DAG:
+    """Paper §4.2.2: each layer has P tasks of the same type; one is marked
+    critical; its completion releases the next P tasks.  DAG parallelism =
+    total/longest-path = P.  A non-divisible ``total_tasks`` emits a final
+    partial layer (``expected_total`` always equals ``total_tasks``)."""
+    return _layered_dag(lambda _layer: task_type, parallelism=parallelism,
+                        total_tasks=total_tasks)
+
+
+def mixed_dag(task_types: Sequence[TaskType], *, parallelism: int,
+              total_tasks: int) -> DAG:
+    """Heterogeneous-mix synthetic DAG: layer i holds ``parallelism``
+    tasks of ``task_types[i % len(task_types)]`` — interleaved e.g.
+    matmul / copy / stencil layers — with the same per-layer criticality
+    structure as :func:`synthetic_dag` (first task of every layer is HIGH
+    and gates the next layer).  Because each task type owns its own PTT,
+    one run exercises several trace tables and the schedulers must keep
+    per-type placement models current simultaneously."""
+    types = tuple(task_types)
+    if not types:
+        raise ValueError("mixed_dag needs at least one task type")
+    return _layered_dag(lambda layer: types[layer % len(types)],
+                        parallelism=parallelism, total_tasks=total_tasks)
 
 
 def chain_dag(task_type: TaskType, length: int) -> DAG:
@@ -106,15 +147,18 @@ def heat_dag(*, nodes: int = 4, tiles_per_node: int = 20, tile: int = 1024,
     """Distributed 2D Heat (paper §4.2.2, Fig. 10): iterative stencil over a
     row-partitioned grid.  Per node and iteration: ``tiles_per_node``
     stencil tasks (LOW) + one boundary-exchange task per neighbor (HIGH).
-    The exchange tasks of iteration i gate iteration i+1 of *both*
-    neighboring nodes; compute tasks gate their own node's exchanges."""
+    The stencil tasks of iteration i+1 on node n are gated by node n's own
+    exchanges of iteration i *and* by each neighbor's exchange directed at
+    n (explicitly keyed by destination node below — the old list-index
+    gating encoded the direction implicitly in creation order); compute
+    tasks gate their own node's exchanges."""
     st = stencil_type(tile)
     ex = mpi_exchange_type(boundary_kb)
 
     roots: list[Task] = []
-    # prev iteration's per-node exchange tasks (to wire cross-node deps)
-    prev_ex: list[list[Task]] = [[] for _ in range(nodes)]
-    prev_compute: list[list[Task]] = [[] for _ in range(nodes)]
+    # prev iteration's exchange tasks, keyed by destination neighbor:
+    # prev_ex[n][m] is node n's ghost-cell send *toward node m*
+    prev_ex: list[dict[int, Task]] = [{} for _ in range(nodes)]
     total = 0
     for it in range(iterations):
         cur_compute: list[list[Task]] = []
@@ -124,24 +168,25 @@ def heat_dag(*, nodes: int = 4, tiles_per_node: int = 20, tile: int = 1024,
             if it == 0:
                 roots.extend(comp)
             else:
-                # stencil of iter i depends on own + neighbor exchanges of i-1
-                gates = list(prev_ex[n])
+                # stencil of iter i depends on own exchanges of i-1 plus
+                # the neighbors' exchanges directed at this node
+                gates = list(prev_ex[n].values())
                 if n > 0:
-                    gates += [prev_ex[n - 1][-1]] if prev_ex[n - 1] else []
+                    gates.append(prev_ex[n - 1][n])
                 if n + 1 < nodes:
-                    gates += [prev_ex[n + 1][0]] if prev_ex[n + 1] else []
+                    gates.append(prev_ex[n + 1][n])
                 for g in gates:
                     for c in comp:
                         g.add_child(c)
             cur_compute.append(comp)
-        cur_ex: list[list[Task]] = []
+        cur_ex: list[dict[int, Task]] = []
         for n in range(nodes):
-            n_neigh = (1 if n > 0 else 0) + (1 if n + 1 < nodes else 0)
-            exs = [Task(ex, priority=Priority.HIGH) for _ in range(n_neigh)]
+            exs = {nb: Task(ex, priority=Priority.HIGH)
+                   for nb in (n - 1, n + 1) if 0 <= nb < nodes}
             total += len(exs)
             for c in cur_compute[n]:
-                for e in exs:
+                for e in exs.values():
                     c.add_child(e)
             cur_ex.append(exs)
-        prev_ex, prev_compute = cur_ex, cur_compute
+        prev_ex = cur_ex
     return DAG(roots, total)

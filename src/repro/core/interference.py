@@ -395,6 +395,87 @@ def corun_socket(task_type: TaskType, cores: Sequence[int], *,
     return BackgroundApp(task_type, tuple(cores), t_start, t_end)
 
 
+def renewal_on_off(rng: random.Random, *, t_start: float, t_end: float,
+                   mean_on: float, mean_off: float) -> list[tuple[float, float]]:
+    """Alternating seeded exponential off/on intervals: the two-state
+    renewal process behind :func:`burst_episodes` and the independent
+    pod-slice preemption episodes (``repro.core.preemption``).  Returns
+    non-overlapping ``(t0, t1)`` busy windows in [t_start, t_end); the
+    draw sequence is one ``expovariate`` per gap then one per episode, so
+    the output is a pure function of the RNG state and the parameters."""
+    if not math.isfinite(t_end):
+        raise ValueError("renewal_on_off needs a finite t_end")
+    if mean_on <= 0.0 or mean_off <= 0.0:
+        raise ValueError("mean_on and mean_off must be positive")
+    episodes: list[tuple[float, float]] = []
+    t = t_start
+    while True:
+        t += rng.expovariate(1.0 / mean_off)     # idle gap
+        if t >= t_end:
+            return episodes
+        e1 = min(t + rng.expovariate(1.0 / mean_on), t_end)
+        episodes.append((t, e1))
+        t = e1
+
+
+def mmpp_state_timeline(rng: random.Random, *, t_end: float,
+                        mean_calm: float,
+                        mean_storm: float) -> list[tuple[float, int]]:
+    """Modulating chain of an MMPP: seeded exponential sojourns alternating
+    between state 0 (calm) and state 1 (storm), starting calm at t=0.
+    Returns the (t, state) change points; consumers treat each state as in
+    force until the next point (the last persists to ``t_end``)."""
+    if not math.isfinite(t_end):
+        raise ValueError("mmpp_state_timeline needs a finite t_end")
+    if mean_calm <= 0.0 or mean_storm <= 0.0:
+        raise ValueError("mean_calm and mean_storm must be positive")
+    out = [(0.0, 0)]
+    t, s = 0.0, 0
+    while True:
+        t += rng.expovariate(1.0 / (mean_calm if s == 0 else mean_storm))
+        if t >= t_end:
+            return out
+        s ^= 1
+        out.append((t, s))
+
+
+def mmpp_on_off(rng: random.Random, timeline: Sequence[tuple[float, int]], *,
+                t_end: float, mean_on: float, mean_off_calm: float,
+                mean_off_storm: float) -> list[tuple[float, float]]:
+    """On/off episodes whose *idle-gap* rate is modulated by ``timeline``
+    (an MMPP state sequence from :func:`mmpp_state_timeline`): gaps draw
+    exponential lengths with mean ``mean_off_calm`` or ``mean_off_storm``
+    depending on the state in force, re-drawn (memorylessly) at each state
+    change; episode lengths draw from ``mean_on`` regardless of state.
+    With a shared timeline across several callers the episodes *cluster in
+    time* — the correlated-burst / maintenance-wave signature."""
+    if mean_on <= 0.0 or mean_off_calm <= 0.0 or mean_off_storm <= 0.0:
+        raise ValueError("episode/gap means must be positive")
+    episodes: list[tuple[float, float]] = []
+    t, i = 0.0, 0
+    while t < t_end:
+        # walk modulation segments, drawing a fresh gap in each (the
+        # exponential is memoryless, so re-drawing at a boundary is the
+        # standard piecewise construction)
+        while True:
+            while i + 1 < len(timeline) and timeline[i + 1][0] <= t:
+                i += 1
+            seg_end = timeline[i + 1][0] if i + 1 < len(timeline) else t_end
+            mean_off = (mean_off_calm if timeline[i][1] == 0
+                        else mean_off_storm)
+            gap = rng.expovariate(1.0 / mean_off)
+            if t + gap < seg_end:
+                t += gap
+                break
+            t = seg_end
+            if t >= t_end:
+                return episodes
+        e1 = min(t + rng.expovariate(1.0 / mean_on), t_end)
+        episodes.append((t, e1))
+        t = e1
+    return episodes
+
+
 def burst_episodes(task_type: TaskType, cores: Sequence[int], *, seed: int,
                    t_end: float, mean_on: float, mean_off: float,
                    t_start: float = 0.0,
@@ -402,26 +483,18 @@ def burst_episodes(task_type: TaskType, cores: Sequence[int], *, seed: int,
     """Bursty on/off co-runner: a seeded two-state renewal process.
 
     Idle gaps and busy episodes draw i.i.d. exponential lengths
-    (``mean_off`` / ``mean_on`` seconds), materialized as a tuple of
-    non-overlapping :class:`BackgroundApp` episodes over
-    [t_start, t_end).  The episode list depends only on ``seed`` and the
-    parameters, never on process state, so multi-run cells stay
-    reproducible.  ``t_end`` must be finite (it bounds the episode count).
+    (``mean_off`` / ``mean_on`` seconds) via :func:`renewal_on_off`,
+    materialized as a tuple of non-overlapping :class:`BackgroundApp`
+    episodes over [t_start, t_end).  The episode list depends only on
+    ``seed`` and the parameters, never on process state, so multi-run
+    cells stay reproducible.  ``t_end`` must be finite (it bounds the
+    episode count).
     """
-    if not math.isfinite(t_end):
-        raise ValueError("burst_episodes needs a finite t_end")
-    if mean_on <= 0.0 or mean_off <= 0.0:
-        raise ValueError("mean_on and mean_off must be positive")
     rng = random.Random(f"burst:{seed}")
-    episodes: list[BackgroundApp] = []
-    t = t_start
-    while True:
-        t += rng.expovariate(1.0 / mean_off)     # idle gap
-        if t >= t_end:
-            return tuple(episodes)
-        e1 = min(t + rng.expovariate(1.0 / mean_on), t_end)
-        episodes.append(BackgroundApp(task_type, tuple(cores), t, e1, thrash))
-        t = e1
+    windows = renewal_on_off(rng, t_start=t_start, t_end=t_end,
+                             mean_on=mean_on, mean_off=mean_off)
+    return tuple(BackgroundApp(task_type, tuple(cores), t0, t1, thrash)
+                 for t0, t1 in windows)
 
 
 def dvfs_denver(n_cores: int = 6, *, period: float = 10.0,

@@ -30,6 +30,12 @@ class RunMetrics:
     n_cores: int
     records: list[TaskRecord] = dataclasses.field(default_factory=list)
     makespan: float = 0.0
+    # preemption accounting (zero when no PreemptionModel is attached):
+    # revoke episodes applied, task executions preempted, and work-seconds
+    # of discarded progress (restart kills; checkpointed progress is kept)
+    preempt_events: int = 0
+    tasks_preempted: int = 0
+    work_lost_s: float = 0.0
 
     def record(self, rec: TaskRecord) -> None:
         self.records.append(rec)

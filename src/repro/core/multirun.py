@@ -48,7 +48,7 @@ import time
 from multiprocessing import get_context
 from typing import Iterable, Optional, Sequence
 
-from .dag import DAG, heat_dag, kmeans_dag, synthetic_dag
+from .dag import DAG, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
 from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
                            SpeedProfileBase, burst_episodes, corun_chain,
                            corun_socket, dvfs_denver, governor_profile,
@@ -56,6 +56,8 @@ from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
 from .metrics import RunMetrics
 from .places import (Topology, haswell, haswell_cluster, tpu_pod_slices, tx2,
                      tx2_xl)
+from .preemption import (PreemptionModel, mmpp_preemption,
+                         pod_slice_preemption)
 from .schedulers import make_scheduler
 from .simulator import simulate
 from .task import (TaskType, copy_type, kmeans_map_type, kmeans_reduce_type,
@@ -96,10 +98,18 @@ def _kmeans(task_type=None, **kw) -> DAG:
     return kmeans_dag(**kw)
 
 
+def _mixed(task_types=(), **kw) -> DAG:
+    # task_types is a tuple of (name, kwargs) pairs, resolved here so the
+    # spec stays plain data (the singular task_type resolution only covers
+    # one type)
+    return mixed_dag([_build_task_type(t) for t in task_types], **kw)
+
+
 DAG_BUILDERS = {
     "synthetic": _synthetic,
     "heat": _heat,
     "kmeans": _kmeans,
+    "mixed": _mixed,
 }
 
 
@@ -164,6 +174,22 @@ SPEED_BUILDERS = {
     "trace_walk": _speed_trace_walk,
 }
 
+
+# Preemption builders receive the cell's built Topology (episodes are
+# partition-granular and seeded per partition name).
+def _pre_pod_slices(topo: Topology, **kw) -> PreemptionModel:
+    return pod_slice_preemption(topo, **kw)
+
+
+def _pre_mmpp(topo: Topology, **kw) -> PreemptionModel:
+    return mmpp_preemption(topo, **kw)
+
+
+PREEMPTION_BUILDERS = {
+    "pod_slices": _pre_pod_slices,
+    "mmpp": _pre_mmpp,
+}
+
 # Result collectors beyond the always-present makespan/throughput summary.
 COLLECTORS = {
     "placement_counts": lambda m: m.placement_counts(),
@@ -171,6 +197,9 @@ COLLECTORS = {
     "priority_placement": lambda m: m.priority_placement(),
     "per_core_worktime_s": lambda m: m.per_core_worktime(),
     "per_type_mean_duration_s": lambda m: m.per_type_mean_duration(),
+    "preemption": lambda m: {"events": m.preempt_events,
+                             "tasks_preempted": m.tasks_preempted,
+                             "work_lost_s": round(m.work_lost_s, 9)},
 }
 
 
@@ -179,12 +208,14 @@ class RunSpec:
     """One cell of a sweep grid — everything needed to reproduce one
     seeded DES run, expressed as registry names + plain kwargs.
 
-    ``dag`` / ``topology`` / ``speed`` are ``(name, kwargs)`` pairs;
-    ``background`` is a tuple of such pairs.  DAG and background kwargs
-    may contain a ``task_type`` entry that is itself a ``(name, kwargs)``
-    pair resolved through :data:`TASK_TYPES`.  ``collect`` names extra
-    :data:`COLLECTORS` to evaluate in the worker; ``measure_wall`` times
-    the ``simulate`` call (wall seconds + simulated-tasks/s).
+    ``dag`` / ``topology`` / ``speed`` / ``preemption`` are
+    ``(name, kwargs)`` pairs; ``background`` is a tuple of such pairs.
+    DAG and background kwargs may contain a ``task_type`` entry that is
+    itself a ``(name, kwargs)`` pair resolved through :data:`TASK_TYPES`
+    (the mixed DAG builder takes a ``task_types`` tuple of such pairs).
+    ``collect`` names extra :data:`COLLECTORS` to evaluate in the worker;
+    ``measure_wall`` times the ``simulate`` call (wall seconds +
+    simulated-tasks/s).
     """
 
     key: str
@@ -195,6 +226,7 @@ class RunSpec:
     sched_kwargs: dict = dataclasses.field(default_factory=dict)
     background: tuple = ()
     speed: Optional[tuple] = None
+    preemption: Optional[tuple] = None
     horizon: float = 1e6
     collect: tuple = ()
     measure_wall: bool = False
@@ -244,10 +276,15 @@ def run_cell(spec: RunSpec) -> dict:
         speed_builder, speed_kwargs = _lookup(SPEED_BUILDERS, spec.speed,
                                               "speed profile")
         speed = speed_builder(topo, **speed_kwargs)
+    preemption = None
+    if spec.preemption is not None:
+        pre_builder, pre_kwargs = _lookup(PREEMPTION_BUILDERS,
+                                          spec.preemption, "preemption model")
+        preemption = pre_builder(topo, **pre_kwargs)
 
     t0 = time.perf_counter()
     m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
-                             horizon=spec.horizon)
+                             preemption=preemption, horizon=spec.horizon)
     wall = time.perf_counter() - t0
 
     out = {

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -81,6 +81,26 @@ class ResourcePartition:
         return ExecutionPlace(self.start + off, width)
 
 
+@dataclasses.dataclass(frozen=True)
+class LiveView:
+    """The surviving fraction of a topology while some partitions are
+    revoked (pod-slice preemption, maintenance events).
+
+    Precomputed index arrays mirror the Topology's dense search metadata so
+    the PTT searches can run masked argmins over live places only.  Places
+    never span partitions, so a place is live iff its leader's partition
+    is; availability is partition-granular, matching how revocations
+    arrive.  Views are interned per down-set on the Topology
+    (:meth:`Topology.live_view`), so revoke/restore churn never
+    re-allocates them.
+    """
+
+    place_idx: "np.ndarray"           # indices into topology.places()
+    width1_idx: "np.ndarray"          # the width-1 subset of place_idx
+    partitions: tuple[ResourcePartition, ...]   # live, in topology order
+    cores: tuple[int, ...]            # live cores, in topology order
+
+
 class Topology:
     """A machine: an ordered list of resource partitions over cores 0..N-1."""
 
@@ -106,6 +126,7 @@ class Topology:
         self.place_widths_f = self.place_widths.astype(np.float64)
         self.width1_place_indices = np.flatnonzero(self.place_widths == 1)
         self._local_idx: dict[int, np.ndarray] = {}
+        self._live_views: dict[frozenset, LiveView] = {}
 
     def partition_of(self, core: int) -> ResourcePartition:
         return self._part_of[core]
@@ -140,6 +161,33 @@ class Topology:
 
     def fastest_static_partition(self) -> ResourcePartition:
         return min(self.partitions, key=lambda p: p.static_rank)
+
+    def live_view(self, down_partitions: frozenset) -> LiveView:
+        """The :class:`LiveView` with the partitions at indices
+        ``down_partitions`` revoked.  Views are interned per down-set, so
+        repeated revoke/restore cycles through the same configurations hit
+        the cache.  Raises if *every* partition would be down — episode
+        generation prunes such windows, and the schedulers need somewhere
+        to place work."""
+        view = self._live_views.get(down_partitions)
+        if view is None:
+            n = len(self.partitions)
+            for i in down_partitions:
+                if not 0 <= i < n:
+                    raise ValueError(f"partition index {i} outside 0..{n - 1}")
+            live_parts = tuple(p for i, p in enumerate(self.partitions)
+                               if i not in down_partitions)
+            if not live_parts:
+                raise ValueError("cannot revoke every partition")
+            live_cores = tuple(c for p in live_parts for c in p.cores)
+            core_up = np.zeros(self.n_cores, dtype=bool)
+            core_up[list(live_cores)] = True
+            # places never cross partitions: the leader's liveness decides
+            idx = np.flatnonzero(core_up[self.place_leaders])
+            w1 = idx[self.place_widths[idx] == 1]
+            view = LiveView(idx, w1, live_parts, live_cores)
+            self._live_views[down_partitions] = view
+        return view
 
     def __repr__(self) -> str:
         inner = ", ".join(f"{p.name}[{p.start}:{p.start + p.size}]" for p in self.partitions)
@@ -208,15 +256,37 @@ def haswell_cluster(nodes: int = 4, sockets: int = 2, cores_per_socket: int = 10
     return Topology(parts)
 
 
-def tpu_pod_slices(pods: int = 2, slices_per_pod: int = 16) -> Topology:
+# Static speed ranks of the TPU pod generations (rank 0 = fastest): what
+# the FA/FAM-C schedulers key on in a mixed-generation fleet.
+_POD_RANKS = {"pod": 0, "pod_v4": 1}
+
+
+def tpu_pod_slices(pods: int = 2, slices_per_pod: int = 16,
+                   kinds: Optional[Sequence[str]] = None) -> Topology:
     """TPU adaptation: each 'core' is a pod *slice* (an ICI-connected group
     of chips); a partition is a pod.  Valid widths are powers of two —
-    moldability = how many slices a dispatched program spans."""
+    moldability = how many slices a dispatched program spans.
+
+    ``kinds`` assigns a generation per pod (default: all current-gen
+    ``"pod"``).  A mixed fleet — e.g. ``("pod", "pod_v4", "pod_v4")``, one
+    current-gen pod plus older v4 pods at roughly half its rates — is the
+    statically *asymmetric* cloud configuration the preemption benchmarks
+    sweep: revoking the fast pod forces criticality-aware schedulers to
+    fall back to the statically-next-best live pods."""
+    if kinds is None:
+        kinds = ("pod",) * pods
+    if len(kinds) != pods:
+        raise ValueError(f"kinds has {len(kinds)} entries for {pods} pods")
+    for k in kinds:
+        if k not in _POD_RANKS:
+            raise ValueError(f"unknown pod kind {k!r}; "
+                             f"known: {', '.join(sorted(_POD_RANKS))}")
     widths = tuple(w for w in (1, 2, 4, 8, 16)
                    if w <= slices_per_pod and slices_per_pod % w == 0)
     parts = [
-        ResourcePartition(f"pod{p}", "pod", p * slices_per_pod, slices_per_pod,
-                          widths, static_rank=0)
+        ResourcePartition(f"pod{p}", kinds[p], p * slices_per_pod,
+                          slices_per_pod, widths,
+                          static_rank=_POD_RANKS[kinds[p]])
         for p in range(pods)
     ]
     return Topology(parts)

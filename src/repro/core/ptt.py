@@ -162,14 +162,21 @@ class PTT:
         return self._best_from_indices(
             self.topology.local_place_indices(core), cost=cost, rng=rng)
 
-    def global_search(self, *, cost: bool, rng=None) -> ExecutionPlace:
-        """Paper: sweep all execution places in the system."""
-        return self._best_from_indices(None, cost=cost, rng=rng)
+    def global_search(self, *, cost: bool, rng=None,
+                      idx: Optional[np.ndarray] = None) -> ExecutionPlace:
+        """Paper: sweep all execution places in the system.  ``idx``
+        restricts the sweep to those place indices (a revoked-capacity
+        live view); None sweeps everything, exactly as before."""
+        return self._best_from_indices(idx, cost=cost, rng=rng)
 
-    def width1_search(self, *, cost: bool = False, rng=None) -> ExecutionPlace:
-        """Global sweep restricted to width-1 places (the DA scheduler)."""
+    def width1_search(self, *, cost: bool = False, rng=None,
+                      idx: Optional[np.ndarray] = None) -> ExecutionPlace:
+        """Global sweep restricted to width-1 places (the DA scheduler).
+        ``idx``, when given, must already be a width-1 subset (e.g. a
+        live view's ``width1_idx``); None uses every width-1 place."""
         return self._best_from_indices(
-            self.topology.width1_place_indices, cost=cost, rng=rng)
+            self.topology.width1_place_indices if idx is None else idx,
+            cost=cost, rng=rng)
 
     def stalest(self, idx: Optional[np.ndarray] = None, *,
                 rng=None) -> ExecutionPlace:

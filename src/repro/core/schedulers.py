@@ -43,7 +43,7 @@ import dataclasses
 import random
 from typing import Optional
 
-from .places import ExecutionPlace, Topology
+from .places import ExecutionPlace, LiveView, Topology
 from .ptt import PTTBank
 from .task import Priority, Task
 
@@ -74,6 +74,14 @@ class Scheduler:
     # behavior is bit-identical to pre-escape-hatch runs.
     revisit_eps: float = 0.0
     revisit_rng: Optional[random.Random] = None
+    # capacity availability under preemption: None = every partition live
+    # (the zero-cost default — all search paths are untouched).  The
+    # simulator assigns a :class:`~.places.LiveView` at revoke/restore
+    # edges; every wake-time search is then restricted to live places, and
+    # FA/FAM-C fall back to the statically fastest *live* partition.
+    # Dequeue-time local searches need no mask: the dispatching worker is
+    # live and places never span partitions.
+    live: Optional[LiveView] = None
     _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
 
     @property
@@ -90,9 +98,13 @@ class Scheduler:
         For HIGH tasks this may also set ``task.bound_place``."""
         if task.priority != Priority.HIGH:
             return None                      # LOW: local queue of the waker
+        live = self.live
         if self.fixed_asym:
-            # FA/FAM-C: strictly map to the statically fastest partition.
-            part = self.topology.fastest_static_partition()
+            # FA/FAM-C: strictly map to the statically fastest partition
+            # (the fastest *live* one while capacity is revoked; ties keep
+            # topology order, matching fastest_static_partition).
+            part = (self.topology.fastest_static_partition() if live is None
+                    else min(live.partitions, key=lambda p: p.static_rank))
             core = part.start + self._fa_rr % part.size
             self._fa_rr += 1
             if self.moldable:
@@ -116,19 +128,24 @@ class Scheduler:
                 # DA: fastest single core (global search, width locked to 1).
                 if self._force_revisit():
                     task.bound_place = tbl.stalest(
-                        self.topology.width1_place_indices,
+                        self.topology.width1_place_indices if live is None
+                        else live.width1_idx,
                         rng=self.revisit_rng)
                 else:
                     task.bound_place = tbl.width1_search(
-                        cost=False, rng=self.search_rng)
+                        cost=False, rng=self.search_rng,
+                        idx=None if live is None else live.width1_idx)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
                 if self._force_revisit():
-                    task.bound_place = tbl.stalest(rng=self.revisit_rng)
+                    task.bound_place = tbl.stalest(
+                        None if live is None else live.place_idx,
+                        rng=self.revisit_rng)
                 else:
                     task.bound_place = tbl.global_search(
-                        cost=self.high_target_cost, rng=self.search_rng)
+                        cost=self.high_target_cost, rng=self.search_rng,
+                        idx=None if live is None else live.place_idx)
             return task.bound_place.leader
         return None                          # RWS/RWSM-C: no special handling
 

@@ -67,6 +67,34 @@ scheduler-visible behavior but does O(changed state) work per event:
   order — so compaction is behavior-invisible; ``heap_peak`` records the
   high-water mark for tests and diagnostics.
 
+Preemptible capacity (pod-slice revocation)
+-------------------------------------------
+An optional :class:`~.preemption.PreemptionModel` attaches seeded
+partition-granular revoke/restore episodes.  At a **revoke** edge the
+engine (in order):
+
+1. marks the partition's cores down (they leave the dispatch worklist and
+   the starving set; the scheduler receives the interned
+   :class:`~.places.LiveView` so every wake-time search is restricted to
+   surviving places);
+2. preempts the partition's *running* tasks — ``preempt="restart"``
+   discards their progress, ``"checkpoint"`` folds the completed fraction
+   into ``task.resume_frac`` and charges ``resume_penalty`` extra work at
+   the next start — releasing their cores, bandwidth demand and finish
+   events (which turn stale, feeding the compaction accounting);
+3. drains the partition's AQs (placed-but-unstarted tasks lose their
+   place but no progress) and WSQs back to the scheduler;
+4. re-places every displaced task on the surviving partitions — **HIGH
+   tasks first** (running, then AQ, then WSQ order within each class), so
+   criticality-aware schedulers immediately re-bind the critical path
+   while RWS-family schedulers scatter, which is exactly the behavioral
+   difference the preemption benchmarks measure.
+
+At a **restore** edge the cores re-enter the dispatch loop and steal
+their way back to work.  With no model attached every preemption code
+path is behind a ``None``/flag check and runs are bit-identical to
+builds without the subsystem (pinned against the golden schedules).
+
 Decision *distributions* (victim tie-breaks, core processing order) are
 unchanged, but the RNG draw sequence differs from the pre-refactor engine,
 so seeded runs are statistically — not bit-for-bit — identical to it;
@@ -85,6 +113,7 @@ from .dag import DAG
 from .interference import BackgroundApp, SpeedProfile, SpeedProfileBase
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
+from .preemption import PreemptionModel
 from .schedulers import Scheduler
 from .task import PARTITION_BW, Priority, Task
 
@@ -101,13 +130,15 @@ _COMPACT_MIN_STALE = 64
 
 class _Running:
     __slots__ = ("task", "place", "remaining", "rate", "base", "version",
-                 "cores", "domain", "mem_s", "cap", "bw_contrib", "bwkey")
+                 "cores", "domain", "mem_s", "cap", "bw_contrib", "bwkey",
+                 "work_assigned")
 
     def __init__(self, task: Task, place: ExecutionPlace, remaining: float,
                  domain: str, cap: float, bwkey: int):
         self.task = task
         self.place = place
         self.remaining = remaining  # work-seconds left at rate 1.0
+        self.work_assigned = remaining  # assignment size (for checkpoints)
         self.rate = -1.0            # <0 = not yet scheduled a finish event
         self.base = -1.0            # min core speed over place (pre-bw rate)
         self.version = 0
@@ -139,12 +170,14 @@ class Simulator:
     def __init__(self, scheduler: Scheduler, *,
                  speed: Optional[SpeedProfileBase] = None,
                  background: Iterable[BackgroundApp] = (),
+                 preemption: Optional[PreemptionModel] = None,
                  horizon: float = 1e6):
         self.sched = scheduler
         self.topo = scheduler.topology
         self.rng = scheduler.rng
         self.speed = speed or SpeedProfile(self.topo.n_cores)
         self.background = list(background)
+        self.preemption = preemption
         self.horizon = horizon
 
         n = self.topo.n_cores
@@ -198,6 +231,18 @@ class Simulator:
         self._compact_min_stale = _COMPACT_MIN_STALE
         self.heap_peak = 0                  # high-water mark of the heap
         self.compactions = 0
+
+        # preemptible-capacity state (inert without a PreemptionModel)
+        self._core_up = [True] * n
+        self._down_parts: set[int] = set()
+        self._live_cores: tuple[int, ...] = tuple(range(n))
+        self._ckpt = (preemption is not None
+                      and preemption.preempt == "checkpoint")
+        self._resume_penalty = (preemption.resume_penalty
+                                if preemption is not None else 0.0)
+        self.preempt_events = 0             # revoke edges applied
+        self.tasks_preempted = 0            # task executions cut short
+        self.work_lost = 0.0                # discarded progress (work-s)
         self._recompute_bg()
 
     # ------------------------------------------------------------------ util
@@ -402,16 +447,14 @@ class Simulator:
         self._dirty.add(core)
         self._starving.discard(core)
 
-    def _wake(self, task: Task, waker_core: int):
-        task.t_ready = self.now
-        target = self.sched.place_on_wake(task, waker_core)
-        core = waker_core if target is None else target
+    def _enqueue(self, task: Task, core: int):
+        """Push a ready task onto ``core``'s WSQ (shared by first wakes and
+        preemption requeues — the outstanding count moves only on wake)."""
         q = self.wsq[core]
         if self._route_high and task.priority == Priority.HIGH:
             q.high.append(task)
         else:
             q.low.append(task)
-        self._outstanding += 1
         self._mark(core)
         # new stealable work re-opens the starving cores' steal loop
         if self._starving and (self._steal_high
@@ -419,9 +462,131 @@ class Simulator:
             self._dirty |= self._starving
             self._starving.clear()
 
+    def _wake(self, task: Task, waker_core: int):
+        task.t_ready = self.now
+        target = self.sched.place_on_wake(task, waker_core)
+        self._outstanding += 1
+        self._enqueue(task, waker_core if target is None else target)
+
+    def _requeue(self, task: Task):
+        """Hand a displaced task back to the scheduler: the old binding is
+        void (its partition may be down), the wake-time decision is redone
+        over the surviving places, and priority-oblivious paths get a
+        uniformly random live waker core (one seeded draw per task, so the
+        sequence is scheduler-independent)."""
+        task.t_ready = self.now
+        task.bound_place = None
+        live = self._live_cores
+        waker = live[self.rng.randrange(len(live))] if len(live) > 1 else live[0]
+        target = self.sched.place_on_wake(task, waker)
+        self._enqueue(task, waker if target is None else target)
+
     def submit(self, dag: DAG):
         for root in dag.roots:
             self._wake(root, waker_core=0)
+
+    # ------------------------------------------------------------ preemption
+    def _set_availability(self):
+        """Refresh the scheduler's live view + the live-core list after a
+        revoke/restore edge (views are interned on the topology)."""
+        if not self._down_parts:
+            self.sched.live = None
+            self._live_cores = tuple(range(self.topo.n_cores))
+        else:
+            view = self.topo.live_view(frozenset(self._down_parts))
+            self.sched.live = view
+            self._live_cores = view.cores
+
+    def _preempt_running(self, rec: _Running):
+        """Cut one running task short: release cores, bandwidth demand and
+        the (now stale) finish event; checkpoint or discard its progress."""
+        task = rec.task
+        if rec.rate >= 0:
+            self._stale += 1            # outstanding finish event is dead
+        rec.version += 1
+        del self.running[task.tid]
+        for c in rec.cores:
+            self.core_busy[c] = None
+        if rec.bw_contrib > 0.0:
+            dom = rec.domain
+            d, k = self._demand[dom]
+            self._demand[dom] = _NO_DEMAND if k <= 1 else \
+                (d - rec.bw_contrib, k - 1)
+            self._dirty_domains.add(dom)
+        if self._ckpt and rec.work_assigned > 0.0:
+            # completed fraction of this assignment carries over (penalty
+            # work counts as progress too — a resumed-then-preempted task
+            # re-pays proportionally, not absolutely)
+            task.resume_frac *= rec.remaining / rec.work_assigned
+        else:
+            self.work_lost += max(rec.work_assigned - rec.remaining, 0.0)
+        task.preempt_count += 1
+        self.tasks_preempted += 1
+
+    def _revoke(self, pidx: int):
+        """Apply one revoke edge: partition ``pidx`` loses its cores; all
+        work on it returns to the scheduler and re-places on survivors,
+        HIGH tasks first."""
+        part = self.topo.partitions[pidx]
+        if pidx in self._down_parts:
+            raise RuntimeError(f"partition {part.name} revoked twice")
+        self._down_parts.add(pidx)
+        self.preempt_events += 1
+        self._set_availability()
+        high: list[Task] = []
+        low: list[Task] = []
+
+        def take(task: Task):
+            (high if task.priority == Priority.HIGH else low).append(task)
+
+        # 1) running tasks (a place never spans partitions, so every member
+        #    core of an affected task lies in ``part``; dedup via core scan)
+        seen: set[int] = set()
+        for c in part.cores:
+            rec = self.core_busy[c]
+            if rec is not None and rec.task.tid not in seen:
+                seen.add(rec.task.tid)
+                self._preempt_running(rec)
+                take(rec.task)
+        # 2) placed-but-unstarted tasks in the partition's AQs (their place
+        #    dies with the partition; no progress to account)
+        seen.clear()
+        for c in part.cores:
+            for rec in self.aq[c]:
+                if rec.task.tid not in seen:
+                    seen.add(rec.task.tid)
+                    take(rec.task)
+            self.aq[c].clear()
+        # 3) ready tasks in the partition's WSQs (oldest HIGH first, then
+        #    the LOW deque oldest-first — steal order)
+        for c in part.cores:
+            q = self.wsq[c]
+            for task in q.high:
+                take(task)
+            for task in q.low:
+                take(task)
+            q.high.clear()
+            q.low.clear()
+        # down cores leave the dispatch sets until restored
+        for c in part.cores:
+            self._core_up[c] = False
+            self._dirty.discard(c)
+            self._starving.discard(c)
+        # 4) re-place on the survivors — HIGH tasks re-bind first, so the
+        #    critical path recovers before the bulk work lands
+        for task in high:
+            self._requeue(task)
+        for task in low:
+            self._requeue(task)
+
+    def _restore(self, pidx: int):
+        """Apply one restore edge: the partition's cores re-enter the
+        dispatch loop (empty-handed — they steal their way back)."""
+        self._down_parts.discard(pidx)
+        self._set_availability()
+        for c in self.topo.partitions[pidx].cores:
+            self._core_up[c] = True
+            self._mark(c)
 
     # -------------------------------------------------------------- dispatch
     def _stealable_count(self, core: int) -> int:
@@ -483,9 +648,20 @@ class Simulator:
                 self._bwkeys.append(key)
         else:
             bwkey = -1
-        rec = _Running(task, place,
-                       remaining=task.type.duration(part.kind, place.width),
+        base = task.type.duration(part.kind, place.width)
+        if task.resume_frac != 1.0:
+            # checkpointed resume: outstanding fraction of the new place's
+            # full duration, plus the resume penalty (restart kills keep
+            # resume_frac at 1.0 and take this place's full duration)
+            base = base * (task.resume_frac + self._resume_penalty)
+        rec = _Running(task, place, remaining=base,
                        domain=part.domain, cap=cap, bwkey=bwkey)
+        if task.preempt_count:
+            # version-epoch per execution: a stale finish event from a
+            # preempted run must never collide with this run's versions
+            # (they are compared for equality), so each re-placement
+            # starts a disjoint version range
+            rec.version = task.preempt_count << 32
         for c in rec.cores:
             self.aq[c].append(rec)
             self._mark(c)
@@ -524,6 +700,7 @@ class Simulator:
         dirty = self._dirty
         busy = self.core_busy
         aq = self.aq
+        up = self._core_up
         while dirty:
             batch = sorted(dirty, reverse=True)
             dirty.clear()
@@ -531,7 +708,7 @@ class Simulator:
                 self.rng.shuffle(batch)
             # phase A: local work only (AQ head, then own WSQ)
             for c in batch:
-                if busy[c] is not None:
+                if busy[c] is not None or not up[c]:
                     continue
                 if self._try_start_aq(c):
                     continue
@@ -543,7 +720,8 @@ class Simulator:
             if len(batch) > 1:
                 self.rng.shuffle(batch)
             for c in batch:
-                if busy[c] is not None or aq[c] or len(self.wsq[c]):
+                if busy[c] is not None or not up[c] or aq[c] \
+                        or len(self.wsq[c]):
                     continue
                 if not self._try_steal(c):
                     self._starving.add(c)
@@ -599,6 +777,16 @@ class Simulator:
                 self._push_event(b.t_start, "bg")
             if b.t_end < self.horizon:
                 self._push_event(b.t_end, "bg")
+        if self.preemption is not None:
+            n_parts = len(self.topo.partitions)
+            for pidx, t0, t1 in self.preemption.episodes:
+                if not 0 <= pidx < n_parts:
+                    raise ValueError(f"preemption episode for partition "
+                                     f"{pidx}; topology has {n_parts}")
+                if t0 <= self.horizon:
+                    self._push_event(t0, "revoke", pidx)
+                    if t1 <= self.horizon:
+                        self._push_event(t1, "restore", pidx)
         # speed breakpoints are *pulled* lazily — one outstanding event at
         # a time, the next asked of the profile only when it fires — so a
         # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
@@ -627,7 +815,7 @@ class Simulator:
                                      "finish", tid, rec.version)
                     continue
                 self._commit(rec)
-            else:                                  # speed / bg breakpoint
+            else:                  # speed / bg / revoke / restore breakpoint
                 self._advance(t)
                 if kind == "speed":
                     self._recompute_speed()
@@ -636,20 +824,32 @@ class Simulator:
                         self._push_event(nb, "speed")
                 elif kind == "bg":
                     self._recompute_bg()
+                elif kind == "revoke":
+                    self._revoke(tid)
+                elif kind == "restore":
+                    self._restore(tid)
             self._dispatch()
             self._refresh_rates()
             self._maybe_compact()
             if self._outstanding == 0 and not running:
                 break
+        # a run that finishes mid-outage must not leak its availability
+        # mask into later runs reusing the scheduler (PTT state is meant
+        # to carry across runs; a revoked-capacity view is not)
+        self.sched.live = None
         self.metrics.finish(self.now)
+        self.metrics.preempt_events = self.preempt_events
+        self.metrics.tasks_preempted = self.tasks_preempted
+        self.metrics.work_lost_s = self.work_lost
         return self.metrics
 
 
 def simulate(dag: DAG, scheduler: Scheduler, *,
              speed: Optional[SpeedProfileBase] = None,
              background: Iterable[BackgroundApp] = (),
+             preemption: Optional[PreemptionModel] = None,
              horizon: float = 1e6) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,
-                    horizon=horizon)
+                    preemption=preemption, horizon=horizon)
     sim.submit(dag)
     return sim.run()

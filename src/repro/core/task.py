@@ -41,7 +41,8 @@ PARTITION_BW = {
     "denver": 18.0e9,
     "a57": 18.0e9,
     "haswell": 45.0e9,
-    "pod": 8.19e11 * 16,
+    "pod": 8.19e11 * 16,        # current-gen pod (v5p-class HBM)
+    "pod_v4": 3.7e11 * 16,      # previous-gen pod (v4-class HBM2)
 }
 
 
@@ -106,6 +107,13 @@ class Task:
     t_start: float = -1.0
     t_end: float = -1.0
 
+    # Preemption state (see ``repro.core.preemption``): fraction of the
+    # place-normalized work still outstanding (checkpointed progress keeps
+    # it < 1.0 across re-placements; "restart" kills leave it at 1.0), and
+    # how many times this task has been preempted.
+    resume_frac: float = 1.0
+    preempt_count: int = 0
+
     def add_child(self, child: "Task") -> "Task":
         self.children.append(child)
         child.n_deps += 1
@@ -152,9 +160,12 @@ _MM_RATE = {
     "a57": {"l1": 3.0e9, "l2": 1.9e9},
     "haswell": {"l1": 3.4e10, "l2": 2.9e10},
     "pod": {"l1": 1.97e14, "l2": 1.80e14},
+    # previous-gen pod slice (v4-class): ~0.45x the dense-GEMM rate of the
+    # current generation — the static asymmetry of a mixed TPU fleet
+    "pod_v4": {"l1": 0.90e14, "l2": 0.82e14},
 }
 _L1_BYTES = {"denver": 64 * 1024, "a57": 32 * 1024, "haswell": 32 * 1024,
-             "pod": 1 << 60}
+             "pod": 1 << 60, "pod_v4": 1 << 60}
 
 
 def matmul_type(tile: int = 64) -> TaskType:
@@ -189,7 +200,8 @@ def copy_type(tile: int = 1024) -> TaskType:
     """Memory-intensive streaming copy; tile x tile fp32 read+write.
     Single-core effective stream bandwidth (TX2 ~3 GB/s class)."""
     bytes_moved = 2.0 * 4.0 * tile * tile
-    bw = {"denver": 3.5e9, "a57": 2.5e9, "haswell": 1.2e10, "pod": 8.19e11}
+    bw = {"denver": 3.5e9, "a57": 2.5e9, "haswell": 1.2e10, "pod": 8.19e11,
+          "pod_v4": 3.7e11}
     return TaskType(
         f"copy{tile}", {k: bytes_moved / b for k, b in bw.items()},
         efficiency=_memory_eff,
@@ -200,7 +212,8 @@ def copy_type(tile: int = 1024) -> TaskType:
 def stencil_type(tile: int = 1024) -> TaskType:
     """Cache-intensive 5-point stencil over a tile x tile fp32 grid."""
     flops = 5.0 * tile * tile * 4      # 4 sweeps per task
-    rate = {"denver": 5.5e9, "a57": 2.8e9, "haswell": 2.2e10, "pod": 9.0e13}
+    rate = {"denver": 5.5e9, "a57": 2.8e9, "haswell": 2.2e10, "pod": 9.0e13,
+            "pod_v4": 4.0e13}
     return TaskType(
         f"stencil{tile}", {k: flops / r for k, r in rate.items()},
         efficiency=_cache_eff,
@@ -217,7 +230,8 @@ def mpi_exchange_type(boundary_kb: float = 64.0) -> TaskType:
     eff = lambda w: {1: 1.0, 2: 0.56}.get(w, 1.0 / w)
     return TaskType(
         "mpi_exchange",
-        {"haswell": t, "denver": t, "a57": t, "pod": t / 50},
+        {"haswell": t, "denver": t, "a57": t, "pod": t / 50,
+         "pod_v4": t / 25},
         efficiency=eff, bw_demand=1.0e9, mem_sensitivity=0.8, noise=0.05,
     )
 
@@ -225,7 +239,8 @@ def mpi_exchange_type(boundary_kb: float = 64.0) -> TaskType:
 def kmeans_map_type(points: int, dims: int, k: int) -> TaskType:
     """K-means assignment step over a chunk of points (data-parallel map)."""
     flops = 3.0 * points * dims * k
-    rate = {"haswell": 2.6e10, "denver": 7.0e9, "a57": 3.5e9, "pod": 1.5e14}
+    rate = {"haswell": 2.6e10, "denver": 7.0e9, "a57": 3.5e9, "pod": 1.5e14,
+            "pod_v4": 6.8e13}
     return TaskType(
         f"kmeans_map{points}x{dims}x{k}",
         {kind: flops / r for kind, r in rate.items()},
@@ -237,7 +252,8 @@ def kmeans_map_type(points: int, dims: int, k: int) -> TaskType:
 def kmeans_reduce_type(k: int, dims: int, chunks: int) -> TaskType:
     """Centroid update (reduction) — the largest serial unit, marked HIGH."""
     flops = 2.0 * k * dims * chunks * 50
-    rate = {"haswell": 1.2e10, "denver": 5.0e9, "a57": 2.5e9, "pod": 1.0e14}
+    rate = {"haswell": 1.2e10, "denver": 5.0e9, "a57": 2.5e9, "pod": 1.0e14,
+            "pod_v4": 4.5e13}
     return TaskType(
         f"kmeans_reduce{k}x{dims}",
         {kind: flops / r for kind, r in rate.items()},

@@ -1,6 +1,9 @@
 """DAG builder structure tests."""
-from repro.core import (Priority, heat_dag, kmeans_dag, matmul_type,
-                        synthetic_dag)
+import pytest
+
+from repro.core import (Priority, Task, copy_type, heat_dag, kmeans_dag,
+                        make_scheduler, matmul_type, mixed_dag, simulate,
+                        stencil_type, synthetic_dag, tx2)
 
 
 def test_synthetic_structure():
@@ -16,6 +19,147 @@ def test_synthetic_structure():
     assert all(not t.children for t in lows)
     # DAG parallelism = total / longest path = 4
     assert len(dag.roots) == 4
+
+
+def test_synthetic_partial_final_layer():
+    """Regression: non-divisible totals used to silently drop the
+    remainder tasks while expected_total reported the truncated count.
+    The builder now emits a final partial layer and the counts agree."""
+    dag = synthetic_dag(matmul_type(), parallelism=4, total_tasks=10)
+    tasks = dag.all_tasks()
+    assert len(tasks) == 10
+    assert dag.expected_total == 10
+    highs = [t for t in tasks if t.priority == Priority.HIGH]
+    assert len(highs) == 3                         # layers of 4, 4, 2
+    # the partial layer still has its critical task and is released by
+    # the previous layer's critical task
+    layer_sizes = sorted(len(h.children) for h in highs)
+    assert layer_sizes == [0, 2, 4]
+    # and the DES runs every one of them
+    m = simulate(dag, make_scheduler("DAM-C", tx2(), seed=1))
+    assert m.n_tasks == 10
+
+
+def test_synthetic_divisible_unchanged():
+    dag = synthetic_dag(matmul_type(), parallelism=4, total_tasks=12)
+    assert len(dag.all_tasks()) == 12 == dag.expected_total
+    with pytest.raises(ValueError):
+        synthetic_dag(matmul_type(), parallelism=4, total_tasks=3)
+
+
+def test_all_tasks_bfs_order_and_diamond_dedup():
+    """all_tasks is breadth-first and deduplicates: a diamond's join node
+    appears exactly once, at its first-discovered depth."""
+    tt = matmul_type()
+    a = Task(tt)
+    b, c = a.add_child(Task(tt)), a.add_child(Task(tt))
+    d = Task(tt)
+    b.add_child(d)
+    c.add_child(d)
+    e = d.add_child(Task(tt))
+    from repro.core import DAG
+    dag = DAG([a], 5)
+    tasks = dag.all_tasks()
+    assert tasks == [a, b, c, d, e]                # BFS order, d once
+    assert len({t.tid for t in tasks}) == 5
+
+
+def test_mixed_dag_structure():
+    """Layers cycle through the task types; every layer keeps its own
+    critical HIGH task gating the next layer."""
+    types = [matmul_type(512), copy_type(512), stencil_type(2048)]
+    dag = mixed_dag(types, parallelism=4, total_tasks=22)
+    tasks = dag.all_tasks()
+    assert len(tasks) == 22 == dag.expected_total
+    highs = [t for t in tasks if t.priority == Priority.HIGH]
+    assert len(highs) == 6                         # 5 full layers + 2-task tail
+    # per-layer type cycling: walk the critical chain from the roots
+    layer_types = []
+    crit = next(t for t in dag.roots if t.priority == Priority.HIGH)
+    while crit is not None:
+        layer_types.append(crit.type.name)
+        crit = next((t for t in crit.children
+                     if t.priority == Priority.HIGH), None)
+    expect = [types[i % 3].name for i in range(6)]
+    assert layer_types == expect
+    # each type's task count matches its share of the layers
+    from collections import Counter
+    by_type = Counter(t.type.name for t in tasks)
+    assert by_type == {types[0].name: 8, types[1].name: 8,
+                       types[2].name: 6}
+    with pytest.raises(ValueError):
+        mixed_dag([], parallelism=2, total_tasks=10)
+    # single-type mix is exactly the synthetic DAG shape
+    m = simulate(mixed_dag(types, parallelism=4, total_tasks=120),
+                 make_scheduler("DAM-C", tx2(), seed=3))
+    assert m.n_tasks == 120
+
+
+def test_heat_cross_node_edges():
+    """Structural audit of the neighbor-exchange gating, with true node
+    identity recovered from the deterministic creation (tid) order —
+    iteration-major, node-major, exchanges keyed (toward prev, toward
+    next).  Direction-sensitive: swapping which neighbor exchange gates a
+    node's next iteration changes the expected child sets and fails."""
+    nodes, tiles, iters = 4, 2, 3
+    dag = heat_dag(nodes=nodes, tiles_per_node=tiles, iterations=iters)
+    tasks = sorted(dag.all_tasks(), key=lambda t: t.tid)
+    n_ex = 2 * (nodes - 1)                       # directed neighbor pairs
+    per_iter = nodes * tiles + n_ex
+    assert len(tasks) == iters * per_iter == dag.expected_total
+    base = tasks[0].tid
+    assert [t.tid - base for t in tasks] == list(range(len(tasks)))
+
+    # rebuild (kind, node, iter[, target]) identity from creation order
+    stencils: dict[tuple, list] = {}             # (iter, node) -> tasks
+    exchanges: dict[tuple, object] = {}          # (iter, node, target) -> task
+    i = 0
+    for it in range(iters):
+        for n in range(nodes):
+            stencils[(it, n)] = tasks[i:i + tiles]
+            i += tiles
+        for n in range(nodes):
+            for nb in (n - 1, n + 1):
+                if 0 <= nb < nodes:
+                    exchanges[(it, n, nb)] = tasks[i]
+                    i += 1
+    for (it, n), sts in stencils.items():
+        assert all(t.priority == Priority.LOW for t in sts)
+    for ex in exchanges.values():
+        assert ex.priority == Priority.HIGH
+
+    # each node's stencils gate exactly its own exchanges
+    for (it, n, nb), ex in exchanges.items():
+        for st in stencils[(it, n)]:
+            assert ex in st.children
+    # gating: node n's iter i+1 stencils are gated by n's own exchanges
+    # plus exactly the neighbors' exchanges *directed at n*
+    for it in range(iters - 1):
+        for n in range(nodes):
+            expect = {id(ex) for (i2, m, nb), ex in exchanges.items()
+                      if i2 == it and (m == n                  # own, both
+                                       or (m == n - 1 and nb == n)
+                                       or (m == n + 1 and nb == n))}
+            for (i2, m, nb), ex in exchanges.items():
+                if i2 != it:
+                    continue
+                gated = {id(c) for c in ex.children} & {
+                    id(s) for s in stencils[(it + 1, n)]}
+                if id(ex) in expect:
+                    assert len(gated) == tiles, (it, n, m, nb)
+                else:
+                    assert not gated, (it, n, m, nb)
+    # cross-node gating edges per iteration boundary: `tiles` per
+    # directed neighbor pair
+    cross = sum(
+        1
+        for (it, m, nb), ex in exchanges.items() if it < iters - 1
+        for c in ex.children
+        if c.priority == Priority.LOW and c not in stencils[(it + 1, m)])
+    assert cross == (iters - 1) * n_ex * tiles
+    # final-iteration exchanges gate nothing
+    assert all(not ex.children for (it, _, _), ex in exchanges.items()
+               if it == iters - 1)
 
 
 def test_kmeans_dynamic_growth():

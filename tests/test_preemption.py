@@ -1,0 +1,427 @@
+"""Preemptible pod-slice capacity: episode models, availability masks,
+revoke/restore semantics, and the zero-cost-when-disabled guarantee."""
+import random
+
+import pytest
+
+from repro.core import (ALL_SCHEDULERS, Priority, PreemptionModel,
+                        SpeedProfile, Task, chain_dag, copy_type, corun_chain,
+                        make_scheduler, matmul_type, mixed_dag,
+                        mmpp_preemption, pod_slice_preemption,
+                        prune_full_outages, simulate, stencil_type,
+                        synthetic_dag, tpu_pod_slices, tx2)
+from repro.core.interference import (mmpp_on_off, mmpp_state_timeline,
+                                     renewal_on_off)
+
+from test_golden_schedule import GOLDEN, N_TASKS
+
+
+def _fleet():
+    """Mixed-generation fleet: one current-gen pod + three v4 pods."""
+    return tpu_pod_slices(pods=4, slices_per_pod=8,
+                          kinds=("pod", "pod_v4", "pod_v4", "pod_v4"))
+
+
+# -- episode generation ------------------------------------------------------
+
+def test_pod_slice_episodes_seeded_and_bounded():
+    topo = _fleet()
+    m = pod_slice_preemption(topo, seed=3, t_end=1.0, mean_up=0.1,
+                             mean_down=0.02)
+    m2 = pod_slice_preemption(topo, seed=3, t_end=1.0, mean_up=0.1,
+                              mean_down=0.02)
+    assert m.episodes == m2.episodes            # pure function of (seed, params)
+    assert m.n_episodes > 0
+    last_end = {}
+    prev_t0 = 0.0
+    for pidx, t0, t1 in m.episodes:
+        assert 0 <= pidx < 4
+        assert 0.0 <= t0 < t1 <= 1.0
+        assert t0 >= prev_t0                    # sorted by revoke time
+        assert t0 >= last_end.get(pidx, 0.0)    # per-partition non-overlap
+        prev_t0 = t0
+        last_end[pidx] = t1
+    other = pod_slice_preemption(topo, seed=4, t_end=1.0, mean_up=0.1,
+                                 mean_down=0.02)
+    assert other.episodes != m.episodes
+
+
+def test_pod_slice_episodes_per_partition_streams():
+    """Restricting the preemptible set never shifts another partition's
+    episodes (per-partition streams keyed by partition name)."""
+    topo = _fleet()
+    full = pod_slice_preemption(topo, seed=7, t_end=1.0, mean_up=0.1,
+                                mean_down=0.02)
+    only2 = pod_slice_preemption(topo, seed=7, t_end=1.0, mean_up=0.1,
+                                 mean_down=0.02, partitions=(2,))
+    assert only2.episodes and all(p == 2 for p, _, _ in only2.episodes)
+    # pod2's stream is unchanged by the other partitions' existence (the
+    # full model may have pruned a concurrent-outage episode, never added)
+    assert set(full.episodes_for(2)) <= {(t0, t1)
+                                         for _, t0, t1 in only2.episodes}
+    assert full.episodes_for(2)
+
+
+def test_never_full_outage():
+    """At no instant may every partition be down (the scheduler needs
+    somewhere to place work) — swept over the generated edges."""
+    topo = tpu_pod_slices(pods=2, slices_per_pod=4)
+    m = pod_slice_preemption(topo, seed=1, t_end=50.0, mean_up=0.05,
+                             mean_down=1.0)        # outage-heavy
+    assert m.n_episodes > 0
+    edges = sorted([(t0, 1) for _, t0, _ in m.episodes]
+                   + [(t1, -1) for _, _, t1 in m.episodes],
+                   key=lambda e: (e[0], e[1]))
+    down = 0
+    for _, d in edges:
+        down += d
+        assert down < 2
+
+
+def test_prune_full_outages_keeps_disjoint():
+    eps = [(0, 1.0, 2.0), (1, 3.0, 4.0), (0, 5.0, 6.0)]
+    assert prune_full_outages(eps, 2) == tuple(eps)
+    # the second concurrent outage on a 2-partition machine is dropped,
+    # including one starting exactly when the other ends minus epsilon
+    eps = [(0, 1.0, 2.0), (1, 1.5, 3.0), (1, 2.0, 2.5)]
+    assert prune_full_outages(eps, 2) == ((0, 1.0, 2.0), (1, 2.0, 2.5))
+
+
+def test_mmpp_storm_clusters_episodes():
+    """Storm-heavy modulation must produce more episodes than calm-only
+    gaps would, and the shared timeline correlates partitions."""
+    rng = random.Random("t")
+    timeline = mmpp_state_timeline(random.Random("tl"), t_end=100.0,
+                                   mean_calm=5.0, mean_storm=5.0)
+    assert timeline[0] == (0.0, 0)
+    assert all(t1 < t2 for (t1, _), (t2, _) in zip(timeline, timeline[1:]))
+    stormy = mmpp_on_off(random.Random("x"), timeline, t_end=100.0,
+                         mean_on=0.1, mean_off_calm=50.0, mean_off_storm=0.5)
+    calm = mmpp_on_off(random.Random("x"), [(0.0, 0)], t_end=100.0,
+                       mean_on=0.1, mean_off_calm=50.0, mean_off_storm=0.5)
+    assert len(stormy) > 2 * max(len(calm), 1)
+    # episodes should fall overwhelmingly inside storm windows
+    def state_at(t):
+        s = 0
+        for ts, st in timeline:
+            if ts <= t:
+                s = st
+        return s
+    in_storm = sum(state_at(t0) for t0, _ in stormy)
+    assert in_storm / len(stormy) > 0.8
+
+
+def test_mmpp_preemption_builds():
+    topo = _fleet()
+    m = mmpp_preemption(topo, seed=2, t_end=1.0, mean_calm=0.2,
+                        mean_storm=0.05, mean_up_calm=1.0,
+                        mean_up_storm=0.01, mean_down=0.01)
+    assert m.n_episodes > 0
+    assert m == mmpp_preemption(topo, seed=2, t_end=1.0, mean_calm=0.2,
+                                mean_storm=0.05, mean_up_calm=1.0,
+                                mean_up_storm=0.01, mean_down=0.01)
+
+
+def test_model_validation():
+    with pytest.raises(ValueError):
+        PreemptionModel((), preempt="pause")
+    with pytest.raises(ValueError):
+        PreemptionModel((), resume_penalty=-0.1)
+    with pytest.raises(ValueError):
+        PreemptionModel(((0, 2.0, 1.0),))              # t1 <= t0
+    with pytest.raises(ValueError):
+        PreemptionModel(((0, 0.0, 2.0), (0, 1.0, 3.0)))  # overlap
+    with pytest.raises(ValueError):
+        PreemptionModel(((0, 2.0, 3.0), (1, 1.0, 2.0)))  # unsorted
+    with pytest.raises(ValueError):
+        pod_slice_preemption(_fleet(), seed=1, t_end=float("inf"),
+                             mean_up=1.0, mean_down=0.1)
+
+
+# -- availability masks ------------------------------------------------------
+
+def test_live_view_masks_places():
+    topo = _fleet()
+    view = topo.live_view(frozenset({0}))
+    down_cores = set(topo.partitions[0].cores)
+    places = topo.places()
+    live = {int(i) for i in view.place_idx}
+    for i, pl in enumerate(places):
+        on_down = bool(set(pl.cores) & down_cores)
+        assert (i in live) == (not on_down)
+    assert all(places[int(i)].width == 1 for i in view.width1_idx)
+    assert set(view.cores).isdisjoint(down_cores)
+    assert [p.name for p in view.partitions] == ["pod1", "pod2", "pod3"]
+    # interned per down-set
+    assert topo.live_view(frozenset({0})) is view
+    with pytest.raises(ValueError):
+        topo.live_view(frozenset({0, 1, 2, 3}))
+
+
+def test_scheduler_searches_respect_live_view():
+    topo = _fleet()
+    down = frozenset({0})
+    view = topo.live_view(down)
+    down_cores = set(topo.partitions[0].cores)
+    for name in ("DA", "DAM-C", "DAM-P", "FA", "FAM-C"):
+        sched = make_scheduler(name, topo, seed=11)
+        sched.live = view
+        for _ in range(20):
+            task = Task(matmul_type(512), priority=Priority.HIGH)
+            target = sched.place_on_wake(task, waker_core=0)
+            assert target not in down_cores, name
+            assert not (set(task.bound_place.cores) & down_cores), name
+
+
+def test_fa_falls_back_to_fastest_live_partition():
+    """tx2: denver is statically fastest; with denver down FA must bind
+    HIGH tasks to the a57 partition instead."""
+    topo = tx2()
+    sched = make_scheduler("FA", topo, seed=1)
+    task = Task(matmul_type(64), priority=Priority.HIGH)
+    assert sched.place_on_wake(task, 0) in (0, 1)          # denver
+    sched.live = topo.live_view(frozenset({0}))
+    task = Task(matmul_type(64), priority=Priority.HIGH)
+    assert sched.place_on_wake(task, 0) in (2, 3, 4, 5)    # a57 fallback
+
+
+def test_mixed_generation_fleet_static_ranks():
+    topo = _fleet()
+    assert topo.fastest_static_partition().name == "pod0"
+    assert [p.static_rank for p in topo.partitions] == [0, 1, 1, 1]
+    # v4 pods are slower on every kernel of the mix
+    for tt in (matmul_type(512), copy_type(512), stencil_type(2048)):
+        assert tt.duration("pod_v4", 1) > tt.duration("pod", 1)
+    with pytest.raises(ValueError):
+        tpu_pod_slices(pods=2, slices_per_pod=4, kinds=("pod",))
+    with pytest.raises(ValueError):
+        tpu_pod_slices(pods=1, slices_per_pod=4, kinds=("tpu_v9",))
+
+
+# -- revoke/restore semantics in the DES -------------------------------------
+
+def _fleet_run(name, *, pre, seed=1, total=600, P=8):
+    sched = make_scheduler(name, _fleet(), seed=seed)
+    dag = synthetic_dag(matmul_type(512), parallelism=P, total_tasks=total)
+    return simulate(dag, sched, preemption=pre)
+
+
+def test_all_tasks_complete_under_preemption():
+    topo = _fleet()
+    base = _fleet_run("DAM-C", pre=None)
+    m0 = base.makespan
+    for name in ALL_SCHEDULERS:
+        pre = pod_slice_preemption(topo, seed=5, t_end=10 * m0,
+                                   mean_up=0.4 * m0, mean_down=0.15 * m0)
+        m = _fleet_run(name, pre=pre)
+        assert m.n_tasks == 600, name
+        assert m.preempt_events > 0, name
+        assert m.tasks_preempted > 0, name
+
+
+def test_no_task_runs_during_outage():
+    """A committed task's final execution interval must never overlap an
+    outage of its partition (it would have been preempted)."""
+    topo = _fleet()
+    m0 = _fleet_run("DAM-C", pre=None).makespan
+    pre = pod_slice_preemption(topo, seed=9, t_end=10 * m0,
+                               mean_up=0.3 * m0, mean_down=0.2 * m0)
+    outages = {i: pre.episodes_for(i) for i in range(4)}
+    for name in ("RWS", "FAM-C", "DAM-C"):
+        m = _fleet_run(name, pre=pre, seed=9)
+        assert m.tasks_preempted > 0
+        for r in m.records:
+            pidx = next(i for i, p in enumerate(topo.partitions)
+                        if p.start <= r.leader < p.start + p.size)
+            for t0, t1 in outages[pidx]:
+                overlap = min(r.t_end, t1) - max(r.t_start, t0)
+                assert overlap <= 1e-12, (name, r, t0, t1)
+
+
+def test_deterministic_under_preemption():
+    topo = _fleet()
+    pre = pod_slice_preemption(topo, seed=6, t_end=1.0, mean_up=5e-5,
+                               mean_down=2e-5)
+    a = _fleet_run("DAM-C", pre=pre, seed=6)
+    b = _fleet_run("DAM-C", pre=pre, seed=6)
+    assert a.makespan == b.makespan
+    assert a.tasks_preempted == b.tasks_preempted
+    assert a.placement_counts() == b.placement_counts()
+
+
+def test_checkpoint_beats_restart_on_serial_chain():
+    """Controlled scenario: a serial chain pinned by RWS to core 0 (pod0),
+    one mid-task revoke.  Restart redoes the whole task on the surviving
+    pod; checkpoint resumes with only the penalty extra.  Execution
+    durations are deterministic (noise only perturbs PTT measurements),
+    so the relation is exact."""
+    topo = tpu_pod_slices(pods=2, slices_per_pod=2)
+    tt = copy_type(2048)
+    d = tt.duration("pod", 1)
+    episodes = ((0, 0.5 * d, 0.8 * d),)
+    spans = {}
+    for mode in ("restart", "checkpoint"):
+        sched = make_scheduler("RWS", topo, seed=1)
+        dag = chain_dag(tt, 3)
+        pre = PreemptionModel(episodes, preempt=mode, resume_penalty=0.1)
+        m = simulate(dag, sched, preemption=pre)
+        assert m.n_tasks == 3
+        assert m.tasks_preempted == 1
+        spans[mode] = m.makespan
+        if mode == "restart":
+            assert m.work_lost_s == pytest.approx(0.5 * d)
+        else:
+            assert m.work_lost_s == 0.0
+    # restart: 0.5d wasted; checkpoint: only the 0.1d penalty
+    assert spans["checkpoint"] < spans["restart"]
+    assert spans["restart"] - spans["checkpoint"] == pytest.approx(
+        0.4 * d, rel=1e-6)
+
+
+def test_criticality_aware_beats_rws_under_revocation():
+    """The acceptance property at test scale: on the mixed-generation
+    fleet with pod-slice preemption, FAM-C and DAM-C beat RWS on mean
+    makespan over 3 seeds."""
+    topo = _fleet()
+    base = {}
+    m0 = None
+    for name in ("RWS", "FAM-C", "DAM-C"):
+        spans = []
+        for seed in (1, 2, 3):
+            sched = make_scheduler(name, topo, seed=seed)
+            dag = mixed_dag([matmul_type(512), copy_type(512),
+                             stencil_type(2048)],
+                            parallelism=8, total_tasks=800)
+            if m0 is None:
+                m0 = simulate(
+                    dag, make_scheduler("DAM-C", topo, seed=1)).makespan
+                dag = mixed_dag([matmul_type(512), copy_type(512),
+                                 stencil_type(2048)],
+                                parallelism=8, total_tasks=800)
+            pre = pod_slice_preemption(topo, seed=seed, t_end=10 * m0,
+                                       mean_up=0.8 * m0, mean_down=0.2 * m0)
+            m = simulate(dag, sched, preemption=pre)
+            assert m.tasks_preempted > 0
+            spans.append(m.makespan)
+        base[name] = sum(spans) / len(spans)
+    assert base["FAM-C"] < base["RWS"]
+    assert base["DAM-C"] < base["RWS"]
+
+
+def test_no_early_commit_from_stale_finish_events():
+    """Version-collision regression: a preempted execution's stale finish
+    event must never be mistaken for the re-placed execution's (versions
+    are equality-compared, so re-placements start a disjoint version
+    epoch).  An early commit would show up as a committed record shorter
+    than the task's full molded duration — impossible in restart mode
+    with core speeds <= 1.  Bandwidth-sensitive copy tasks churn rates
+    (and versions) on every start/commit, which is what makes the
+    collision reachable."""
+    topo = _fleet()
+    tt = copy_type(1024)
+    sched = make_scheduler("DAM-C", topo, seed=4)
+    dag = synthetic_dag(tt, parallelism=16, total_tasks=600)
+    m0 = simulate(dag, make_scheduler("DAM-C", topo, seed=4)).makespan
+    pre = pod_slice_preemption(topo, seed=4, t_end=10 * m0,
+                               mean_up=0.25 * m0, mean_down=0.1 * m0)
+    dag = synthetic_dag(tt, parallelism=16, total_tasks=600)
+    m = simulate(dag, sched, preemption=pre)
+    assert m.n_tasks == 600
+    assert m.tasks_preempted > 0
+    for r in m.records:
+        kind = "pod" if r.leader < 8 else "pod_v4"
+        assert r.duration >= tt.duration(kind, r.width) * (1 - 1e-9), r
+
+
+def test_run_ending_mid_outage_does_not_leak_live_view():
+    """A run that completes while a pod is still revoked must clear the
+    scheduler's availability mask: schedulers deliberately carry PTT
+    state across runs, and a stale LiveView would silently keep the pod
+    unused in later preemption-free runs."""
+    topo = tpu_pod_slices(pods=2, slices_per_pod=4)
+    tt = matmul_type(512)
+    d = tt.duration("pod", 1)
+    sched = make_scheduler("DAM-C", topo, seed=3)
+    # pod0 revoked early, "restored" long after the DAG completes
+    pre = PreemptionModel(((0, 2 * d, 1e6),))
+    m1 = simulate(synthetic_dag(tt, parallelism=8, total_tasks=200),
+                  sched, preemption=pre)
+    assert m1.n_tasks == 200 and m1.preempt_events == 1
+    assert sched.live is None
+    m2 = simulate(synthetic_dag(tt, parallelism=8, total_tasks=200), sched)
+    pod0 = set(topo.partitions[0].cores)
+    assert any(r.leader in pod0 for r in m2.records)
+
+
+def test_restored_pod_is_reused():
+    """After a restore, the revoked partition must pick work back up
+    (cores steal their way back in)."""
+    topo = tpu_pod_slices(pods=2, slices_per_pod=4)
+    tt = matmul_type(512)
+    d = tt.duration("pod", 1)
+    # pod0 down early, restored long before the run ends
+    pre = PreemptionModel(((0, 2 * d, 6 * d),))
+    sched = make_scheduler("RWS", topo, seed=2)
+    dag = synthetic_dag(tt, parallelism=8, total_tasks=800)
+    m = simulate(dag, sched, preemption=pre)
+    assert m.n_tasks == 800
+    pod0 = set(topo.partitions[0].cores)
+    after_restore = [r for r in m.records
+                     if r.leader in pod0 and r.t_start >= 6 * d]
+    assert after_restore
+
+
+# -- zero cost when disabled (satellite: preemption-off equivalence) ---------
+
+def _golden_run(name, pre):
+    sched = make_scheduler(name, tx2(), seed=7)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=2, total_tasks=N_TASKS)
+    speed = SpeedProfile(6).add_square_wave((0, 1), period=0.004, lo=0.17,
+                                            t_end=0.2)
+    return simulate(dag, sched, background=[corun_chain(tt, core=0)],
+                    speed=speed, preemption=pre)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_golden_pins_bit_identical_when_disabled(name):
+    """With no PreemptionModel — or an *empty* one — every golden-schedule
+    pin stays bit-identical: the subsystem must be zero-cost when off."""
+    none_run = _golden_run(name, None)
+    empty_run = _golden_run(name, PreemptionModel(()))
+    assert none_run.makespan == pytest.approx(GOLDEN[name]["makespan"],
+                                              rel=1e-9)
+    assert none_run.placement_counts() == GOLDEN[name]["places"]
+    assert none_run.placement_counts(priority=1) == GOLDEN[name]["high_places"]
+    # and the empty-model run is *exactly* the disabled run, to the bit
+    assert empty_run.makespan == none_run.makespan
+    assert empty_run.placement_counts() == none_run.placement_counts()
+    assert [r.t_end for r in empty_run.records] == \
+        [r.t_end for r in none_run.records]
+    assert empty_run.preempt_events == 0
+    assert empty_run.tasks_preempted == 0
+
+
+# -- multirun integration ----------------------------------------------------
+
+def test_multirun_preemption_cell():
+    from repro.core import RunSpec, run_cells
+    spec = RunSpec(
+        key="p",
+        dag=("mixed", {"task_types": (("matmul", {"tile": 512}),
+                                      ("copy", {"tile": 512})),
+                       "parallelism": 8, "total_tasks": 200}),
+        scheduler="DAM-C",
+        topology=("tpu_pod_slices", {"pods": 4, "slices_per_pod": 8,
+                                     "kinds": ("pod", "pod_v4", "pod_v4",
+                                               "pod_v4")}),
+        seed=3,
+        preemption=("pod_slices", {"seed": 3, "t_end": 1.0,
+                                   "mean_up": 5e-5, "mean_down": 2e-5}),
+        collect=("preemption",))
+    r1 = run_cells([spec], workers=1)["p"]
+    r2 = run_cells([spec], workers=1)["p"]
+    assert r1 == r2
+    assert r1["n_tasks"] == 200
+    assert r1["preemption"]["events"] > 0
+    assert r1["preemption"]["tasks_preempted"] > 0
