@@ -1,24 +1,34 @@
-# Single-entry smoke check: unit/regression tests + the fig4 and kernel
-# benchmark suites at CI sizes.  The benchmark CSV includes per-suite wall
-# times (also embedded in each JSON artifact under _meta.suite_wall_s) so
-# perf regressions are visible in the trajectory.
+# Single-entry smoke check: lint + unit/regression tests + the fig4, serve
+# and kernel benchmark suites at CI sizes.  The benchmark CSV includes
+# per-suite wall times (also embedded in each JSON artifact under
+# _meta.suite_wall_s) so perf regressions are visible in the trajectory.
 PY := PYTHONPATH=src python
 
-.PHONY: check test bench-smoke bench
+.PHONY: check test lint bench-smoke bench
 
-check: test bench-smoke
+check: lint test bench-smoke
 
 test:
 	$(PY) -m pytest -q
 
+# prefer a real linter when one is installed; the stdlib AST checker
+# (tools/lint.py — syntax errors + dead/duplicate imports) is the
+# no-dependency fallback this container runs
+lint:
+	@if command -v ruff >/dev/null 2>&1; then ruff check src benchmarks tests tools examples; \
+	elif python -c 'import pyflakes' >/dev/null 2>&1; then python -m pyflakes src benchmarks tests tools examples; \
+	else python tools/lint.py; fi
+
 # --workers 2 keeps the multiprocessing fan-out path exercised in CI (the
 # worker pool is cached across suites); scenarios covers the bursty/
 # governor/trace profiles and the lazy-breakpoint pull path; preempt
-# covers pod-slice revocation + the mixed-generation fleet
+# covers pod-slice revocation + the mixed-generation fleet; serve covers
+# the threaded open-loop serving path (p50/p99 TTFT under interference)
 bench-smoke:
-	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,kernels
+	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,serve,kernels
 
 # full paper-figure sweep (paper-full task counts: matmul 32k / copy 10k /
-# stencil 20k) + scheduler-engine throughput, fanned across all host cores
+# stencil 20k) + scheduler-engine throughput + the serving sweep, fanned
+# across all host cores
 bench:
 	$(PY) -m benchmarks.run

@@ -8,7 +8,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas

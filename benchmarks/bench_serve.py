@@ -1,0 +1,258 @@
+"""Serving-path benchmark on the *threaded* engine: schedulers x injected
+interference, open-loop arrival, p50/p99 TTFT.
+
+Everything else in ``make bench`` measures the discrete-event simulator;
+this suite exercises the unified scheduling kernel on the **real threaded
+runtime** (DESIGN.md §3) under the serving workload shape (DESIGN.md §2):
+each request is a HIGH-priority prefill task releasing a LOW-priority
+decode chain, submitted *open loop* (seeded Poisson inter-arrival via
+``ThreadedRuntime.start()``/``drain()``), so queueing delay lands in the
+TTFT tail instead of being hidden by batch submission.  Payloads are
+calibrated sleeps standing in for the jitted model dispatches the
+``repro.serve`` engine issues — interference is injected through the
+runtime's ``slowdown`` map and wall-clock pod revocation
+(``PreemptionModel`` episodes fired by the runtime's timer thread), which
+exercise the identical scheduler-visible code paths.
+
+Fleet: 2 pods x 4 slices, mixed generation — pod0 is current-gen (the
+statically fastest, what FA/FAM-C bind to) and pod1 is v4-class, modeled
+as a 2x baseline slowdown on its slices in *every* scenario (the threaded
+runtime has no cost models, so static asymmetry must be expressed in
+execution).  Scenarios add dynamic interference on top:
+
+* ``clean``        — static asymmetry only (sanity reference);
+* ``slow_fast_pod``— the statically fast pod0 slowed 8x (co-tenant burst):
+                     static binding is now wrong, the PTT must override it;
+* ``slow_spread``  — slowdown across both pods (8x/8x on two pod0 slices,
+                     6x on two pod1 slices): only a PTT-guided scheduler
+                     still finds the quiet slices;
+* ``revoke_fast``  — pod0 revoked twice mid-run (wall-clock pod-slice
+                     preemption): prefills must re-place on the survivor.
+
+Emits per-cell p50/p99 TTFT + makespan and an ``acceptance`` block
+recording, per interference scenario, whether a criticality-aware
+scheduler (DAM-C / FAM-C) beats RWS on p99 TTFT.  Artifact:
+``BENCH_serve.json`` (repo root + benchmarks/artifacts).
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import (PreemptionModel, Priority, RequestRecord,
+                        ResourcePartition, Task, TaskType, ThreadedRuntime,
+                        Topology, make_scheduler)
+from repro.core.dag import DAG
+from repro.core.metrics import percentile
+
+from .common import emit, write_artifact
+
+SCHEDULERS = ("RWS", "FAM-C", "DAM-C", "DAM-P")
+FAST_SCHEDULERS = ("RWS", "FAM-C", "DAM-C")
+PREFILL_S = 8e-3           # sleep standing in for the prefill dispatch
+DECODE_S = 2e-3            # per decode step
+DECODE_STEPS = 4
+RATE_RPS = 30.0            # open-loop arrival rate (util low enough that
+                           # PTT-herded prefills don't queue behind
+                           # each other — see DESIGN.md §2)
+N_REQ, N_REQ_FAST = 84, 36
+# excluded from the latency stats: the PTT's one-visit-per-place
+# exploration phase — 14 places on this fleet, plus the pile-up window on
+# the *last* unexplored place (an unexplored entry wins every argmin
+# until its first commit lands, so concurrent prefills herd onto it; on
+# an 8x-slowed wide place that commit takes ~10 request inter-arrivals).
+# Production engines warm the table before taking traffic, and a cold
+# RWS has no table to warm.
+N_WARMUP, N_WARMUP_FAST = 28, 28
+POD0 = (0, 1, 2, 3)        # slices of the statically fast pod
+V4_FACTOR = 2.0            # pod1 baseline: previous-gen slices run 2x slower
+
+SCENARIOS: dict[str, dict] = {
+    "clean": {},
+    "slow_fast_pod": {"slowdown": {c: 8.0 for c in POD0}},
+    "slow_spread": {"slowdown": {0: 8.0, 1: 8.0, 4: 6.0, 5: 6.0}},
+    # pod0 loses its slices twice while requests are in flight; episode
+    # times are fractions of the ~N_REQ/RATE_RPS arrival window
+    "revoke_fast": {"revoke": ((0, 0.15, 0.35), (0, 0.55, 0.75))},
+}
+INTERFERENCE = ("slow_fast_pod", "slow_spread", "revoke_fast")
+
+
+def _fleet():
+    """2 pods x 4 slices, width-1 places only: each dispatch occupies one
+    slice.  Molded (multi-slice) assemblies are deliberately not exposed
+    here — a wide place spanning an interfered slice stalls its clean
+    members in the assembly barrier, and this suite measures placement
+    under interference, not molding (the fig4/fig7 DES sweeps and the
+    real-model serve engine keep the full width sets)."""
+    return Topology([
+        ResourcePartition("pod0", "pod", 0, 4, (1,), static_rank=0),
+        ResourcePartition("pod1", "pod_v4", 4, 4, (1,), static_rank=1),
+    ])
+
+
+def _cell_config(scenario: str, window_s: float):
+    """(slowdown map, preemption model) for one cell: the v4 pod's 2x
+    baseline everywhere, scenario slowdowns on top, revocation episodes
+    scaled to the arrival window."""
+    cfg = SCENARIOS[scenario]
+    slowdown = {c: V4_FACTOR for c in range(4, 8)}
+    slowdown.update(cfg.get("slowdown", ()))
+    pre = None
+    if "revoke" in cfg:
+        pre = PreemptionModel(tuple(
+            (pidx, t0 * window_s, t1 * window_s)
+            for pidx, t0, t1 in cfg["revoke"]))
+    return slowdown, pre
+
+
+class _Request:
+    __slots__ = ("rid", "t_submit", "t_first", "t_done")
+
+    def __init__(self, rid):
+        self.rid = rid
+        self.t_submit = time.perf_counter()
+        self.t_first = 0.0
+        self.t_done = 0.0
+
+
+def _request_dag(req: _Request, pre_type: TaskType,
+                 dec_type: TaskType) -> DAG:
+    """The serve engine's request shape (DESIGN.md §2): one HIGH prefill
+    releasing a chain of LOW decode steps, with sleep payloads."""
+
+    def prefill_payload(width, _req=req):
+        time.sleep(PREFILL_S)
+
+    def make_decode(step: int) -> Task:
+        t = Task(dec_type, priority=Priority.LOW,
+                 payload=lambda width: time.sleep(DECODE_S))
+
+        def on_commit(_task, _step=step, _req=req):
+            if _step + 1 < DECODE_STEPS:
+                return [make_decode(_step + 1)]
+            _req.t_done = time.perf_counter()
+            return []
+
+        t.on_commit = on_commit
+        return t
+
+    pre = Task(pre_type, priority=Priority.HIGH, payload=prefill_payload)
+
+    def pre_commit(_task, _req=req):
+        # first token is out when the prefill *commits* — after any
+        # injected slowdown, exactly when a real client would see it
+        _req.t_first = time.perf_counter()
+        return [make_decode(0)]
+
+    pre.on_commit = pre_commit
+    return DAG([pre], 1 + DECODE_STEPS)
+
+
+def _run_seed(sched_name: str, scenario: str, *, n_req: int, n_warmup: int,
+              seed: int) -> tuple[dict, list[RequestRecord]]:
+    topo = _fleet()
+    slowdown, pre = _cell_config(scenario,
+                                 window_s=(n_req + n_warmup) / RATE_RPS)
+    sched = make_scheduler(sched_name, topo, seed=seed)
+    rt = ThreadedRuntime(sched, slowdown=slowdown, preemption=pre)
+    kinds = {p.kind for p in topo.partitions}
+    pre_type = TaskType("serve_prefill", {k: PREFILL_S for k in kinds})
+    dec_type = TaskType("serve_decode", {k: DECODE_S for k in kinds})
+    arrivals = random.Random(f"serve-arrival:{seed}")
+    requests = [_Request(i) for i in range(n_warmup + n_req)]
+    rt.start()
+    for i, req in enumerate(requests):
+        if i:
+            time.sleep(arrivals.expovariate(RATE_RPS))
+        req.t_submit = time.perf_counter()
+        rt.submit(_request_dag(req, pre_type, dec_type))
+    m = rt.drain(timeout=60.0)
+    measured = [RequestRecord(rid=req.rid, t_submit=req.t_submit,
+                              t_first_token=req.t_first, t_done=req.t_done)
+                for req in requests[n_warmup:] if req.t_done > 0]
+    info = {
+        "completed": sum(1 for req in requests if req.t_done > 0),
+        "expected": n_warmup + n_req,
+        "makespan_s": round(m.makespan, 4),
+        "preempt_events": m.preempt_events,
+    }
+    return info, measured
+
+
+def _run_cell(sched_name: str, scenario: str, *, n_req: int, n_warmup: int,
+              seeds: tuple[int, ...]) -> dict:
+    """One (scheduler, scenario) cell: requests pooled across seeds so the
+    p99 is not a single-sample statistic."""
+    pooled: list[RequestRecord] = []
+    infos = []
+    for seed in seeds:
+        info, measured = _run_seed(sched_name, scenario, n_req=n_req,
+                                   n_warmup=n_warmup, seed=seed)
+        infos.append(info)
+        pooled.extend(measured)
+    ttft = sorted(r.ttft for r in pooled)
+    e2e = sorted(r.e2e for r in pooled)
+    return {
+        "completed": sum(i["completed"] for i in infos),
+        "expected": sum(i["expected"] for i in infos),
+        "measured": len(pooled),
+        "ttft_ms_p50": round(percentile(ttft, 50) * 1e3, 3) if ttft else None,
+        "ttft_ms_p99": round(percentile(ttft, 99) * 1e3, 3) if ttft else None,
+        "e2e_ms_p99": round(percentile(e2e, 99) * 1e3, 3) if e2e else None,
+        "makespan_s": [i["makespan_s"] for i in infos],
+        "preempt_events": sum(i["preempt_events"] for i in infos),
+    }
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    del workers                    # threaded cells are in-process serial
+    n_req = N_REQ_FAST if fast else N_REQ
+    n_warmup = N_WARMUP_FAST if fast else N_WARMUP
+    seeds = (0, 1) if fast else (0, 1, 2)
+    scheds = FAST_SCHEDULERS if fast else SCHEDULERS
+    out: dict = {"n_requests": n_req, "n_warmup": n_warmup,
+                 "rate_rps": RATE_RPS, "seeds": list(seeds)}
+    p99: dict[tuple[str, str], float] = {}
+    for scenario in SCENARIOS:
+        for name in scheds:
+            res = _run_cell(name, scenario, n_req=n_req, n_warmup=n_warmup,
+                            seeds=seeds)
+            out[f"serve/{scenario}/{name}"] = res
+            if (res["completed"] == res["expected"]
+                    and res["ttft_ms_p99"] is not None):
+                p99[(scenario, name)] = res["ttft_ms_p99"]
+            emit(f"serve/{scenario}/{name}/ttft_ms_p99",
+                 res["ttft_ms_p99"], f"p50={res['ttft_ms_p50']} "
+                 f"completed={res['completed']}/{res['expected']}")
+
+    # acceptance: a criticality-aware scheduler beats RWS on p99 TTFT
+    # under the injected-interference scenarios (threaded path)
+    acceptance: dict = {}
+    scenario_wins = 0
+    for scenario in INTERFERENCE:
+        rws = p99.get((scenario, "RWS"))
+        if rws is None:
+            continue
+        for adaptive in ("DAM-C", "FAM-C"):
+            own = p99.get((scenario, adaptive))
+            if own is None:
+                continue
+            acceptance[f"{scenario}/{adaptive}_beats_RWS_p99_ttft"] = own < rws
+            emit(f"serve/{scenario}/RWS_vs_{adaptive}_p99_ttft",
+                 round(rws / own, 3), "x slower (>1: criticality-aware wins)")
+    for scenario in INTERFERENCE:
+        if any(acceptance.get(f"{scenario}/{a}_beats_RWS_p99_ttft")
+               for a in ("DAM-C", "FAM-C")):
+            scenario_wins += 1
+    acceptance["interference_scenarios_won"] = scenario_wins
+    acceptance["criticality_beats_RWS_p99_ttft_ge_2_scenarios"] = \
+        scenario_wins >= 2
+    out["acceptance"] = acceptance
+    # the repo-root mirror is the headline artifact (full sizes only)
+    write_artifact("BENCH_serve", out, root_copy=not fast)
+    return out
+
+
+if __name__ == "__main__":
+    run()

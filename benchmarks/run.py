@@ -26,7 +26,7 @@ import time
 from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
                bench_kmeans, bench_preemption, bench_roofline,
                bench_scenarios, bench_sched_throughput, bench_sensitivity,
-               bench_task_distribution)
+               bench_serve, bench_task_distribution)
 from . import common
 
 SUITES = {
@@ -41,6 +41,7 @@ SUITES = {
     "scenarios": bench_scenarios.run,
     "preempt": bench_preemption.run,
     "sched": bench_sched_throughput.run,
+    "serve": bench_serve.run,
 }
 
 

@@ -12,7 +12,7 @@ from repro.configs import get_config
 from repro.data import DataConfig, SyntheticStream
 from repro.models import decode_step, init_params
 from repro.models.transformer import prefill
-from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.optim import AdamWConfig, init_opt_state
 from repro.train import make_train_step
 
 cfg = get_config("qwen2.5-14b").reduced()

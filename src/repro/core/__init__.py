@@ -6,6 +6,8 @@ Public surface:
   task        — Task / TaskType + the paper's kernel cost models
   dag         — synthetic / kmeans / heat DAG builders
   schedulers  — RWS, RWSM-C, FA, FAM-C, DA, DAM-C, DAM-P (Algorithm 1)
+  queues      — split HIGH-FIFO/LOW-LIFO WSQs + AQs (shared by both engines)
+  lifecycle   — engine-agnostic scheduling kernel (wake/place/steal/commit)
   interference— co-running apps + DVFS speed profiles
   preemption  — seeded pod-slice revoke/restore episode models
   simulator   — discrete-event engine (paper-scale evaluation)
@@ -14,12 +16,13 @@ Public surface:
   metrics     — throughput / placement / worktime aggregation
 """
 from .dag import DAG, chain_dag, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
+from .lifecycle import SchedulingKernel, ptt_observe, split_by_priority
 from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
                            SpeedProfileBase, TraceProfile, burst_episodes,
                            corun_chain, corun_socket, dvfs_denver,
                            governor_profile, mmpp_on_off, mmpp_state_timeline,
                            random_walk_trace, renewal_on_off)
-from .metrics import RunMetrics, TaskRecord
+from .metrics import RequestRecord, RunMetrics, TaskRecord
 from .multirun import (RunSpec, default_workers, run_cell, run_cells,
                        shutdown_pool)
 from .places import ExecutionPlace, LiveView, ResourcePartition, Topology, \
@@ -27,6 +30,7 @@ from .places import ExecutionPlace, LiveView, ResourcePartition, Topology, \
 from .preemption import (PreemptionModel, mmpp_preemption,
                          pod_slice_preemption, prune_full_outages)
 from .ptt import PTT, PTTBank
+from .queues import SplitWSQ, WorkQueues
 from .runtime import ThreadedRuntime, run_threaded
 from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
 from .simulator import Simulator, simulate
@@ -41,11 +45,13 @@ __all__ = [
     "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
     "dvfs_denver", "governor_profile", "mmpp_on_off", "mmpp_state_timeline",
     "random_walk_trace", "renewal_on_off",
-    "RunMetrics", "TaskRecord", "ExecutionPlace", "LiveView",
+    "RequestRecord", "RunMetrics", "TaskRecord", "ExecutionPlace", "LiveView",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
     "tpu_pod_slices", "tx2", "tx2_xl",
     "PreemptionModel", "mmpp_preemption", "pod_slice_preemption",
     "prune_full_outages",
+    "SchedulingKernel", "ptt_observe", "split_by_priority",
+    "SplitWSQ", "WorkQueues",
     "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
     "RunSpec", "default_workers", "run_cell", "run_cells", "shutdown_pool",

@@ -1,0 +1,151 @@
+"""Engine-agnostic task-lifecycle kernel (paper Fig. 3 / Algorithm 1).
+
+The XiTAO task lifetime — **wake** (predecessor commits, binding placement
+of HIGH tasks) → **place** → **dequeue or steal-with-re-search** →
+**commit** (leader measures, PTT feedback, dependents wake) — used to be
+implemented twice: once inside the discrete-event simulator and once
+inside the threaded runtime, and the two copies drifted (the threaded
+engine lost priority dequeue, seeded steal tie-breaks and revocation
+entirely).  This module is the single implementation both engines drive:
+
+* :class:`SchedulingKernel` owns the scheduler, the shared
+  :class:`~.queues.WorkQueues`, and a *time source* (simulated clock for
+  the DES, ``perf_counter`` deltas for the threaded runtime); every
+  decision point of the lifecycle is a method here;
+* what remains in each engine is only its execution substrate: event-heap
+  rate integration in the simulator, worker threads + barriers in the
+  threaded runtime.
+
+All randomness flows through the scheduler's seeded streams, so the DES
+stays bit-reproducible and the threaded engine's *decisions* (victim
+tie-breaks, placement tie-breaks) come from the same deterministic
+streams even though its measurements are wall-clock.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Iterator
+
+from .places import ExecutionPlace
+from .queues import WorkQueues
+from .schedulers import Scheduler
+from .task import Priority, Task, TaskType
+
+
+def ptt_observe(bank, type_name: str, place: ExecutionPlace,
+                observed: float) -> float:
+    """The one PTT-feedback path (paper step 8): the leader folds an
+    observed execution time into the type's trace table.  Shared by the
+    DES commit, the threaded commit, and the fleet-level PodMonitor so
+    the 1:4 hysteresis semantics exist exactly once."""
+    return bank.for_type(type_name).update(place, observed)
+
+
+class SchedulingKernel:
+    """Scheduler + queues + time source = every lifecycle decision.
+
+    ``now`` is the engine's time source (seconds since run start).  The
+    kernel resets per-run scheduler state on construction
+    (:meth:`Scheduler.begin_run`) so back-to-back runs on one scheduler
+    object are reproducible, and clears any revoked-capacity view at
+    :meth:`end_run` so it never leaks into a later run.
+    """
+
+    def __init__(self, scheduler: Scheduler, *, now: Callable[[], float]):
+        self.sched = scheduler
+        self.now = now
+        self.queues = WorkQueues(
+            scheduler.topology.n_cores,
+            priority_dequeue=scheduler.priority_dequeue,
+            steal_high=scheduler.steal_high)
+        self._all_cores = tuple(range(scheduler.topology.n_cores))
+        scheduler.begin_run()
+
+    # -- wake (steps 1-2): binding placement of HIGH tasks -------------------
+    def wake(self, task: Task, waker_core: int) -> int:
+        """Stamp readiness, run the wake-time placement, and return the
+        core whose WSQ receives the task."""
+        task.t_ready = self.now()
+        target = self.sched.place_on_wake(task, waker_core)
+        return waker_core if target is None else target
+
+    def live_cores(self) -> tuple[int, ...]:
+        view = self.sched.live
+        return self._all_cores if view is None else view.cores
+
+    def requeue_displaced(self, task: Task) -> int:
+        """Re-place a task displaced by a revocation: the old binding is
+        void (its partition may be down), the wake-time decision is redone
+        over the surviving places, and priority-oblivious paths get a
+        uniformly random live waker core (one seeded draw per task, so
+        the sequence is scheduler-independent)."""
+        task.t_ready = self.now()
+        task.bound_place = None
+        live = self.live_cores()
+        rng = self.sched.rng
+        waker = live[rng.randrange(len(live))] if len(live) > 1 else live[0]
+        target = self.sched.place_on_wake(task, waker)
+        return waker if target is None else target
+
+    # -- dequeue / steal (steps 3-5) -----------------------------------------
+    def on_steal(self, task: Task) -> None:
+        """A stolen task's binding decision is redone at the thief."""
+        task.bound_place = None
+
+    def choose_place(self, task: Task, worker_core: int) -> ExecutionPlace:
+        """Final execution place chosen by the worker that will run it
+        (re-runs the local width search after a steal, steps 4-5)."""
+        return self.sched.place_on_dequeue(task, worker_core)
+
+    # -- commit (step 8): measurement + PTT feedback + dependents ------------
+    def observe_simulated(self, task_type: TaskType, duration: float) -> float:
+        """The DES's measurement model: multiplicative noise (clamped to
+        [0.5, 2]) plus heavy-tailed OS-jitter spikes on short tasks.  The
+        threaded engine has no business here — it measures real wall
+        time."""
+        rng = self.sched.rng
+        noise = rng.gauss(1.0, task_type.noise) if task_type.noise else 1.0
+        observed = duration * min(max(noise, 0.5), 2.0)
+        if task_type.spike_prob and rng.random() < task_type.spike_prob:
+            observed *= task_type.spike_mag
+        return observed
+
+    def ptt_feedback(self, task: Task, place: ExecutionPlace,
+                     observed: float) -> None:
+        ptt_observe(self.sched.ptt, task.type.name, place, observed)
+
+    def commit_successors(self, task: Task, lock=None) -> Iterator[Task]:
+        """Yield the tasks a commit makes ready, in wake order: dependents
+        whose last input this was (in child order), then dynamically
+        inserted zero-dep tasks from ``on_commit``.  ``lock`` (threaded
+        engine) guards each dependency decrement — parents committing
+        concurrently may share a child."""
+        for child in task.children:
+            if lock is None:
+                child.n_deps -= 1
+                ready = child.n_deps == 0
+            else:
+                with lock:
+                    child.n_deps -= 1
+                    ready = child.n_deps == 0
+            if ready:
+                yield child
+        if task.on_commit is not None:
+            for new_task in task.on_commit(task):
+                if new_task.n_deps == 0:
+                    yield new_task
+
+    def end_run(self) -> None:
+        """A run that finishes mid-outage must not leak its availability
+        mask into later runs reusing the scheduler (PTT state is meant to
+        carry across runs; a revoked-capacity view is not)."""
+        self.sched.live = None
+
+
+def split_by_priority(tasks: Iterable[Task]) -> tuple[list[Task], list[Task]]:
+    """Partition displaced work for HIGH-first re-placement: the critical
+    path re-binds before the bulk work lands on the survivors."""
+    high: list[Task] = []
+    low: list[Task] = []
+    for t in tasks:
+        (high if t.priority == Priority.HIGH else low).append(t)
+    return high, low

@@ -6,6 +6,39 @@ import dataclasses
 from collections import Counter, defaultdict
 
 
+def percentile(sorted_vals: list[float], q: float) -> float:
+    """Linear-interpolation percentile over pre-sorted values (stdlib-only;
+    matches numpy's default 'linear' method)."""
+    if not sorted_vals:
+        raise ValueError("percentile of empty list")
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    pos = (len(sorted_vals) - 1) * q / 100.0
+    lo = int(pos)
+    frac = pos - lo
+    if frac == 0.0:
+        return sorted_vals[lo]
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[lo + 1] * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestRecord:
+    """One serving request's lifecycle timestamps (all on the engine's
+    clock): submission, first token out (prefill commit), last token out."""
+    rid: int
+    t_submit: float
+    t_first_token: float
+    t_done: float
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_submit
+
+
 @dataclasses.dataclass(frozen=True)
 class TaskRecord:
     type_name: str
@@ -36,9 +69,16 @@ class RunMetrics:
     preempt_events: int = 0
     tasks_preempted: int = 0
     work_lost_s: float = 0.0
+    # serving-path accounting: one record per completed request (open-loop
+    # or batch), feeding the TTFT / end-to-end latency percentiles
+    request_records: list[RequestRecord] = dataclasses.field(
+        default_factory=list)
 
     def record(self, rec: TaskRecord) -> None:
         self.records.append(rec)
+
+    def record_request(self, rec: RequestRecord) -> None:
+        self.request_records.append(rec)
 
     def finish(self, t_end: float) -> None:
         self.makespan = t_end
@@ -94,6 +134,23 @@ class RunMetrics:
         (e.g. the K-means reduce) — paper Fig. 9(a)."""
         ends = sorted(r.t_end for r in self.records if r.type_name == marker_type)
         return [b - a for a, b in zip(ends, ends[1:])]
+
+    def request_latency_stats(self) -> dict:
+        """Per-request latency percentiles (milliseconds): time-to-first-
+        token and end-to-end, p50/p95/p99 + mean, over completed requests."""
+        recs = self.request_records
+        if not recs:
+            return {}
+        out: dict = {"completed": len(recs)}
+        for key, vals in (("ttft_ms", sorted(r.ttft for r in recs)),
+                          ("e2e_ms", sorted(r.e2e for r in recs))):
+            out[key] = {
+                "mean": sum(vals) / len(vals) * 1e3,
+                "p50": percentile(vals, 50) * 1e3,
+                "p95": percentile(vals, 95) * 1e3,
+                "p99": percentile(vals, 99) * 1e3,
+            }
+        return out
 
     def summary(self) -> dict[str, float]:
         return {

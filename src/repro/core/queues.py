@@ -1,0 +1,133 @@
+"""Engine-agnostic scheduling queues (paper Fig. 3, steps 1-3).
+
+One reusable structure for *both* execution engines — the discrete-event
+simulator and the real threaded runtime — so queue semantics exist once:
+
+* per-core split **Work Stealing Queue**: HIGH tasks in FIFO order (the
+  oldest HIGH gates the DAG and is served first), LOW tasks as a LIFO
+  deque for owner locality whose FIFO end feeds thieves.  Schedulers
+  without priority dequeue that steal HIGH tasks (the RWS family) route
+  everything through ``low``, i.e. one plain mixed-LIFO deque, which
+  preserves their priority-oblivious ordering;
+* per-core FIFO **Assembly Queue** holding placed work (engine-specific
+  records — the DES enqueues rate-integration records, the threaded
+  runtime barrier records; a molded task's record is inserted into *all*
+  member AQs and starts when every member reaches it);
+* **steal policy**: the victim with the most stealable tasks wins, maxima
+  tie-break uniformly at random from the caller's (seeded) RNG stream,
+  and the steal pops the oldest stealable task (LOW FIFO end first).
+
+Every method is O(1) or O(cores) and draws randomness only through the
+RNG handed in by the caller, so the DES's bit-exact golden schedules and
+the threaded runtime's seeded steal stream both ride on the same code.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Optional
+
+from .task import Priority, Task
+
+
+class SplitWSQ:
+    """Split work-stealing queue: a HIGH FIFO deque + a LOW LIFO deque
+    (whose FIFO end feeds thieves)."""
+
+    __slots__ = ("high", "low")
+
+    def __init__(self):
+        self.high: deque[Task] = deque()
+        self.low: deque[Task] = deque()
+
+    def __len__(self) -> int:
+        return len(self.high) + len(self.low)
+
+
+class WorkQueues:
+    """Per-core split WSQs + assembly queues under one scheduling policy.
+
+    ``priority_dequeue`` — serve the oldest HIGH before any LOW from the
+    owner's queue; ``steal_high`` — HIGH tasks are stealable (RWS family).
+    HIGH tasks are routed to the split HIGH deque unless the scheduler is
+    fully priority-oblivious (no priority dequeue AND HIGH stealable),
+    which keeps stealable counts and steal pops consistent with
+    ``Scheduler.may_steal`` for *any* flag combination.
+    """
+
+    def __init__(self, n_cores: int, *, priority_dequeue: bool,
+                 steal_high: bool):
+        self.n_cores = n_cores
+        self.priority_dequeue = priority_dequeue
+        self.steal_high = steal_high
+        self.route_high = priority_dequeue or not steal_high
+        self.wsq: list[SplitWSQ] = [SplitWSQ() for _ in range(n_cores)]
+        self.aq: list[deque] = [deque() for _ in range(n_cores)]
+
+    # -- ready-task (WSQ) operations ----------------------------------------
+    def push(self, task: Task, core: int) -> None:
+        q = self.wsq[core]
+        if self.route_high and task.priority == Priority.HIGH:
+            q.high.append(task)
+        else:
+            q.low.append(task)
+
+    def pop_local(self, core: int) -> Optional[Task]:
+        """Owner pop: oldest HIGH first under priority dequeue; LOW pops
+        LIFO for locality; leftover HIGHs (non-priority dequeue) FIFO."""
+        q = self.wsq[core]
+        if self.priority_dequeue and q.high:
+            return q.high.popleft()
+        if q.low:
+            return q.low.pop()
+        if q.high:
+            return q.high.popleft()
+        return None
+
+    def wsq_len(self, core: int) -> int:
+        return len(self.wsq[core])
+
+    def stealable(self, task: Task) -> bool:
+        return self.steal_high or task.priority != Priority.HIGH
+
+    def stealable_count(self, core: int) -> int:
+        q = self.wsq[core]
+        return len(q.low) + len(q.high) if self.steal_high else len(q.low)
+
+    def pick_victim(self, thief: int, rng) -> int:
+        """The WSQ with the most stealable tasks (paper step 3); maxima
+        tie-break uniformly at random from ``rng``.  Returns -1 when no
+        core has stealable work.  O(cores) length reads."""
+        best_n = 0
+        best: list[int] = []
+        for v in range(self.n_cores):
+            if v == thief:
+                continue
+            n = self.stealable_count(v)
+            if n > best_n:
+                best_n = n
+                best = [v]
+            elif n and n == best_n:
+                best.append(v)
+        if not best:
+            return -1
+        return best[0] if len(best) == 1 else best[rng.randrange(len(best))]
+
+    def steal_pop(self, victim: int) -> Task:
+        """Pop the oldest stealable task (LOW FIFO end first; HIGHs only
+        ever surface here when ``steal_high`` routed them to ``low`` or
+        priority dequeue left them exposed)."""
+        q = self.wsq[victim]
+        return q.low.popleft() if q.low else q.high.popleft()
+
+    def drain_wsq(self, cores: Iterable[int]) -> list[Task]:
+        """Empty the WSQs of ``cores`` (a revoked partition), returning
+        tasks in steal order per core: oldest HIGH first, then the LOW
+        deque oldest-first."""
+        out: list[Task] = []
+        for c in cores:
+            q = self.wsq[c]
+            out.extend(q.high)
+            out.extend(q.low)
+            q.high.clear()
+            q.low.clear()
+        return out

@@ -3,7 +3,14 @@
 Unlike the simulator, nothing here uses cost models: workers execute the
 task's ``payload(width)`` callable (typically a jitted JAX kernel), measure
 wall time, and feed the *measured* time into the PTT.  Scheduling decisions
-are exactly the same ``Scheduler`` object used by the simulator.
+come from the same :class:`~.lifecycle.SchedulingKernel` (split
+HIGH-FIFO/LOW-LIFO work-stealing queues, assembly queues, seeded
+steal-victim selection, wake/requeue placement, PTT feedback) that drives
+the discrete-event simulator — this module is only the *threaded driver*:
+worker threads, barriers, wall-clock time, and payload execution.  Feature
+parity with the DES therefore holds by construction: priority-aware
+dequeue, seeded tie-break streams (``ptt_tiebreak="seeded"``,
+``ptt_revisit``), LiveView-masked placement, and revocation.
 
 Interference can be injected for tests/demos via ``slowdown``: a mapping
 core -> factor; a worker on a slowed core sleeps ``duration*(factor-1)``
@@ -16,121 +23,247 @@ Molded execution: the leader runs the payload; member cores block on the
 task barrier for its duration (XiTAO's simplification: "each entry of the
 PTT keeps track of the execution time of the task, as observed by the
 leader core").
+
+Open-loop serving mode
+----------------------
+``start()`` launches the workers immediately and keeps them alive while
+requests trickle in (continuous submission); ``drain(timeout)`` stops
+accepting, waits for the queues to empty, and returns the metrics.  The
+batch-mode ``submit(dag); run()`` path is unchanged (it is exactly
+``start-without-accepting`` + ``drain``).
+
+Wall-clock preemption
+---------------------
+An optional :class:`~.preemption.PreemptionModel` attaches revoke/restore
+episodes whose times are interpreted as *wall seconds since run start*,
+fired by a timer thread.  At a revoke edge (all under the runtime lock):
+
+1. the partition's cores are marked down and the scheduler receives the
+   interned :class:`~.places.LiveView`, so every subsequent wake-time
+   search is restricted to surviving places;
+2. placed-but-unstarted assignments in the partition's AQs are cancelled
+   and their tasks displaced; the partition's WSQs drain;
+3. displaced work re-places on the survivors **HIGH tasks first** via the
+   kernel's requeue path (the critical path recovers before bulk work);
+4. *running* payloads cannot be killed (they are Python frames on worker
+   threads) — they get a grace window, exactly the 30-second spot-VM
+   signature: the assignment's ``revoked`` event is set, and a
+   *cooperative* payload may checkpoint by returning the fraction of its
+   outstanding work completed (a float in [0, 1)).  Under
+   ``preempt="checkpoint"`` that fraction folds into ``task.resume_frac``
+   (which the payload honors on its next execution by skipping completed
+   work); under ``"restart"`` the partial progress is discarded and
+   counted in ``work_lost_s``.  Non-cooperative payloads simply finish
+   and commit — work done during the grace window is work kept.
+
+At a restore edge the cores re-enter the worker loop and steal their way
+back to work.  With no model attached every preemption code path is
+behind a ``None`` check.
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import deque
-from typing import Iterable, Optional
+from typing import Optional
 
 from .dag import DAG
+from .lifecycle import SchedulingKernel, split_by_priority
 from .metrics import RunMetrics, TaskRecord
+from .preemption import PreemptionModel
 from .schedulers import Scheduler
 from .task import Task
 
 
 class _Assigned:
-    __slots__ = ("task", "place", "barrier", "started", "done")
+    __slots__ = ("task", "place", "barrier", "started", "done", "cancelled",
+                 "revoked", "partial")
 
     def __init__(self, task, place):
         self.task = task
         self.place = place
         self.barrier = threading.Barrier(place.width)
-        self.started = False
+        self.started = False            # some member pulled it (uncancellable)
         self.done = threading.Event()
+        self.cancelled = False          # displaced by a revoke before start
+        self.revoked = threading.Event()   # cooperative-checkpoint signal
+        self.partial = None             # fraction done when preempted, else None
 
 
 class ThreadedRuntime:
     def __init__(self, scheduler: Scheduler, *,
                  slowdown: Optional[dict[int, float]] = None,
-                 idle_sleep: float = 1e-4):
+                 idle_sleep: float = 2e-3,
+                 preemption: Optional[PreemptionModel] = None):
+        # idle_sleep is only a fallback poll: every work arrival (wake,
+        # assignment, requeue, restore) notifies the condition variable,
+        # so idle workers do not need a tight poll — 1e-4 here made eight
+        # idle workers busy-poll the lock at 10 kHz and starve the
+        # payloads themselves on small containers
         self.sched = scheduler
         self.topo = scheduler.topology
+        self.kernel = SchedulingKernel(scheduler, now=self._now)
+        self.queues = self.kernel.queues
+        self.aq = self.queues.aq        # per-core deques of _Assigned
         self.slowdown = dict(slowdown or {})
         self.idle_sleep = idle_sleep
+        self.preemption = preemption
         n = self.topo.n_cores
-        self.wsq: list[deque[Task]] = [deque() for _ in range(n)]
-        self.aq: list[deque[_Assigned]] = [deque() for _ in range(n)]
         self.lock = threading.Lock()
         self.work_cv = threading.Condition(self.lock)
         self.outstanding = 0
-        self.t0 = 0.0
+        self.t0: Optional[float] = None
         self.metrics = RunMetrics(n_cores=n)
         self.stop = False
+        self._accepting = False         # True between start() and drain()
+        self._started = False
+        self._threads: list[threading.Thread] = []
+        self._timer: Optional[threading.Thread] = None
+        self._core_up = [True] * n
+        self._down_parts: set[int] = set()
+        self._ckpt = (preemption is not None
+                      and preemption.preempt == "checkpoint")
+        self.preempt_events = 0
+        self.tasks_preempted = 0
+        self.work_lost = 0.0
+
+    def _now(self) -> float:
+        return 0.0 if self.t0 is None else time.perf_counter() - self.t0
 
     # -- submission -----------------------------------------------------------
     def _wake(self, task: Task, waker_core: int) -> None:
-        task.t_ready = time.perf_counter() - self.t0
-        target = self.sched.place_on_wake(task, waker_core)
         with self.work_cv:
-            self.wsq[waker_core if target is None else target].append(task)
-            self.outstanding += 1
+            self._wake_locked(task, waker_core)
             self.work_cv.notify_all()
 
+    def _wake_locked(self, task: Task, waker_core: int) -> None:
+        core = self.kernel.wake(task, waker_core)
+        if not self._core_up[core]:
+            # a leader committing its grace-window payload on a revoked
+            # partition wakes dependents — they must land on a live core
+            live = self.kernel.live_cores()
+            rng = self.sched.rng
+            core = live[rng.randrange(len(live))] if len(live) > 1 else live[0]
+        self.queues.push(task, core)
+        self.outstanding += 1
+
     def submit(self, dag: DAG) -> None:
-        self.t0 = time.perf_counter()
+        if self.t0 is None:
+            self.t0 = time.perf_counter()
         for root in dag.roots:
             self._wake(root, waker_core=0)
 
     # -- worker ---------------------------------------------------------------
     def _pull(self, core: int) -> Optional[_Assigned]:
         with self.lock:
-            # 1. own AQ head
+            # 1. own AQ head (down cores still finish work already placed
+            #    on them — the grace window)
             if self.aq[core]:
-                return self.aq[core][0]
-            # 2. own WSQ (LIFO)
-            if self.wsq[core]:
-                task = self.wsq[core].pop()
-                return self._assign(task, core)
-            # 3. steal (most-loaded victim, FIFO end, re-search place)
-            victims = sorted(range(self.topo.n_cores),
-                             key=lambda v: -len(self.wsq[v]))
-            for v in victims:
-                if v == core:
-                    continue
-                for i, t in enumerate(self.wsq[v]):
-                    if self.sched.may_steal(t):
-                        del self.wsq[v][i]
-                        t.bound_place = None
-                        return self._assign(t, core)
-        return None
+                rec = self.aq[core][0]
+                rec.started = True
+                return rec
+            if not self._core_up[core]:
+                return None
+            # 2. own WSQ: oldest HIGH first under priority dequeue, else
+            #    newest LOW (plain work-stealing LIFO)
+            task = self.queues.pop_local(core)
+            if task is None:
+                # 3. steal: most-loaded victim, seeded tie-break, FIFO end,
+                #    re-run of the place search at the thief
+                victim = self.queues.pick_victim(core, self.sched.rng)
+                if victim < 0:
+                    return None
+                task = self.queues.steal_pop(victim)
+                self.kernel.on_steal(task)
+            return self._assign(task, core)
 
-    def _assign(self, task: Task, core: int) -> Optional[_Assigned]:
+    def _assign(self, task: Task, core: int) -> _Assigned:
         # caller holds self.lock
-        place = self.sched.place_on_dequeue(task, core)
+        place = self.kernel.choose_place(task, core)
         rec = _Assigned(task, place)
         for c in place.cores:
             self.aq[c].append(rec)
         self.work_cv.notify_all()
-        return self.aq[core][0]
+        head = self.aq[core][0]
+        head.started = True
+        return head
 
     def _execute(self, rec: _Assigned, core: int) -> None:
         is_leader = core == rec.place.leader
-        rid = rec.barrier.wait()        # all members rendezvous
+        rec.barrier.wait()        # all members rendezvous
         if is_leader:
-            t_start = time.perf_counter() - self.t0
+            t_start = self._now()
             rec.task.t_start = t_start
+            ret = None
             if rec.task.payload is not None:
-                rec.task.payload(rec.place.width)
+                rec.task.revoke_signal = rec.revoked
+                try:
+                    ret = rec.task.payload(rec.place.width)
+                finally:
+                    rec.task.revoke_signal = None
             factor = max((self.slowdown.get(c, 1.0) for c in rec.place.cores),
                          default=1.0)
             if factor > 1.0:
-                dur = (time.perf_counter() - self.t0) - t_start
+                dur = self._now() - t_start
                 time.sleep(dur * (factor - 1.0))
+            rec.partial = self._partial_fraction(rec, ret)
             rec.done.set()
         else:
             rec.done.wait()
         rec.barrier.wait()
         if is_leader:
-            self._commit(rec)
+            if rec.partial is None:
+                self._commit(rec)
+            else:
+                self._requeue_preempted(rec)
+
+    @staticmethod
+    def _partial_fraction(rec: _Assigned, ret) -> Optional[float]:
+        """A cooperative payload answering a revocation signal returns the
+        fraction of its *outstanding* work it completed (float in [0, 1));
+        anything else — including payloads that never look at the signal —
+        means the task ran to completion."""
+        if (rec.revoked.is_set() and isinstance(ret, float)
+                and 0.0 <= ret < 1.0):
+            return ret
+        return None
+
+    def _requeue_preempted(self, rec: _Assigned) -> None:
+        """A checkpointed (or killed-and-restarted) payload: account its
+        progress and hand the task back to the scheduler over the live
+        view.  ``outstanding`` is untouched — the task is still pending."""
+        task = rec.task
+        dur = self._now() - task.t_start
+        with self.work_cv:
+            for c in rec.place.cores:
+                try:
+                    self.aq[c].remove(rec)
+                except ValueError:
+                    pass
+            if self._ckpt:
+                # completed fraction of this attempt carries over; the
+                # payload reads task.resume_frac on its next execution.
+                # The resume penalty folds in here as extra outstanding
+                # work, mirroring the DES charging full*(resume_frac +
+                # penalty) at the next start (a near-zero-progress
+                # checkpoint costs slightly more than its remainder, in
+                # both engines).
+                penalty = (self.preemption.resume_penalty
+                           if self.preemption is not None else 0.0)
+                task.resume_frac = (task.resume_frac * (1.0 - rec.partial)
+                                    + penalty)
+            else:
+                self.work_lost += dur
+            task.preempt_count += 1
+            self.tasks_preempted += 1
+            self.queues.push(task, self.kernel.requeue_displaced(task))
+            self.work_cv.notify_all()
 
     def _commit(self, rec: _Assigned) -> None:
         task = rec.task
-        task.t_end = time.perf_counter() - self.t0
+        task.t_end = self._now()
         task.place = rec.place
         observed = task.t_end - task.t_start
-        self.sched.ptt.for_type(task.type.name).update(rec.place, observed)
+        self.kernel.ptt_feedback(task, rec.place, observed)
         with self.lock:
             for c in rec.place.cores:
                 # remove this record from each member AQ (it is at/near head)
@@ -142,16 +275,8 @@ class ThreadedRuntime:
                 type_name=task.type.name, priority=int(task.priority),
                 leader=rec.place.leader, width=rec.place.width,
                 t_ready=task.t_ready, t_start=task.t_start, t_end=task.t_end))
-        for child in task.children:
-            with self.lock:
-                child.n_deps -= 1
-                ready = child.n_deps == 0
-            if ready:
-                self._wake(child, rec.place.leader)
-        new_tasks = task.on_commit(task) if task.on_commit else []
-        for nt in new_tasks:
-            if nt.n_deps == 0:
-                self._wake(nt, rec.place.leader)
+        for ready in self.kernel.commit_successors(task, lock=self.lock):
+            self._wake(ready, rec.place.leader)
         with self.work_cv:
             self.outstanding -= 1
             self.work_cv.notify_all()
@@ -164,34 +289,134 @@ class ThreadedRuntime:
             rec = self._pull(core)
             if rec is None:
                 with self.work_cv:
-                    if self.stop or self.outstanding == 0:
+                    if self.stop or (self.outstanding == 0
+                                     and not self._accepting):
                         return
                     self.work_cv.wait(timeout=self.idle_sleep)
                 continue
             if not rec.done.is_set() or core == rec.place.leader:
                 self._execute(rec, core)
 
+    # -- wall-clock preemption ------------------------------------------------
+    def _preemption_driver(self) -> None:
+        """Timer thread: fire revoke/restore edges at their wall-clock
+        offsets from run start (restores sort before revokes at equal
+        times, like the DES event queue)."""
+        edges = sorted(
+            [(t0, 1, pidx) for pidx, t0, _ in self.preemption.episodes]
+            + [(t1, 0, pidx) for pidx, _, t1 in self.preemption.episodes])
+        for t, is_revoke, pidx in edges:
+            while not self.stop:
+                dt = t - self._now()
+                if dt <= 0:
+                    break
+                time.sleep(min(dt, 0.01))
+            if self.stop:
+                return
+            with self.work_cv:
+                if is_revoke:
+                    self._revoke_locked(pidx)
+                else:
+                    self._restore_locked(pidx)
+                self.work_cv.notify_all()
+
+    def _revoke_locked(self, pidx: int) -> None:
+        part = self.topo.partitions[pidx]
+        self._down_parts.add(pidx)
+        self.sched.live = self.topo.live_view(frozenset(self._down_parts))
+        for c in part.cores:
+            self._core_up[c] = False
+        self.preempt_events += 1
+        displaced: list[Task] = []
+        # placed-but-unstarted assignments lose their place (no member has
+        # entered the barrier, so cancelling cannot strand anyone); started
+        # ones get the cooperative revocation signal and their grace window
+        seen: set[int] = set()
+        for c in part.cores:
+            for rec in self.aq[c]:
+                if rec.started:
+                    rec.revoked.set()
+                elif not rec.cancelled:
+                    rec.cancelled = True
+                    if rec.task.tid not in seen:
+                        seen.add(rec.task.tid)
+                        displaced.append(rec.task)
+            kept = [r for r in self.aq[c] if not r.cancelled]
+            self.aq[c].clear()
+            self.aq[c].extend(kept)
+        # ready tasks drain in steal order; HIGH tasks re-place first
+        displaced.extend(self.queues.drain_wsq(part.cores))
+        high, low = split_by_priority(displaced)
+        for task in high:
+            self.queues.push(task, self.kernel.requeue_displaced(task))
+        for task in low:
+            self.queues.push(task, self.kernel.requeue_displaced(task))
+
+    def _restore_locked(self, pidx: int) -> None:
+        self._down_parts.discard(pidx)
+        self.sched.live = (None if not self._down_parts else
+                           self.topo.live_view(frozenset(self._down_parts)))
+        for c in self.topo.partitions[pidx].cores:
+            self._core_up[c] = True
+
     # -- run ------------------------------------------------------------------
-    def run(self, timeout: float = 120.0) -> RunMetrics:
-        threads = [threading.Thread(target=self._worker, args=(c,), daemon=True)
-                   for c in range(self.topo.n_cores)]
-        for th in threads:
+    def _launch(self) -> None:
+        if self._started:
+            return
+        self._started = True
+        if self.t0 is None:
+            self.t0 = time.perf_counter()
+        self._threads = [
+            threading.Thread(target=self._worker, args=(c,), daemon=True)
+            for c in range(self.topo.n_cores)]
+        for th in self._threads:
             th.start()
+        if self.preemption is not None and self.preemption.episodes:
+            self._timer = threading.Thread(target=self._preemption_driver,
+                                           daemon=True)
+            self._timer.start()
+
+    def start(self) -> None:
+        """Open-loop mode: launch workers now and keep accepting
+        submissions until :meth:`drain`."""
+        self._accepting = True
+        self._launch()
+
+    def drain(self, timeout: float = 120.0) -> RunMetrics:
+        """Stop accepting work, wait for the queues to empty (or the
+        deadline), shut the workers down and return the metrics."""
         deadline = time.monotonic() + timeout
         with self.work_cv:
+            self._accepting = False
+            self.work_cv.notify_all()
             while self.outstanding > 0 and time.monotonic() < deadline:
                 self.work_cv.wait(timeout=0.05)
             self.stop = True
             self.work_cv.notify_all()
-        for th in threads:
+        for th in self._threads:
             th.join(timeout=5.0)
-        self.metrics.finish(time.perf_counter() - self.t0)
+        if self._timer is not None:
+            # a revoke edge racing the end of the run must land (or bail
+            # on stop) *before* end_run clears the availability mask —
+            # otherwise it would re-poison sched.live for a later run
+            self._timer.join(timeout=5.0)
+        self.kernel.end_run()
+        self.metrics.finish(self._now())
+        self.metrics.preempt_events = self.preempt_events
+        self.metrics.tasks_preempted = self.tasks_preempted
+        self.metrics.work_lost_s = self.work_lost
         return self.metrics
+
+    def run(self, timeout: float = 120.0) -> RunMetrics:
+        """Batch mode: run everything already submitted to completion."""
+        self._launch()
+        return self.drain(timeout=timeout)
 
 
 def run_threaded(dag: DAG, scheduler: Scheduler, *,
                  slowdown: Optional[dict[int, float]] = None,
+                 preemption: Optional[PreemptionModel] = None,
                  timeout: float = 120.0) -> RunMetrics:
-    rt = ThreadedRuntime(scheduler, slowdown=slowdown)
+    rt = ThreadedRuntime(scheduler, slowdown=slowdown, preemption=preemption)
     rt.submit(dag)
     return rt.run(timeout=timeout)

@@ -88,6 +88,17 @@ class Scheduler:
     def search_rng(self) -> random.Random:
         return self.tiebreak_rng if self.tiebreak_rng is not None else self.rng
 
+    def begin_run(self) -> None:
+        """Reset per-run scheduling state.  PTT contents deliberately
+        persist across runs (they are the online model); the FA/FAM-C
+        round-robin cursor must not — a reused scheduler otherwise starts
+        round-robin where the previous run left off, making back-to-back
+        runs irreproducible.  ``live`` is left alone here: a mask applied
+        *before* the run (PodMonitor.apply_to) must survive engine
+        construction; engines clear it at end-of-run instead (see
+        ``SchedulingKernel.end_run``)."""
+        self._fa_rr = 0
+
     def _force_revisit(self) -> bool:
         return (self.revisit_rng is not None
                 and self.revisit_rng.random() < self.revisit_eps)

@@ -21,6 +21,18 @@ start/finish, speed breakpoint, background episode edge) re-derives each
 
 and re-schedules versioned completion events.  All randomness is seeded.
 
+One scheduling kernel, two engines
+----------------------------------
+Queue structure and lifecycle decisions live in the engine-agnostic
+kernel shared with the threaded runtime: split HIGH-FIFO/LOW-LIFO WSQs,
+assembly queues, priority-aware dequeue, O(cores) steal-victim selection
+with seeded tie-breaks (``core/queues.py``), and the wake → place →
+dequeue/steal-with-re-search → commit → PTT-feedback state machine
+(``core/lifecycle.py``, parameterized over this simulator's virtual
+clock).  This module is the *discrete-event driver* over that kernel:
+everything below is about integrating task progress through
+piecewise-constant rates as fast as possible.
+
 Incremental-dispatch architecture (the hot path)
 ------------------------------------------------
 The original engine re-ran a shuffled fixpoint over *all* cores after every
@@ -28,10 +40,11 @@ event and re-scanned whole queues per decision; the machinery below keeps
 scheduler-visible behavior but does O(changed state) work per event:
 
 * **Split WSQs** — each core's WSQ is a HIGH-FIFO + LOW-LIFO deque pair
-  (``_WSQ``).  Priority dequeue ("serve the oldest HIGH first, newest LOW
-  otherwise") and steal ("oldest stealable first") become O(1) pops instead
-  of O(queue) scans.  Priority-oblivious schedulers (RWS family) route all
-  tasks through the LOW deque, preserving their plain mixed-LIFO order.
+  (``queues.SplitWSQ``).  Priority dequeue ("serve the oldest HIGH first,
+  newest LOW otherwise") and steal ("oldest stealable first") become O(1)
+  pops instead of O(queue) scans.  Priority-oblivious schedulers (RWS
+  family) route all tasks through the LOW deque, preserving their plain
+  mixed-LIFO order.
 * **O(cores) victim selection** — the steal heuristic "victim with the most
   stealable tasks, random tie-break" reads per-queue lengths instead of
   counting matching tasks per victim (the seed engine's dominant cost:
@@ -111,11 +124,12 @@ import numpy as np
 
 from .dag import DAG
 from .interference import BackgroundApp, SpeedProfile, SpeedProfileBase
+from .lifecycle import SchedulingKernel, split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
 from .preemption import PreemptionModel
 from .schedulers import Scheduler
-from .task import PARTITION_BW, Priority, Task
+from .task import PARTITION_BW, Task
 
 _EPS = 1e-12
 _NO_DEMAND = (0.0, 0)
@@ -150,22 +164,6 @@ class _Running:
         self.bwkey = bwkey          # interned (domain, cap, mem_s) id; -1 = bw-insensitive
 
 
-class _WSQ:
-    """Split work-stealing queue: HIGH tasks in FIFO order (oldest HIGH
-    gates the DAG and is served first), LOW tasks as a LIFO deque for owner
-    locality whose FIFO end feeds thieves.  Schedulers without priority
-    dequeue push everything through ``low``, i.e. one plain LIFO deque."""
-
-    __slots__ = ("high", "low")
-
-    def __init__(self):
-        self.high: deque[Task] = deque()
-        self.low: deque[Task] = deque()
-
-    def __len__(self) -> int:
-        return len(self.high) + len(self.low)
-
-
 class Simulator:
     def __init__(self, scheduler: Scheduler, *,
                  speed: Optional[SpeedProfileBase] = None,
@@ -181,8 +179,12 @@ class Simulator:
         self.horizon = horizon
 
         n = self.topo.n_cores
-        self.wsq: list[_WSQ] = [_WSQ() for _ in range(n)]
-        self.aq: list[deque[_Running]] = [deque() for _ in range(n)]
+        # the engine-agnostic scheduling kernel: split WSQs + AQs, steal
+        # policy, wake/requeue placement, PTT feedback — shared with the
+        # threaded runtime (see core/lifecycle.py)
+        self.kernel = SchedulingKernel(scheduler, now=lambda: self.now)
+        self.queues = self.kernel.queues
+        self.aq: list[deque[_Running]] = self.queues.aq
         self.core_busy: list[Optional[_Running]] = [None] * n
         self.running: dict[int, _Running] = {}
         self.now = 0.0
@@ -191,17 +193,6 @@ class Simulator:
         self._done = 0
         self._outstanding = 0
         self.metrics = RunMetrics(n_cores=n)
-
-        # scheduler-policy flags (hot-path locals).  HIGH tasks are routed
-        # to the split HIGH deque unless the scheduler is fully priority-
-        # oblivious (no priority dequeue AND HIGH stealable — the RWS
-        # family), where a single mixed-LIFO deque preserves its ordering.
-        # This keeps `_stealable_count`/steal-pop consistent with
-        # ``Scheduler.may_steal`` for *any* flag combination, not just the
-        # seven canonical configs.
-        self._steal_high = scheduler.steal_high
-        self._priority_dequeue = scheduler.priority_dequeue
-        self._route_high = scheduler.priority_dequeue or not scheduler.steal_high
 
         # incremental-dispatch state: every core starts on the worklist (the
         # first round parks workless cores in the starving set, after which
@@ -235,7 +226,6 @@ class Simulator:
         # preemptible-capacity state (inert without a PreemptionModel)
         self._core_up = [True] * n
         self._down_parts: set[int] = set()
-        self._live_cores: tuple[int, ...] = tuple(range(n))
         self._ckpt = (preemption is not None
                       and preemption.preempt == "checkpoint")
         self._resume_penalty = (preemption.resume_penalty
@@ -450,36 +440,21 @@ class Simulator:
     def _enqueue(self, task: Task, core: int):
         """Push a ready task onto ``core``'s WSQ (shared by first wakes and
         preemption requeues — the outstanding count moves only on wake)."""
-        q = self.wsq[core]
-        if self._route_high and task.priority == Priority.HIGH:
-            q.high.append(task)
-        else:
-            q.low.append(task)
+        self.queues.push(task, core)
         self._mark(core)
         # new stealable work re-opens the starving cores' steal loop
-        if self._starving and (self._steal_high
-                               or task.priority != Priority.HIGH):
+        if self._starving and self.queues.stealable(task):
             self._dirty |= self._starving
             self._starving.clear()
 
     def _wake(self, task: Task, waker_core: int):
-        task.t_ready = self.now
-        target = self.sched.place_on_wake(task, waker_core)
         self._outstanding += 1
-        self._enqueue(task, waker_core if target is None else target)
+        self._enqueue(task, self.kernel.wake(task, waker_core))
 
     def _requeue(self, task: Task):
-        """Hand a displaced task back to the scheduler: the old binding is
-        void (its partition may be down), the wake-time decision is redone
-        over the surviving places, and priority-oblivious paths get a
-        uniformly random live waker core (one seeded draw per task, so the
-        sequence is scheduler-independent)."""
-        task.t_ready = self.now
-        task.bound_place = None
-        live = self._live_cores
-        waker = live[self.rng.randrange(len(live))] if len(live) > 1 else live[0]
-        target = self.sched.place_on_wake(task, waker)
-        self._enqueue(task, waker if target is None else target)
+        """Hand a displaced task back to the scheduler (see
+        :meth:`SchedulingKernel.requeue_displaced`)."""
+        self._enqueue(task, self.kernel.requeue_displaced(task))
 
     def submit(self, dag: DAG):
         for root in dag.roots:
@@ -487,15 +462,13 @@ class Simulator:
 
     # ------------------------------------------------------------ preemption
     def _set_availability(self):
-        """Refresh the scheduler's live view + the live-core list after a
-        revoke/restore edge (views are interned on the topology)."""
+        """Refresh the scheduler's live view after a revoke/restore edge
+        (views are interned on the topology; the kernel's requeue path
+        reads live cores straight off the view)."""
         if not self._down_parts:
             self.sched.live = None
-            self._live_cores = tuple(range(self.topo.n_cores))
         else:
-            view = self.topo.live_view(frozenset(self._down_parts))
-            self.sched.live = view
-            self._live_cores = view.cores
+            self.sched.live = self.topo.live_view(frozenset(self._down_parts))
 
     def _preempt_running(self, rec: _Running):
         """Cut one running task short: release cores, bandwidth demand and
@@ -533,12 +506,7 @@ class Simulator:
         self._down_parts.add(pidx)
         self.preempt_events += 1
         self._set_availability()
-        high: list[Task] = []
-        low: list[Task] = []
-
-        def take(task: Task):
-            (high if task.priority == Priority.HIGH else low).append(task)
-
+        displaced: list[Task] = []
         # 1) running tasks (a place never spans partitions, so every member
         #    core of an affected task lies in ``part``; dedup via core scan)
         seen: set[int] = set()
@@ -547,7 +515,7 @@ class Simulator:
             if rec is not None and rec.task.tid not in seen:
                 seen.add(rec.task.tid)
                 self._preempt_running(rec)
-                take(rec.task)
+                displaced.append(rec.task)
         # 2) placed-but-unstarted tasks in the partition's AQs (their place
         #    dies with the partition; no progress to account)
         seen.clear()
@@ -555,18 +523,11 @@ class Simulator:
             for rec in self.aq[c]:
                 if rec.task.tid not in seen:
                     seen.add(rec.task.tid)
-                    take(rec.task)
+                    displaced.append(rec.task)
             self.aq[c].clear()
-        # 3) ready tasks in the partition's WSQs (oldest HIGH first, then
-        #    the LOW deque oldest-first — steal order)
-        for c in part.cores:
-            q = self.wsq[c]
-            for task in q.high:
-                take(task)
-            for task in q.low:
-                take(task)
-            q.high.clear()
-            q.low.clear()
+        # 3) ready tasks in the partition's WSQs, in steal order
+        displaced.extend(self.queues.drain_wsq(part.cores))
+        high, low = split_by_priority(displaced)
         # down cores leave the dispatch sets until restored
         for c in part.cores:
             self._core_up[c] = False
@@ -589,22 +550,11 @@ class Simulator:
             self._mark(c)
 
     # -------------------------------------------------------------- dispatch
-    def _stealable_count(self, core: int) -> int:
-        q = self.wsq[core]
-        return len(q.low) + len(q.high) if self._steal_high else len(q.low)
-
     def _try_assign_from_wsq(self, core: int) -> bool:
-        """Pop own WSQ and place the task into AQs.  HIGH tasks are served
-        first (oldest HIGH — they gate the DAG); LOW tasks pop LIFO for
-        locality, as in a classic work-stealing deque."""
-        q = self.wsq[core]
-        if self._priority_dequeue and q.high:
-            task = q.high.popleft()      # oldest HIGH first
-        elif q.low:
-            task = q.low.pop()           # newest (plain LIFO deque)
-        elif q.high:                     # non-priority dequeue, only HIGHs left
-            task = q.high.popleft()
-        else:
+        """Pop own WSQ (priority-aware, see ``WorkQueues.pop_local``) and
+        place the task into AQs."""
+        task = self.queues.pop_local(core)
+        if task is None:
             return False
         self._place_into_aqs(task, core)
         return True
@@ -614,29 +564,16 @@ class Simulator:
         FIFO end; re-run the place search at the thief (steps 4-5).  Victim
         selection reads O(cores) queue lengths; maxima tie-break uniformly
         at random, as the shuffled scan did."""
-        best_n = 0
-        best: list[int] = []
-        for v in range(self.topo.n_cores):
-            if v == thief:
-                continue
-            n = self._stealable_count(v)
-            if n > best_n:
-                best_n = n
-                best = [v]
-            elif n and n == best_n:
-                best.append(v)
-        if not best:
+        victim = self.queues.pick_victim(thief, self.rng)
+        if victim < 0:
             return False
-        victim = best[0] if len(best) == 1 else \
-            best[self.rng.randrange(len(best))]
-        q = self.wsq[victim]
-        t = q.low.popleft() if q.low else q.high.popleft()  # oldest stealable
-        t.bound_place = None              # stolen -> decision redone
+        t = self.queues.steal_pop(victim)     # oldest stealable
+        self.kernel.on_steal(t)               # stolen -> decision redone
         self._place_into_aqs(t, thief)
         return True
 
     def _place_into_aqs(self, task: Task, worker_core: int):
-        place = self.sched.place_on_dequeue(task, worker_core)
+        place = self.kernel.choose_place(task, worker_core)
         part = self.topo.partition_of(place.leader)
         cap = PARTITION_BW[part.kind]
         mem_s = task.type.mem_sensitivity
@@ -700,6 +637,7 @@ class Simulator:
         dirty = self._dirty
         busy = self.core_busy
         aq = self.aq
+        wsq = self.queues.wsq
         up = self._core_up
         while dirty:
             batch = sorted(dirty, reverse=True)
@@ -721,7 +659,7 @@ class Simulator:
                 self.rng.shuffle(batch)
             for c in batch:
                 if busy[c] is not None or not up[c] or aq[c] \
-                        or len(self.wsq[c]):
+                        or len(wsq[c]):
                     continue
                 if not self._try_steal(c):
                     self._starving.add(c)
@@ -747,12 +685,9 @@ class Simulator:
 
         # Leader measures and updates the PTT (with measurement noise +
         # heavy-tailed spikes from OS jitter on short tasks).
-        duration = task.t_end - task.t_start
-        noise = self.rng.gauss(1.0, task.type.noise) if task.type.noise else 1.0
-        observed = duration * min(max(noise, 0.5), 2.0)
-        if task.type.spike_prob and self.rng.random() < task.type.spike_prob:
-            observed *= task.type.spike_mag
-        self.sched.ptt.for_type(task.type.name).update(rec.place, observed)
+        observed = self.kernel.observe_simulated(task.type,
+                                                task.t_end - task.t_start)
+        self.kernel.ptt_feedback(task, rec.place, observed)
 
         self.metrics.record(TaskRecord(
             type_name=task.type.name, priority=int(task.priority),
@@ -761,14 +696,8 @@ class Simulator:
 
         # Wake dependents; dynamic DAG growth.
         leader = rec.place.leader
-        for child in task.children:
-            child.n_deps -= 1
-            if child.n_deps == 0:
-                self._wake(child, leader)
-        if task.on_commit is not None:
-            for new_task in task.on_commit(task):
-                if new_task.n_deps == 0:
-                    self._wake(new_task, leader)
+        for ready in self.kernel.commit_successors(task):
+            self._wake(ready, leader)
 
     # ------------------------------------------------------------------ run
     def run(self) -> RunMetrics:
@@ -836,7 +765,7 @@ class Simulator:
         # a run that finishes mid-outage must not leak its availability
         # mask into later runs reusing the scheduler (PTT state is meant
         # to carry across runs; a revoked-capacity view is not)
-        self.sched.live = None
+        self.kernel.end_run()
         self.metrics.finish(self.now)
         self.metrics.preempt_events = self.preempt_events
         self.metrics.tasks_preempted = self.tasks_preempted

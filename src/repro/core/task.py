@@ -113,6 +113,14 @@ class Task:
     # how many times this task has been preempted.
     resume_frac: float = 1.0
     preempt_count: int = 0
+    # Threaded-engine revocation signal: while the task executes, this is
+    # the current execution's ``threading.Event``; it is set when the
+    # task's partition is revoked mid-run.  A *cooperative* payload may
+    # poll it and checkpoint by returning the fraction of its outstanding
+    # work completed (see core/runtime.py); payloads that ignore it run
+    # to completion in the grace window.  None outside execution (and
+    # always None in the DES, which preempts running tasks directly).
+    revoke_signal: Optional[object] = None
 
     def add_child(self, child: "Task") -> "Task":
         self.children.append(child)

@@ -41,7 +41,7 @@ from ..models import init_decode_state, init_params
 from ..optim import AdamWConfig, init_opt_state
 from ..parallel import (batch_specs, decode_state_specs, opt_moment_specs,
                         param_specs, to_named)
-from ..train import make_decode_step, make_prefill_step, make_train_step
+from ..train import make_decode_step, make_prefill_step
 from .mesh import make_production_mesh
 
 # TPU v5e hardware constants (per chip)

@@ -10,7 +10,6 @@ monitor, and demonstrates restart-after-kill (--resume).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import tempfile
 
 from ..configs import ARCHS

@@ -19,15 +19,13 @@ Families:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..parallel.sharding import constrain, pin_stack_cotangent
+from ..parallel.sharding import constrain
 from .attention import (attention_block, attention_decode, init_attention,
                         init_kv_cache)
 from .layers import ffn, init_ffn, init_linear, rms_norm

@@ -17,14 +17,23 @@ Mitigations, in escalation order (cheapest first):
      the DP extent; the trainer restarts from checkpoint with the new mesh.
   3. restore  — a recovered pod (ratio back under ``restore_ratio``) is
      scheduled back in at the next checkpoint boundary.
+
+Built on the unified scheduling kernel's primitives (DESIGN.md §3):
+measurements flow through the same :func:`~..core.lifecycle.ptt_observe`
+feedback path as task commits in either execution engine, and a drained
+pod is expressed as the same interned :class:`~..core.places.LiveView`
+availability mask a revoked pod-slice produces — ``apply_to(scheduler)``
+hands it to a scheduler driving the DES or the threaded runtime.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-from ..core.places import Topology, tpu_pod_slices
+from ..core.lifecycle import ptt_observe
+from ..core.places import LiveView, Topology, tpu_pod_slices
 from ..core.ptt import PTTBank
+from ..core.schedulers import Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +70,9 @@ class PodMonitor:
         place = part.place_containing(part.start, self.slices_per_pod) \
             if self.slices_per_pod in part.widths else \
             part.place_containing(part.start, max(part.widths))
-        self.ptt.for_type(task_type).update(place, step_time)
+        # same PTT-feedback path (and therefore the same 1:4 hysteresis
+        # semantics) as a task commit in either execution engine
+        ptt_observe(self.ptt, task_type, place, step_time)
 
     def predicted(self, task_type: str = "train_step") -> list[float]:
         tbl = self.ptt.for_type(task_type)
@@ -71,6 +82,29 @@ class PodMonitor:
                 else max(p.widths)
             out.append(tbl.get(p.place_containing(p.start, w)))
         return out
+
+    # -- kernel bridge ----------------------------------------------------------
+    def live_view(self) -> Optional[LiveView]:
+        """The interned availability mask of the un-drained fleet — the
+        same :class:`LiveView` object the scheduling kernel's engines
+        consume for revoked capacity (None = every pod schedulable).
+        Draining a pod and revoking a pod-slice are one mechanism."""
+        if not self._drained:
+            return None
+        return self.topology.live_view(frozenset(self._drained))
+
+    def apply_to(self, scheduler: Scheduler) -> None:
+        """Point a scheduler driving either engine over this fleet at the
+        monitor's availability mask: drained pods leave every wake-time
+        placement search until restored.  The mask governs *placement*
+        (no HIGH task binds to a drained pod; LOW work may still be
+        stolen by its idle cores — taking cores out of execution outright
+        is the preemption subsystem's job).  Engines clear the mask when
+        their run ends (a revoked-capacity view must never leak into an
+        unrelated later run), so re-apply before each run."""
+        if scheduler.topology is not self.topology:
+            raise ValueError("scheduler does not run over this fleet")
+        scheduler.live = self.live_view()
 
     # -- planning ---------------------------------------------------------------
     def plan(self, task_type: str = "train_step") -> RescalePlan:

@@ -1,4 +1,4 @@
-"""Batched serving engine scheduled by the paper's technique.
+"""Serving engine scheduled by the paper's technique.
 
 Mapping (DESIGN.md §2): requests are a *dynamic DAG* — a prefill task
 (HIGH priority: it releases the request's entire decode chain, exactly
@@ -12,22 +12,37 @@ an interfered or throttled submesh is steered around within ~3 requests
 On this container, "submeshes" are CPU worker slots driven by the
 threaded runtime; on a real fleet each place maps to a pjit program
 compiled for that submesh shape (the compile cache keyed by place width).
-The scheduler logic is byte-identical in both cases — that is the point.
+The scheduler logic is byte-identical in both cases — both engines drive
+the same :class:`~..core.lifecycle.SchedulingKernel` (DESIGN.md §3); that
+is the point.
+
+Two submission modes:
+
+* **batch** — ``submit()`` everything, then ``run()`` (the original
+  closed-loop shape, still used by the smoke tests);
+* **open loop** — ``run_open_loop(prompts, rate_rps=...)`` starts the
+  runtime first and submits continuously with seeded Poisson
+  inter-arrival gaps, the serving-benchmark shape: queueing delay under
+  interference shows up in the TTFT tail instead of being hidden by
+  batch submission.  Per-request latency percentiles land in
+  ``RunMetrics.request_latency_stats()``.
 """
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
-from typing import Callable, Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import (Priority, Task, TaskType, ThreadedRuntime, Topology,
-                    make_scheduler)
+from ..core import (Priority, RequestRecord, Task, TaskType, ThreadedRuntime,
+                    Topology, make_scheduler)
 from ..core.dag import DAG
+from ..core.preemption import PreemptionModel
 from ..models import decode_step, init_params
 from ..models.transformer import prefill
 
@@ -56,12 +71,14 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, topology: Topology, *,
                  scheduler: str = "DAM-P", seed: int = 0,
                  max_len: int = 256,
-                 slowdown: Optional[dict[int, float]] = None):
+                 slowdown: Optional[dict[int, float]] = None,
+                 preemption: Optional[PreemptionModel] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self.sched = make_scheduler(scheduler, topology, seed=seed)
-        self.runtime = ThreadedRuntime(self.sched, slowdown=slowdown)
+        self.runtime = ThreadedRuntime(self.sched, slowdown=slowdown,
+                                       preemption=preemption)
         self._prefill = jax.jit(
             lambda p, t: prefill(p, cfg, t, max_len),
             static_argnames=())
@@ -75,7 +92,6 @@ class ServingEngine:
         logits, state = self._prefill(self.params, toks)
         nxt = int(jnp.argmax(logits[0]))
         req.out_tokens.append(nxt)
-        req.t_first_token = time.perf_counter()
         return state, nxt
 
     def _run_decode(self, req: Request, state, tok: int) -> tuple:
@@ -124,6 +140,9 @@ class ServingEngine:
                         payload=prefill_payload)
 
         def pre_commit(_task, _req=req):
+            # first token leaves the engine at prefill *commit* — after
+            # any injected slowdown, when a real client would see it
+            _req.t_first_token = time.perf_counter()
             if _req.max_new_tokens <= 1:
                 _req.t_done = time.perf_counter()
                 return []
@@ -134,18 +153,54 @@ class ServingEngine:
         return req
 
     def run(self, timeout: float = 120.0):
-        return self.runtime.run(timeout=timeout)
+        m = self.runtime.run(timeout=timeout)
+        self._finalize_requests()
+        return m
+
+    def run_open_loop(self, prompts: Sequence[np.ndarray], *,
+                      rate_rps: float, max_new_tokens: int = 8,
+                      arrival_seed: int = 0,
+                      timeout: float = 300.0):
+        """Open-loop serving: start the runtime, then submit one request
+        per prompt with Poisson inter-arrival gaps (seeded ``expovariate``
+        at ``rate_rps`` requests/s) while earlier requests execute.
+        Returns the :class:`RunMetrics` with per-request latency records
+        attached."""
+        arrivals = random.Random(f"serve-arrival:{arrival_seed}")
+        self.runtime.start()
+        for i, prompt in enumerate(prompts):
+            if i:
+                time.sleep(arrivals.expovariate(rate_rps))
+            self.submit(np.asarray(prompt), max_new_tokens=max_new_tokens)
+        m = self.runtime.drain(timeout=timeout)
+        self._finalize_requests()
+        return m
 
     # -- metrics ----------------------------------------------------------------
+    def _finalize_requests(self) -> None:
+        """Fold completed requests into the runtime metrics as
+        :class:`RequestRecord` rows (feeds p50/p95/p99 TTFT / e2e)."""
+        metrics = self.runtime.metrics
+        seen = {r.rid for r in metrics.request_records}
+        for r in self.requests.values():
+            if r.t_done > 0 and r.rid not in seen:
+                metrics.record_request(RequestRecord(
+                    rid=r.rid, t_submit=r.t_submit,
+                    t_first_token=r.t_first_token, t_done=r.t_done))
+
     def latency_stats(self) -> dict:
-        done = [r for r in self.requests.values() if r.t_done > 0]
-        if not done:
+        """Flat-key view over ``RunMetrics.request_latency_stats()`` (one
+        stat path — the engine only reshapes keys for the CLI callers)."""
+        self._finalize_requests()
+        stats = self.runtime.metrics.request_latency_stats()
+        if not stats:
             return {}
-        ttft = [r.t_first_token - r.t_submit for r in done]
-        e2e = [r.t_done - r.t_submit for r in done]
         return {
-            "completed": len(done),
-            "ttft_ms_mean": float(np.mean(ttft)) * 1e3,
-            "ttft_ms_p95": float(np.percentile(ttft, 95)) * 1e3,
-            "e2e_ms_mean": float(np.mean(e2e)) * 1e3,
+            "completed": stats["completed"],
+            "ttft_ms_mean": stats["ttft_ms"]["mean"],
+            "ttft_ms_p50": stats["ttft_ms"]["p50"],
+            "ttft_ms_p95": stats["ttft_ms"]["p95"],
+            "ttft_ms_p99": stats["ttft_ms"]["p99"],
+            "e2e_ms_mean": stats["e2e_ms"]["mean"],
+            "e2e_ms_p99": stats["e2e_ms"]["p99"],
         }

@@ -5,11 +5,9 @@ sharding decisions live in parallel/sharding.py, all math in models/.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models import decode_step as _decode_step

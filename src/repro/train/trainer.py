@@ -15,13 +15,12 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from ..checkpoint import Checkpointer
 from ..configs.base import ModelConfig
 from ..data import DataConfig, SyntheticStream
 from ..models import init_params
-from ..optim import (AdamWConfig, compress_int8, init_error_feedback,
+from ..optim import (AdamWConfig, init_error_feedback,
                      init_opt_state)
 from ..runtime import HeartbeatMonitor, PodMonitor, Supervisor
 from .train_step import make_train_step

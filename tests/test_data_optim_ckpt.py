@@ -1,7 +1,6 @@
 """Data pipeline, optimizer, compression and checkpoint substrates."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,7 +10,7 @@ from _ht import given, settings, st
 from repro.checkpoint import Checkpointer
 from repro.data import DataConfig, Prefetcher, SyntheticStream
 from repro.optim import (AdamWConfig, apply_updates, compress_int8,
-                         compress_topk, global_norm, init_error_feedback,
+                         compress_topk, init_error_feedback,
                          init_opt_state, schedule, wire_bytes)
 
 

@@ -1,6 +1,5 @@
 """Elastic runtime + fault tolerance: straggler detection, rescale plans,
 heartbeats, and exact checkpoint-restart resume."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -120,3 +119,49 @@ def test_trainer_detects_injected_straggler(tmp_path):
     t.run()
     kinds = [e.kind for e in t.supervisor.events]
     assert "rescale" in kinds
+
+
+def test_pod_monitor_live_view_bridges_to_scheduler():
+    """A drained pod is expressed as the same interned LiveView a revoked
+    pod-slice produces, and ``apply_to`` hands it to a scheduler driving
+    either engine."""
+    from repro.core import Priority, Task, make_scheduler, matmul_type
+
+    mon = PodMonitor(n_pods=4, slices_per_pod=4)
+    assert mon.live_view() is None
+    for _ in range(5):
+        for p in range(4):
+            mon.observe(p, 1.0)
+    for _ in range(10):
+        mon.observe(1, 5.0)
+    assert mon.plan().kind == "drain"
+    view = mon.live_view()
+    assert view is not None
+    assert view is mon.topology.live_view(frozenset({1}))   # interned
+    assert [p.name for p in view.partitions] == ["pod0", "pod2", "pod3"]
+
+    sched = make_scheduler("DAM-C", mon.topology, seed=0)
+    mon.apply_to(sched)
+    assert sched.live is view
+    down = set(mon.topology.partitions[1].cores)
+    for _ in range(10):
+        t = Task(matmul_type(512), priority=Priority.HIGH)
+        sched.place_on_wake(t, 0)
+        assert not set(t.bound_place.cores) & down
+
+    # the mask must survive engine construction (begin_run) and hold for
+    # a whole run: no HIGH (bound-placement) work lands on the drained
+    # pod.  LOW tasks may still be *stolen* by its idle cores — drain
+    # masks placement; removing cores outright is the preemption
+    # subsystem's job.
+    from repro.core import simulate, synthetic_dag
+    mon.apply_to(sched)
+    m = simulate(synthetic_dag(matmul_type(512), parallelism=8,
+                               total_tasks=200), sched)
+    assert m.n_tasks == 200
+    assert not any(r.leader in down for r in m.records if r.priority == 1)
+    assert sched.live is None          # engines clear the mask at run end
+
+    other = make_scheduler("DAM-C", PodMonitor(n_pods=2).topology, seed=0)
+    with pytest.raises(ValueError):
+        mon.apply_to(other)

@@ -1,0 +1,220 @@
+"""Unit tests for the engine-agnostic scheduling kernel (core/queues.py +
+core/lifecycle.py) — the structure both execution engines drive."""
+import random
+import threading
+
+import pytest
+
+from repro.core import (Priority, SchedulingKernel, SplitWSQ, Task, WorkQueues,
+                        make_scheduler, matmul_type, split_by_priority, tx2)
+
+
+def _task(prio=Priority.LOW):
+    return Task(matmul_type(64), priority=prio)
+
+
+# -- WorkQueues --------------------------------------------------------------
+
+def test_routing_priority_aware():
+    """Priority-dequeue schedulers route HIGH to the split HIGH FIFO."""
+    q = WorkQueues(2, priority_dequeue=True, steal_high=False)
+    assert q.route_high
+    h, low = _task(Priority.HIGH), _task()
+    q.push(h, 0)
+    q.push(low, 0)
+    assert list(q.wsq[0].high) == [h]
+    assert list(q.wsq[0].low) == [low]
+    # HIGH is not stealable and does not count as stealable
+    assert not q.stealable(h) and q.stealable(low)
+    assert q.stealable_count(0) == 1
+
+
+def test_routing_priority_oblivious():
+    """The RWS family (steal HIGH, no priority dequeue) keeps one mixed
+    LIFO deque so its ordering is exactly the classic work-stealing one."""
+    q = WorkQueues(2, priority_dequeue=False, steal_high=True)
+    assert not q.route_high
+    h, low = _task(Priority.HIGH), _task()
+    q.push(h, 0)
+    q.push(low, 0)
+    assert list(q.wsq[0].low) == [h, low]
+    assert q.stealable_count(0) == 2
+    assert q.pop_local(0) is low               # newest first (LIFO)
+    assert q.pop_local(0) is h
+    assert q.pop_local(0) is None
+
+
+def test_pop_local_priority_order():
+    q = WorkQueues(1, priority_dequeue=True, steal_high=False)
+    h1, h2, l1, l2 = (_task(Priority.HIGH), _task(Priority.HIGH),
+                      _task(), _task())
+    for t in (l1, h1, l2, h2):
+        q.push(t, 0)
+    # oldest HIGH first, then LOW LIFO (newest first)
+    assert [q.pop_local(0) for _ in range(4)] == [h1, h2, l2, l1]
+
+
+def test_steal_pop_oldest_stealable():
+    q = WorkQueues(2, priority_dequeue=True, steal_high=False)
+    l1, l2 = _task(), _task()
+    q.push(l1, 0)
+    q.push(l2, 0)
+    assert q.steal_pop(0) is l1                # FIFO end feeds thieves
+
+
+def test_pick_victim_max_and_seeded_tiebreak():
+    q = WorkQueues(4, priority_dequeue=True, steal_high=False)
+    q.push(_task(), 1)
+    q.push(_task(), 2)
+    q.push(_task(), 2)
+    assert q.pick_victim(0, random.Random(0)) == 2     # strictly most loaded
+    q.push(_task(), 1)
+    # 1 and 2 tie at 2 stealable: the pick is a seeded draw — deterministic
+    # for a given stream, covering both candidates across streams
+    picks = {q.pick_victim(0, random.Random(s)) for s in range(16)}
+    assert picks == {1, 2}
+    r1, r2 = random.Random(7), random.Random(7)
+    assert q.pick_victim(0, r1) == q.pick_victim(0, r2)
+    # HIGH tasks don't attract thieves when not stealable
+    q2 = WorkQueues(2, priority_dequeue=True, steal_high=False)
+    q2.push(_task(Priority.HIGH), 1)
+    assert q2.pick_victim(0, random.Random(0)) == -1
+
+
+def test_drain_wsq_steal_order():
+    q = WorkQueues(2, priority_dequeue=True, steal_high=False)
+    h1, h2, l1, l2 = (_task(Priority.HIGH), _task(Priority.HIGH),
+                      _task(), _task())
+    for t in (l1, h1, l2, h2):
+        q.push(t, 0)
+    q.push(_task(), 1)                         # other cores untouched
+    drained = q.drain_wsq([0])
+    assert drained == [h1, h2, l1, l2]         # HIGH FIFO, then LOW oldest
+    assert len(q.wsq[0]) == 0
+    assert len(q.wsq[1]) == 1
+
+
+def test_split_wsq_len():
+    w = SplitWSQ()
+    w.high.append(_task(Priority.HIGH))
+    w.low.append(_task())
+    assert len(w) == 2
+
+
+# -- SchedulingKernel --------------------------------------------------------
+
+def test_kernel_resets_run_state_on_construction():
+    sched = make_scheduler("FA", tx2(), seed=0)
+    sched.place_on_wake(_task(Priority.HIGH), 0)
+    assert sched._fa_rr == 1
+    view = object()
+    sched.live = view
+    SchedulingKernel(sched, now=lambda: 0.0)
+    assert sched._fa_rr == 0
+    # a pre-applied availability mask (PodMonitor.apply_to) must survive
+    # engine construction — only end_run clears it
+    assert sched.live is view
+
+
+def test_kernel_wake_stamps_and_routes():
+    now = [2.5]
+    sched = make_scheduler("DA", tx2(), seed=0)
+    kern = SchedulingKernel(sched, now=lambda: now[0])
+    low = _task()
+    assert kern.wake(low, waker_core=3) == 3   # LOW stays with the waker
+    assert low.t_ready == 2.5
+    high = _task(Priority.HIGH)
+    core = kern.wake(high, waker_core=3)
+    assert core == high.bound_place.leader
+
+
+def test_kernel_commit_successors_order_and_dynamic_growth():
+    sched = make_scheduler("RWS", tx2(), seed=0)
+    kern = SchedulingKernel(sched, now=lambda: 0.0)
+    parent, c1, c2 = _task(), _task(), _task()
+    parent.add_child(c1)
+    parent.add_child(c2)
+    other = _task()
+    other.add_child(c2)                        # c2 has a second parent
+    dyn = _task()
+    parent.on_commit = lambda t: [dyn]
+    assert list(kern.commit_successors(parent)) == [c1, dyn]
+    assert c2.n_deps == 1                      # not ready yet
+    assert list(kern.commit_successors(other)) == [c2]
+
+
+def test_kernel_commit_successors_locked_decrement():
+    """The threaded engine passes a lock guarding each n_deps decrement;
+    concurrent committers sharing a child must release it exactly once."""
+    sched = make_scheduler("RWS", tx2(), seed=0)
+    kern = SchedulingKernel(sched, now=lambda: 0.0)
+    child = _task()
+    parents = [_task() for _ in range(8)]
+    for p in parents:
+        p.add_child(child)
+    lock = threading.Lock()
+    ready = []
+    threads = [threading.Thread(
+        target=lambda p=p: ready.extend(kern.commit_successors(p, lock=lock)))
+        for p in parents]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert ready == [child]
+
+
+def test_kernel_requeue_uses_live_view():
+    from repro.core import tpu_pod_slices
+    topo = tpu_pod_slices(pods=2, slices_per_pod=4)
+    sched = make_scheduler("RWS", topo, seed=5)
+    kern = SchedulingKernel(sched, now=lambda: 1.0)
+    assert kern.live_cores() == tuple(range(8))
+    sched.live = topo.live_view(frozenset({0}))
+    assert kern.live_cores() == topo.partitions[1].cores
+    t = _task()
+    t.bound_place = object()
+    core = kern.requeue_displaced(t)
+    assert core in topo.partitions[1].cores
+    assert t.bound_place is None
+    assert t.t_ready == 1.0
+    kern.end_run()
+    assert sched.live is None
+
+
+def test_split_by_priority_stable():
+    h1, h2 = _task(Priority.HIGH), _task(Priority.HIGH)
+    l1, l2 = _task(), _task()
+    high, low = split_by_priority([l1, h1, l2, h2])
+    assert high == [h1, h2]
+    assert low == [l1, l2]
+
+
+def test_simulated_observation_matches_des_model():
+    """Noise draw sequence: gauss (clamped), then spike — and no draw at
+    all for noiseless types (the DES golden pins depend on this)."""
+    sched = make_scheduler("RWS", tx2(), seed=9)
+    kern = SchedulingKernel(sched, now=lambda: 0.0)
+    from repro.core import TaskType
+    silent = TaskType("silent", {"denver": 1.0, "a57": 1.0})
+    state = sched.rng.getstate()
+    assert kern.observe_simulated(silent, 2.0) == 2.0
+    assert sched.rng.getstate() == state       # no draws for noiseless types
+    noisy = matmul_type(64)
+    obs = kern.observe_simulated(noisy, 2.0)
+    assert 1.0 <= obs <= 2.0 * 2.0 * noisy.spike_mag
+    assert sched.rng.getstate() != state
+
+
+def test_observation_clamp():
+    """The multiplicative noise clamp [0.5, 2.0] bounds any observation."""
+    sched = make_scheduler("RWS", tx2(), seed=1)
+    kern = SchedulingKernel(sched, now=lambda: 0.0)
+    from repro.core import TaskType
+    tt = TaskType("wild", {"denver": 1.0, "a57": 1.0}, noise=50.0)
+    for _ in range(200):
+        assert 0.5 <= kern.observe_simulated(tt, 1.0) <= 2.0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -10,8 +10,7 @@ from repro.core import (ALL_SCHEDULERS, Priority, PreemptionModel,
                         mmpp_preemption, pod_slice_preemption,
                         prune_full_outages, simulate, stencil_type,
                         synthetic_dag, tpu_pod_slices, tx2)
-from repro.core.interference import (mmpp_on_off, mmpp_state_timeline,
-                                     renewal_on_off)
+from repro.core.interference import mmpp_on_off, mmpp_state_timeline
 
 from test_golden_schedule import GOLDEN, N_TASKS
 

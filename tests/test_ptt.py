@@ -1,5 +1,4 @@
 """PTT unit + property tests (paper §4.1.1)."""
-import numpy as np
 import pytest
 
 from _ht import given, settings, st

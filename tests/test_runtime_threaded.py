@@ -1,8 +1,14 @@
-"""Threaded (real-execution) runtime: completion + PTT learning."""
+"""Threaded (real-execution) runtime: completion, PTT learning, priority
+dequeue, seeded steal streams, and wall-clock preemption — the feature-
+parity surface of the unified scheduling kernel on the threaded driver."""
+import time
+
 import numpy as np
 
-from repro.core import (Priority, make_scheduler, matmul_type, run_threaded,
-                        synthetic_dag, tx2)
+from repro.core import (DAG, PreemptionModel, Priority, ResourcePartition,
+                        Task, TaskType, ThreadedRuntime, Topology,
+                        make_scheduler, matmul_type, run_threaded,
+                        synthetic_dag, tpu_pod_slices, tx2)
 
 
 def _payload_factory():
@@ -42,3 +48,182 @@ def test_ptt_learns_injected_slowdown():
     pp = m.priority_placement()
     on_c0 = sum(v for k, v in pp.items() if k.startswith("(C0"))
     assert on_c0 < 0.25            # HIGH tasks steered away from slow core
+
+
+# -- priority dequeue (regression: LOW pushed after HIGH used to run first) --
+
+def _solo_core():
+    return Topology([ResourcePartition("solo", "pod", 0, 1, (1,))])
+
+
+def _sleep_type():
+    return TaskType("tiny", {"pod": 1e-3})
+
+
+def test_pull_serves_high_before_low():
+    """With ``priority_dequeue`` set, a worker must serve the oldest HIGH
+    from its own queue even when a LOW task was pushed after it (the old
+    threaded ``_pull`` popped plain LIFO, so the LOW ran first)."""
+    order = []
+
+    def logger(name):
+        return lambda width: order.append(name)
+
+    tt = _sleep_type()
+    high = Task(tt, priority=Priority.HIGH, payload=logger("high"))
+    low = Task(tt, priority=Priority.LOW, payload=logger("low"))
+    sched = make_scheduler("DAM-C", _solo_core(), seed=0)
+    assert sched.priority_dequeue
+    m = run_threaded(DAG([high, low], 2), sched, timeout=30)
+    assert m.n_tasks == 2
+    assert order == ["high", "low"]
+
+
+def test_rws_family_keeps_lifo_order():
+    """RWS is priority-oblivious: the newest task pops first regardless of
+    priority (single mixed-LIFO deque semantics, as in the DES)."""
+    order = []
+
+    def logger(name):
+        return lambda width: order.append(name)
+
+    tt = _sleep_type()
+    high = Task(tt, priority=Priority.HIGH, payload=logger("high"))
+    low = Task(tt, priority=Priority.LOW, payload=logger("low"))
+    sched = make_scheduler("RWS", _solo_core(), seed=0)
+    m = run_threaded(DAG([high, low], 2), sched, timeout=30)
+    assert m.n_tasks == 2
+    assert order == ["low", "high"]
+
+
+# -- seeded decision streams ------------------------------------------------
+
+def test_threaded_uses_seeded_tiebreak_stream():
+    """``ptt_tiebreak="seeded"`` must give the threaded engine a dedicated
+    placement tie-break stream, decoupled from the steal-victim RNG."""
+    sched = make_scheduler("DAM-P", tx2(), seed=3, ptt_tiebreak="seeded",
+                           ptt_revisit=0.05)
+    rt = ThreadedRuntime(sched)
+    assert rt.sched.tiebreak_rng is not None
+    assert rt.sched.revisit_rng is not None
+    # the kernel's victim selection draws from the scheduler's main stream
+    rt.queues.push(Task(matmul_type(64)), 2)
+    rt.queues.push(Task(matmul_type(64)), 3)
+    before = sched.rng.getstate()
+    victim = rt.queues.pick_victim(0, sched.rng)
+    assert victim in (2, 3)
+    assert sched.rng.getstate() != before        # tie-break drew from it
+
+
+# -- wall-clock preemption ---------------------------------------------------
+
+def _sleep_dag(tt, n, parallelism, dur):
+    dag = synthetic_dag(tt, parallelism=parallelism, total_tasks=n)
+    for t in dag.all_tasks():
+        t.payload = lambda width, _d=dur: time.sleep(_d)
+    return dag
+
+
+def test_threaded_revocation_drains_and_completes():
+    """A mid-run pod revocation: everything still completes, and no task
+    *starts* on the revoked pod during the outage window (running payloads
+    get a grace window instead)."""
+    topo = tpu_pod_slices(pods=2, slices_per_pod=2)
+    tt = _sleep_type()
+    pre = PreemptionModel(((0, 0.06, 0.95),))
+    sched = make_scheduler("DAM-C", topo, seed=1)
+    dag = _sleep_dag(tt, 80, parallelism=4, dur=4e-3)
+    m = run_threaded(dag, sched, preemption=pre, timeout=60)
+    assert m.n_tasks == 80
+    assert m.preempt_events == 1
+    pod0 = set(topo.partitions[0].cores)
+    # margin for the timer thread's 10 ms firing granularity
+    started_in_outage = [r for r in m.records
+                         if r.leader in pod0 and 0.08 < r.t_start < 0.9]
+    assert not started_in_outage
+    # scheduler live view must not leak out of the run
+    assert sched.live is None
+
+
+def test_threaded_restore_reuses_pod():
+    topo = tpu_pod_slices(pods=2, slices_per_pod=2)
+    tt = _sleep_type()
+    pre = PreemptionModel(((0, 0.02, 0.1),))
+    sched = make_scheduler("RWS", topo, seed=2)
+    dag = _sleep_dag(tt, 120, parallelism=4, dur=4e-3)
+    m = run_threaded(dag, sched, preemption=pre, timeout=60)
+    assert m.n_tasks == 120
+    pod0 = set(topo.partitions[0].cores)
+    assert any(r.leader in pod0 and r.t_start > 0.12 for r in m.records)
+
+
+def _resumable_payload(task, slices, slice_s, log):
+    """Cooperative payload: polls ``task.revoke_signal``, checkpoints by
+    returning the completed fraction of its *outstanding* work, and honors
+    ``task.resume_frac`` on re-execution by skipping completed work."""
+
+    def payload(width, _t=task):
+        todo = max(1, round(slices * _t.resume_frac))
+        for i in range(todo):
+            time.sleep(slice_s)
+            log.append(1)
+            if (_t.revoke_signal is not None and _t.revoke_signal.is_set()
+                    and i + 1 < todo):
+                return (i + 1) / todo
+        return None
+
+    return payload
+
+
+def test_checkpoint_payload_resumes_from_fraction():
+    """Checkpoint semantics end-to-end on the threaded engine: a revoked
+    cooperative payload keeps its progress (``resume_frac`` shrinks) and
+    the re-execution does only the outstanding slice count, vs restart
+    which re-runs everything."""
+    executed = {}
+    for mode in ("checkpoint", "restart"):
+        topo = tpu_pod_slices(pods=2, slices_per_pod=1)
+        tt = _sleep_type()
+        log = []
+        task = Task(tt, priority=Priority.LOW)
+        task.payload = _resumable_payload(task, slices=10, slice_s=8e-3,
+                                          log=log)
+        # revoke pod0 (where RWS runs the root) mid-payload
+        pre = PreemptionModel(((0, 0.03, 1.0),), preempt=mode,
+                              resume_penalty=0.1)
+        sched = make_scheduler("RWS", topo, seed=1)
+        rt = ThreadedRuntime(sched, preemption=pre)
+        rt.submit(DAG([task], 1))
+        m = rt.run(timeout=30)
+        assert m.n_tasks == 1
+        assert m.tasks_preempted == 1
+        assert task.preempt_count == 1
+        executed[mode] = len(log)
+        if mode == "checkpoint":
+            # progress kept, plus the 0.1 resume penalty folded in as
+            # extra outstanding work (DES parity)
+            assert 0.1 < task.resume_frac < 1.0
+            assert m.work_lost_s == 0.0
+        else:
+            assert task.resume_frac == 1.0
+            assert m.work_lost_s > 0.0
+    # restart re-runs the full 10 slices after the partial attempt;
+    # checkpoint only the outstanding remainder
+    assert executed["restart"] > executed["checkpoint"]
+    assert executed["restart"] >= 10
+
+
+def test_open_loop_start_drain():
+    """start()/drain(): workers stay alive while submissions trickle in
+    (outstanding hits 0 between requests), batch totals still complete."""
+    topo = tx2()
+    tt = _sleep_type()
+    sched = make_scheduler("DAM-C", topo, seed=0)
+    rt = ThreadedRuntime(sched)
+    rt.start()
+    for _ in range(5):
+        dag = DAG([Task(tt, payload=lambda width: time.sleep(1e-3))], 1)
+        rt.submit(dag)
+        time.sleep(5e-3)        # long enough for outstanding to reach 0
+    m = rt.drain(timeout=30)
+    assert m.n_tasks == 5

@@ -48,3 +48,25 @@ def test_hlo_analysis_on_toy_program():
     want = 7 * 2 * 128 ** 3
     assert res["flops"] == pytest.approx(want, rel=1e-6)
     assert res["collective_bytes"]["total"] == 0
+
+
+def test_open_loop_poisson_arrival(engine_cfg):
+    """Open-loop serving: continuous submission while the runtime runs;
+    per-request latency percentiles land in RunMetrics."""
+    topo = tpu_pod_slices(2, 2)
+    eng = ServingEngine(engine_cfg, topo, scheduler="DAM-C", max_len=48)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, engine_cfg.vocab, 12) for _ in range(3)]
+    m = eng.run_open_loop(prompts, rate_rps=20.0, max_new_tokens=2,
+                          timeout=300)
+    assert m.n_tasks >= 3                       # prefill + decode tasks ran
+    stats = m.request_latency_stats()
+    assert stats["completed"] == 3
+    for key in ("ttft_ms", "e2e_ms"):
+        for p in ("mean", "p50", "p95", "p99"):
+            assert stats[key][p] > 0
+        assert stats[key]["p50"] <= stats[key]["p99"]
+    # engine-side stats agree on completion count and expose percentiles
+    es = eng.latency_stats()
+    assert es["completed"] == 3
+    assert es["ttft_ms_p50"] <= es["ttft_ms_p99"]

@@ -1,6 +1,5 @@
 """Discrete-event simulator: conservation, determinism, and the paper's
 headline interference results."""
-import pytest
 
 from repro.core import (ALL_SCHEDULERS, SpeedProfile, copy_type, corun_chain,
                         dvfs_denver, make_scheduler, matmul_type, simulate,

@@ -13,7 +13,7 @@ from repro.configs import ARCHS
 from repro.core import (ALL_SCHEDULERS, corun_chain, make_scheduler,
                         matmul_type, simulate, synthetic_dag, tx2)
 from repro.data import DataConfig
-from repro.models import decode_step, init_params
+from repro.models import decode_step
 from repro.models.transformer import prefill
 from repro.optim import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig

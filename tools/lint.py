@@ -1,0 +1,144 @@
+"""Minimal stdlib linter: syntax errors, unused imports, duplicate imports.
+
+`make lint` prefers ruff or pyflakes when one is installed; neither ships
+in this container (and the build bakes its dependencies), so this AST
+checker covers the failure mode refactors actually leave behind — dead
+imports — plus outright syntax errors, with no third-party dependency.
+
+Rules:
+  * every file must parse;
+  * an imported name must be referenced somewhere in the module — as a
+    load, an attribute root, a decorator, an annotation, or a string
+    entry of ``__all__``;
+  * the same name must not be imported twice *at module level*
+    (function-scoped lazy imports are their own scope and exempt).
+
+``__init__.py`` files without ``__all__`` are exempt from the unused
+check (bare re-export surface); ``from __future__ import ...`` is always
+exempt; lines carrying a ``noqa`` comment are skipped, as the usual
+linters would.
+
+Usage: python tools/lint.py [paths...]   (default: src benchmarks tests
+tools examples, relative to the repo root)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+DEFAULT_PATHS = ("src", "benchmarks", "tests", "tools", "examples")
+
+
+def _iter_py(paths):
+    for path in paths:
+        if os.path.isfile(path) and path.endswith(".py"):
+            yield path
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git", "artifacts")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+class _Imports(ast.NodeVisitor):
+    """Collect imported binding names and every referenced name."""
+
+    def __init__(self):
+        self.imports: list[tuple[str, int, bool]] = []  # (name, line, toplevel)
+        self.used: set[str] = set()
+        self.dunder_all: list[str] = []
+        self._depth = 0
+
+    def _scoped(self, node):
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_FunctionDef = visit_AsyncFunctionDef = visit_ClassDef = \
+        visit_Lambda = _scoped
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            name = alias.asname or alias.name.split(".")[0]
+            self.imports.append((name, node.lineno, self._depth == 0))
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "__future__":
+            return
+        for alias in node.names:
+            if alias.name == "*":
+                continue                 # star imports defeat the analysis
+            self.imports.append((alias.asname or alias.name, node.lineno,
+                                 self._depth == 0))
+
+    def visit_Name(self, node: ast.Name):
+        if isinstance(node.ctx, ast.Load):
+            self.used.add(node.id)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and tgt.id == "__all__" \
+                    and isinstance(node.value, (ast.List, ast.Tuple)):
+                self.dunder_all.extend(
+                    elt.value for elt in node.value.elts
+                    if isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str))
+        self.generic_visit(node)
+
+
+def lint_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    v = _Imports()
+    v.visit(tree)
+    lines = src.splitlines()
+
+    def noqa(lineno: int) -> bool:
+        return 0 < lineno <= len(lines) and "noqa" in lines[lineno - 1]
+
+    problems = []
+    seen: dict[str, int] = {}
+    for name, lineno, toplevel in v.imports:
+        if not toplevel or noqa(lineno):
+            continue
+        if name in seen:
+            problems.append(f"{path}:{lineno}: duplicate import of "
+                            f"{name!r} (first at line {seen[name]})")
+        else:
+            seen[name] = lineno
+    is_bare_init = (os.path.basename(path) == "__init__.py"
+                    and not v.dunder_all)
+    if not is_bare_init:
+        used = v.used | set(v.dunder_all)
+        for name, lineno, _toplevel in v.imports:
+            if name not in used and not name.startswith("_") \
+                    and not noqa(lineno):
+                problems.append(f"{path}:{lineno}: unused import {name!r}")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv or [os.path.join(root, p) for p in DEFAULT_PATHS
+                     if os.path.isdir(os.path.join(root, p))]
+    problems = []
+    n = 0
+    for path in _iter_py(paths):
+        n += 1
+        problems.extend(lint_file(path))
+    for p in problems:
+        print(p)
+    print(f"lint: {n} files, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
