@@ -25,7 +25,7 @@ lint:
 # covers pod-slice revocation + the mixed-generation fleet; serve covers
 # the threaded open-loop serving path (p50/p99 TTFT under interference)
 bench-smoke:
-	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,serve,kernels
+	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,faults,serve,kernels
 
 # full paper-figure sweep (paper-full task counts: matmul 32k / copy 10k /
 # stencil 20k) + scheduler-engine throughput + the serving sweep, fanned

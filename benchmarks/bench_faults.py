@@ -1,0 +1,198 @@
+"""Fault-injection sweeps: fault regime x recovery policy x schedulers.
+
+The robustness scenario family: tasks themselves fail (fail-stop: the
+attempt dies partway through; fail-slow: the place silently degrades
+mid-execution) instead of capacity being revoked or merely interfered
+with.  The swept machine is the same mixed-generation TPU fleet as the
+preemption suite (``tpu_pod_slices``, one current-gen pod + three
+v4-class pods) — heterogeneity is what gives PTT-based straggler hedging
+an alternative place worth duplicating onto.
+
+Grid: fault setting x recovery mode x scheduler x >= 3 seeds over the
+heterogeneous matmul+copy+stencil mix, with backoff timescales
+*calibrated* against a fault-free DAM-C baseline makespan (M0) per
+parallelism group (DES makespans are tiny virtual seconds; absolute
+backoff constants would dwarf or vanish against them):
+
+* ``clean``    — no faults (reference cells, and the zero-overhead check:
+                 hedging enabled on a clean run must cost nothing);
+* ``failstop`` — independent per-attempt fail-stop (p=0.15, budget 2
+                 failures/task), retries with exponential backoff;
+* ``failslow`` — independent fail-slow (p=0.25, 6x degradation): the
+                 attempt *survives* but crawls, the regime straggler
+                 hedging exists for;
+* ``storm``    — MMPP-correlated bursts of both fault kinds (a shared
+                 calm/storm chain multiplies the rates 8x during storms).
+
+Recovery modes: ``retry`` (attempt budgets + seeded exponential backoff +
+PTT penalty on the failing place) and ``retry_hedge`` (same, plus
+criticality-aware speculative duplicates for flagged HIGH stragglers).
+
+Emitted aggregates are mean +/- population-std makespan across seeds per
+cell, p99 task sojourn, and fault/recovery counters.  Headline +
+acceptance ratios under ``failslow``: hedged DAM-C vs retry-only DAM-C
+(hedging must pay for itself where it targets) and vs retry-only RWS
+(>= 1.2x, the criticality + hedging combined margin).  The artifact
+lands as ``BENCH_faults.json`` (repo root mirror on full runs only).
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import RunSpec, run_cells
+
+from .common import emit, write_artifact
+
+_MIX_TYPES = (("matmul", {"tile": 512}), ("copy", {"tile": 512}),
+              ("stencil", {"tile": 2048}))
+# one current-gen pod + three previous-gen pods, 8 slices each (32 slices)
+TOPOLOGY = ("tpu_pod_slices", {"pods": 4, "slices_per_pod": 8,
+                               "kinds": ("pod", "pod_v4", "pod_v4",
+                                         "pod_v4")})
+
+SCHEDULERS = ("RWS", "FAM-C", "DAM-C")
+SETTINGS = ("clean", "failstop", "failslow", "storm")
+RECOVERY_MODES = ("retry", "retry_hedge")
+PARALLELISM = (8, 16)
+SEEDS = (1, 2, 3)            # >= 3 seeds in fast mode too (error bars)
+FULL_TASKS, CI_TASKS = 4000, 800
+BASELINE_SCHED = "DAM-C"     # calibration reference (fault-free)
+
+
+def _dag_spec(parallelism: int, total: int) -> tuple:
+    return ("mixed", {"task_types": _MIX_TYPES, "parallelism": parallelism,
+                      "total_tasks": total})
+
+
+def _fault_spec(setting: str, seed: int, m0: float) -> tuple | None:
+    """RunSpec.faults for one cell; MMPP timescales are fractions of the
+    group's calibrated fault-free makespan ``m0``."""
+    if setting == "clean":
+        return None
+    if setting == "failstop":
+        return ("independent", {"seed": seed, "p_fail": 0.15})
+    if setting == "failslow":
+        return ("independent", {"seed": seed, "p_slow": 0.25,
+                                "slow_factor": 6.0})
+    if setting == "storm":
+        return ("mmpp", {"seed": seed, "t_end": 10.0 * m0,
+                         "mean_calm": 1.5 * m0, "mean_storm": 0.4 * m0,
+                         "storm_mult": 8.0, "p_fail": 0.04, "p_slow": 0.06,
+                         "slow_factor": 6.0})
+    raise ValueError(f"unknown setting {setting!r}")
+
+
+def _recovery_spec(mode: str, m0: float) -> dict:
+    """RunSpec.recovery kwargs: backoffs as fractions of ``m0`` so the
+    retry penalty is commensurate with the run it interrupts."""
+    return {"backoff_base": 0.01 * m0, "backoff_cap": 0.1 * m0,
+            "hedge": mode == "retry_hedge"}
+
+
+def _calibrate(par, total, workers) -> dict[int, float]:
+    """Fault-free DAM-C makespan per parallelism group: the timescale the
+    fault/backoff parameters of that group are expressed against."""
+    specs = [RunSpec(key=f"cal/P{p}", dag=_dag_spec(p, total),
+                     scheduler=BASELINE_SCHED, topology=TOPOLOGY, seed=1)
+             for p in par]
+    results = run_cells(specs, workers=workers)
+    return {p: results[f"cal/P{p}"]["makespan_s"] for p in par}
+
+
+def grid(fast: bool = False, *, m0: dict[int, float]) -> list[RunSpec]:
+    par = PARALLELISM if not fast else (8,)
+    scheds = SCHEDULERS if not fast else ("RWS", "DAM-C")
+    settings = SETTINGS if not fast else ("clean", "failslow", "storm")
+    total = FULL_TASKS if not fast else CI_TASKS
+    specs = []
+    for setting in settings:
+        for mode in RECOVERY_MODES:
+            for p in par:
+                for sched_name in scheds:
+                    for seed in SEEDS:
+                        faults = _fault_spec(setting, seed, m0[p])
+                        specs.append(RunSpec(
+                            key=f"faults/{setting}/{mode}/P{p}/"
+                                f"{sched_name}/seed{seed}",
+                            dag=_dag_spec(p, total),
+                            scheduler=sched_name,
+                            topology=TOPOLOGY,
+                            seed=seed,
+                            faults=faults,
+                            recovery=_recovery_spec(mode, m0[p]),
+                            collect=("faults", "task_sojourn")))
+    return specs
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    par = PARALLELISM if not fast else (8,)
+    total = FULL_TASKS if not fast else CI_TASKS
+    m0 = _calibrate(par, total, workers)
+    out: dict = {f"calibration/P{p}/makespan_s": m for p, m in m0.items()}
+
+    specs = grid(fast, m0=m0)
+    results = run_cells(specs, workers=workers)
+    groups: dict[str, list[float]] = {}
+    p99s: dict[str, list[float]] = {}
+    for key, res in results.items():
+        cell = key.rsplit("/seed", 1)[0]
+        groups.setdefault(cell, []).append(res["makespan_s"])
+        soj = res.get("task_sojourn") or {}
+        if "p99_s" in soj:
+            p99s.setdefault(cell, []).append(soj["p99_s"])
+        out[key] = {k: v for k, v in res.items() if not k.startswith("_")}
+    for cell, spans in groups.items():
+        mean = statistics.mean(spans)
+        std = statistics.pstdev(spans)
+        out[f"{cell}/mean_makespan_s"] = mean
+        out[f"{cell}/std_makespan_s"] = std
+        if cell in p99s:
+            out[f"{cell}/mean_p99_sojourn_s"] = statistics.mean(p99s[cell])
+        emit(f"{cell}/mean_makespan_s", f"{mean:.6g}",
+             f"±{std:.2g} over {len(spans)} seeds")
+
+    def _mean(cell: str) -> float | None:
+        return statistics.mean(groups[cell]) if cell in groups else None
+
+    # headline + acceptance ratios, per parallelism group
+    settings = sorted({c.split("/")[1] for c in groups})
+    acceptance: dict[str, bool] = {}
+    for setting in settings:
+        if setting == "clean":
+            # zero-overhead check: hedging armed on a clean run must not
+            # change the makespan (no straggler ever flags, so no
+            # duplicate is ever launched)
+            for p in par:
+                a = _mean(f"faults/clean/retry/P{p}/DAM-C")
+                b = _mean(f"faults/clean/retry_hedge/P{p}/DAM-C")
+                if a is not None and b is not None:
+                    acceptance[f"clean/P{p}/hedge_is_free"] = (
+                        abs(a - b) <= 1e-12 * max(a, b, 1.0))
+            continue
+        for p in par:
+            hedged = _mean(f"faults/{setting}/retry_hedge/P{p}/DAM-C")
+            retry = _mean(f"faults/{setting}/retry/P{p}/DAM-C")
+            rws = _mean(f"faults/{setting}/retry/P{p}/RWS")
+            if hedged is None or rws is None:
+                continue
+            r_rws = rws / hedged
+            emit(f"faults/{setting}/P{p}/RWS_retry_vs_DAM-C_hedge",
+                 round(r_rws, 3), "x slower (>1: hedged DAM-C wins)")
+            if retry is not None:
+                emit(f"faults/{setting}/P{p}/DAM-C_retry_vs_hedge",
+                     round(retry / hedged, 3), "x slower (>1: hedging pays)")
+            if setting == "failslow":
+                acceptance[f"failslow/P{p}/hedged_DAM-C_1.2x_RWS"] = (
+                    r_rws >= 1.2)
+                if retry is not None:
+                    acceptance[f"failslow/P{p}/hedge_beats_retry_only"] = (
+                        hedged < retry)
+    out["acceptance"] = acceptance
+    # the repo-root mirror is the headline artifact (full sizes only, so a
+    # bench-smoke run can't overwrite it with CI-size numbers)
+    write_artifact("BENCH_faults", out, root_copy=not fast)
+    return out
+
+
+if __name__ == "__main__":
+    run()

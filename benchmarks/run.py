@@ -23,8 +23,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (bench_dvfs, bench_heat, bench_interference, bench_kernels,
-               bench_kmeans, bench_preemption, bench_roofline,
+from . import (bench_dvfs, bench_faults, bench_heat, bench_interference,
+               bench_kernels, bench_kmeans, bench_preemption, bench_roofline,
                bench_scenarios, bench_sched_throughput, bench_sensitivity,
                bench_serve, bench_task_distribution)
 from . import common
@@ -40,6 +40,7 @@ SUITES = {
     "roofline": bench_roofline.run,
     "scenarios": bench_scenarios.run,
     "preempt": bench_preemption.run,
+    "faults": bench_faults.run,
     "sched": bench_sched_throughput.run,
     "serve": bench_serve.run,
 }

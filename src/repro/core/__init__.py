@@ -10,12 +10,15 @@ Public surface:
   lifecycle   — engine-agnostic scheduling kernel (wake/place/steal/commit)
   interference— co-running apps + DVFS speed profiles
   preemption  — seeded pod-slice revoke/restore episode models
+  faults      — seeded task-level fault injection + recovery policy
   simulator   — discrete-event engine (paper-scale evaluation)
   multirun    — batched multi-run engine (sweeps fanned across host cores)
   runtime     — threaded executor running real payloads (JAX kernels)
   metrics     — throughput / placement / worktime aggregation
 """
 from .dag import DAG, chain_dag, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
+from .faults import (Fault, FaultModel, RecoveryPolicy, mmpp_faults,
+                     task_faults)
 from .lifecycle import SchedulingKernel, ptt_observe, split_by_priority
 from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
                            SpeedProfileBase, TraceProfile, burst_episodes,
@@ -50,6 +53,7 @@ __all__ = [
     "tpu_pod_slices", "tx2", "tx2_xl",
     "PreemptionModel", "mmpp_preemption", "pod_slice_preemption",
     "prune_full_outages",
+    "Fault", "FaultModel", "RecoveryPolicy", "mmpp_faults", "task_faults",
     "SchedulingKernel", "ptt_observe", "split_by_priority",
     "SplitWSQ", "WorkQueues",
     "PTT", "PTTBank", "ThreadedRuntime",

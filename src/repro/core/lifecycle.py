@@ -23,7 +23,7 @@ streams even though its measurements are wall-clock.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterable, Iterator
+from typing import Callable, Iterable, Iterator, Optional
 
 from .places import ExecutionPlace
 from .queues import WorkQueues
@@ -112,6 +112,39 @@ class SchedulingKernel:
     def ptt_feedback(self, task: Task, place: ExecutionPlace,
                      observed: float) -> None:
         ptt_observe(self.sched.ptt, task.type.name, place, observed)
+
+    # -- fault recovery (see ``repro.core.faults``) ---------------------------
+    def expected_duration(self, task: Task, place: ExecutionPlace) -> float:
+        """PTT-expected execution time for (type, place); 0.0 means the
+        place is unexplored (straggler detection stays silent until the
+        table has an expectation to compare against)."""
+        return self.sched.ptt.for_type(task.type.name).get(place)
+
+    def fault_feedback(self, task: Task, place: ExecutionPlace,
+                       elapsed: float, penalty: float) -> None:
+        """Penalize a failing place in the PTT so the retry's re-placement
+        avoids it: fold in ``penalty`` x the worse of (time lost on the
+        failure, current expectation) — a failure is evidence the place is
+        unhealthy, not just slow."""
+        tbl = self.sched.ptt.for_type(task.type.name)
+        obs = max(elapsed, tbl.get(place)) * penalty
+        if obs > 0.0:
+            ptt_observe(self.sched.ptt, task.type.name, place, obs)
+
+    def hedge_place(self, task: Task, exclude_cores, rng) -> \
+            Optional[ExecutionPlace]:
+        """PTT-best live place for a speculative duplicate that shares no
+        core with the straggling original (``exclude_cores``), or None if
+        no such place survives.  Tie-breaks draw from the dedicated fault
+        ``rng``, never the scheduler's streams."""
+        view = self.sched.live
+        live = set(self._all_cores if view is None else view.cores)
+        tbl = self.sched.ptt.for_type(task.type.name)
+        cand = [p for p in self.sched.topology.places()
+                if p.leader in live and not exclude_cores.intersection(p.cores)]
+        if not cand:
+            return None
+        return tbl.best(cand, cost=False, rng=rng)
 
     def commit_successors(self, task: Task, lock=None) -> Iterator[Task]:
         """Yield the tasks a commit makes ready, in wake order: dependents

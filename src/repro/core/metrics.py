@@ -24,11 +24,18 @@ def percentile(sorted_vals: list[float], q: float) -> float:
 @dataclasses.dataclass(frozen=True)
 class RequestRecord:
     """One serving request's lifecycle timestamps (all on the engine's
-    clock): submission, first token out (prefill commit), last token out."""
+    clock): submission, first token out (prefill commit), last token out.
+    Graceful-degradation flags: ``rejected`` = refused at admission (the
+    deadline could not be met, nothing ran); ``shed`` = admitted but its
+    queued LOW decode work was dropped once the deadline passed
+    (truncated output, request still finalized)."""
     rid: int
     t_submit: float
     t_first_token: float
     t_done: float
+    deadline_s: float = 0.0         # 0 = no deadline
+    rejected: bool = False
+    shed: bool = False
 
     @property
     def ttft(self) -> float:
@@ -37,6 +44,12 @@ class RequestRecord:
     @property
     def e2e(self) -> float:
         return self.t_done - self.t_submit
+
+    @property
+    def deadline_miss(self) -> bool:
+        """A deadlined request that was rejected, shed, or finished late."""
+        return self.deadline_s > 0.0 and (
+            self.rejected or self.shed or self.e2e > self.deadline_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +82,25 @@ class RunMetrics:
     preempt_events: int = 0
     tasks_preempted: int = 0
     work_lost_s: float = 0.0
+    # fault-injection / recovery accounting (all zero without a FaultModel
+    # attached — see ``repro.core.faults``): injected fault counts, retry /
+    # permanent-failure counts, straggler flags and speculative duplicates,
+    # and the work-seconds burned by failures and by losing hedge copies
+    faults_failstop: int = 0
+    faults_failslow: int = 0
+    retries: int = 0
+    failed_tasks: int = 0           # retry budget exhausted (permanent)
+    stragglers: int = 0
+    hedges_launched: int = 0
+    hedge_wins: int = 0             # duplicate committed before the original
+    work_lost_faults_s: float = 0.0
+    work_hedged_s: float = 0.0      # losing-copy work (the hedge premium)
+    # error surface: worker-thread death, permanently failed tasks, drain
+    # timeouts.  An empty list is the "run is trustworthy" signal — the
+    # threaded engine used to silently return partial data on any of these
+    errors: list[str] = dataclasses.field(default_factory=list)
+    # supervisor/heartbeat recovery events ("failure@step: workers [..]")
+    recovery_events: list[str] = dataclasses.field(default_factory=list)
     # serving-path accounting: one record per completed request (open-loop
     # or batch), feeding the TTFT / end-to-end latency percentiles
     request_records: list[RequestRecord] = dataclasses.field(
@@ -137,13 +169,22 @@ class RunMetrics:
 
     def request_latency_stats(self) -> dict:
         """Per-request latency percentiles (milliseconds): time-to-first-
-        token and end-to-end, p50/p95/p99 + mean, over completed requests."""
+        token and end-to-end, p50/p95/p99 + mean, over completed (i.e.
+        non-rejected) requests, plus graceful-degradation counters."""
         recs = self.request_records
         if not recs:
             return {}
-        out: dict = {"completed": len(recs)}
-        for key, vals in (("ttft_ms", sorted(r.ttft for r in recs)),
-                          ("e2e_ms", sorted(r.e2e for r in recs))):
+        done = [r for r in recs if not r.rejected]
+        out: dict = {
+            "completed": len(done),
+            "rejected": sum(1 for r in recs if r.rejected),
+            "shed": sum(1 for r in recs if r.shed),
+            "deadline_miss": sum(1 for r in recs if r.deadline_miss),
+        }
+        if not done:
+            return out
+        for key, vals in (("ttft_ms", sorted(r.ttft for r in done)),
+                          ("e2e_ms", sorted(r.e2e for r in done))):
             out[key] = {
                 "mean": sum(vals) / len(vals) * 1e3,
                 "p50": percentile(vals, 50) * 1e3,
@@ -151,6 +192,32 @@ class RunMetrics:
                 "p99": percentile(vals, 99) * 1e3,
             }
         return out
+
+    def fault_summary(self) -> dict:
+        """Compact fault/recovery accounting (the ``faults`` collector)."""
+        return {
+            "failstop": self.faults_failstop,
+            "failslow": self.faults_failslow,
+            "retries": self.retries,
+            "failed_tasks": self.failed_tasks,
+            "stragglers": self.stragglers,
+            "hedges": self.hedges_launched,
+            "hedge_wins": self.hedge_wins,
+            "work_lost_faults_s": round(self.work_lost_faults_s, 9),
+            "work_hedged_s": round(self.work_hedged_s, 9),
+        }
+
+    def task_sojourn_stats(self) -> dict:
+        """Ready-to-commit sojourn percentiles (seconds) over committed
+        tasks — the per-task tail the straggler-hedging benchmark reads."""
+        if not self.records:
+            return {}
+        vals = sorted(r.t_end - r.t_ready for r in self.records)
+        return {
+            "mean_s": sum(vals) / len(vals),
+            "p50_s": percentile(vals, 50),
+            "p99_s": percentile(vals, 99),
+        }
 
     def summary(self) -> dict[str, float]:
         return {

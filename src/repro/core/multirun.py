@@ -49,6 +49,7 @@ from multiprocessing import get_context
 from typing import Iterable, Optional, Sequence
 
 from .dag import DAG, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
+from .faults import FaultModel, RecoveryPolicy, mmpp_faults, task_faults
 from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
                            SpeedProfileBase, burst_episodes, corun_chain,
                            corun_socket, dvfs_denver, governor_profile,
@@ -190,6 +191,22 @@ PREEMPTION_BUILDERS = {
     "mmpp": _pre_mmpp,
 }
 
+
+# Fault-model builders are topology-free (faults are drawn per task, not per
+# partition) — they take only their own seeded kwargs.
+def _faults_independent(**kw) -> FaultModel:
+    return task_faults(**kw)
+
+
+def _faults_mmpp(**kw) -> FaultModel:
+    return mmpp_faults(**kw)
+
+
+FAULT_BUILDERS = {
+    "independent": _faults_independent,
+    "mmpp": _faults_mmpp,
+}
+
 # Result collectors beyond the always-present makespan/throughput summary.
 COLLECTORS = {
     "placement_counts": lambda m: m.placement_counts(),
@@ -200,6 +217,8 @@ COLLECTORS = {
     "preemption": lambda m: {"events": m.preempt_events,
                              "tasks_preempted": m.tasks_preempted,
                              "work_lost_s": round(m.work_lost_s, 9)},
+    "faults": lambda m: m.fault_summary(),
+    "task_sojourn": lambda m: m.task_sojourn_stats(),
 }
 
 
@@ -208,8 +227,10 @@ class RunSpec:
     """One cell of a sweep grid — everything needed to reproduce one
     seeded DES run, expressed as registry names + plain kwargs.
 
-    ``dag`` / ``topology`` / ``speed`` / ``preemption`` are
+    ``dag`` / ``topology`` / ``speed`` / ``preemption`` / ``faults`` are
     ``(name, kwargs)`` pairs; ``background`` is a tuple of such pairs.
+    ``recovery`` is a plain kwargs dict for
+    :class:`~.faults.RecoveryPolicy` (ignored without ``faults``).
     DAG and background kwargs may contain a ``task_type`` entry that is
     itself a ``(name, kwargs)`` pair resolved through :data:`TASK_TYPES`
     (the mixed DAG builder takes a ``task_types`` tuple of such pairs).
@@ -227,6 +248,8 @@ class RunSpec:
     background: tuple = ()
     speed: Optional[tuple] = None
     preemption: Optional[tuple] = None
+    faults: Optional[tuple] = None
+    recovery: Optional[dict] = None
     horizon: float = 1e6
     collect: tuple = ()
     measure_wall: bool = False
@@ -281,10 +304,18 @@ def run_cell(spec: RunSpec) -> dict:
         pre_builder, pre_kwargs = _lookup(PREEMPTION_BUILDERS,
                                           spec.preemption, "preemption model")
         preemption = pre_builder(topo, **pre_kwargs)
+    faults = None
+    if spec.faults is not None:
+        fault_builder, fault_kwargs = _lookup(FAULT_BUILDERS, spec.faults,
+                                              "fault model")
+        faults = fault_builder(**fault_kwargs)
+    recovery = (RecoveryPolicy(**spec.recovery)
+                if spec.recovery is not None else None)
 
     t0 = time.perf_counter()
     m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
-                             preemption=preemption, horizon=spec.horizon)
+                             preemption=preemption, faults=faults,
+                             recovery=recovery, horizon=spec.horizon)
     wall = time.perf_counter() - t0
 
     out = {

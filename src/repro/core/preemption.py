@@ -62,11 +62,20 @@ class PreemptionModel:
     ``preempt`` selects what happens to running tasks at revoke time;
     ``resume_penalty`` (checkpoint mode only) is the extra work paid on
     resume, as a fraction of the task's full duration at its new place.
+    ``notice`` is the revocation *notice window* (seconds): running tasks
+    keep executing for that long after the revoke edge and are only
+    killed/checkpointed at its expiry — the spot-VM 30-second-notice
+    shape, and the DES analogue of the threaded engine's grace window
+    (running payloads there cannot be killed at all).  Queued work always
+    drains immediately and nothing new starts on a revoked partition;
+    ``notice=0`` (the default) preempts instantaneously, bit-identical to
+    models without the field.
     """
 
     episodes: tuple[tuple[int, float, float], ...]
     preempt: str = "restart"
     resume_penalty: float = 0.05
+    notice: float = 0.0
 
     def __post_init__(self) -> None:
         if self.preempt not in PREEMPT_MODES:
@@ -75,6 +84,8 @@ class PreemptionModel:
         if not (0.0 <= self.resume_penalty and
                 math.isfinite(self.resume_penalty)):
             raise ValueError(f"bad resume_penalty {self.resume_penalty!r}")
+        if not (0.0 <= self.notice and math.isfinite(self.notice)):
+            raise ValueError(f"bad notice {self.notice!r}")
         prev_t0 = -1.0
         last_end: dict[int, float] = {}
         for pidx, t0, t1 in self.episodes:
@@ -137,7 +148,8 @@ def pod_slice_preemption(topology: Topology, *, seed: int, t_end: float,
                          mean_up: float, mean_down: float,
                          partitions: Optional[Sequence[int]] = None,
                          preempt: str = "restart",
-                         resume_penalty: float = 0.05) -> PreemptionModel:
+                         resume_penalty: float = 0.05,
+                         notice: float = 0.0) -> PreemptionModel:
     """Independent per-partition revoke/restore renewal episodes.
 
     Each preemptible partition alternates exponential up intervals (mean
@@ -158,7 +170,7 @@ def pod_slice_preemption(topology: Topology, *, seed: int, t_end: float,
             episodes.append((i, t0, t1))
     return PreemptionModel(
         prune_full_outages(episodes, len(topology.partitions)),
-        preempt=preempt, resume_penalty=resume_penalty)
+        preempt=preempt, resume_penalty=resume_penalty, notice=notice)
 
 
 def mmpp_preemption(topology: Topology, *, seed: int, t_end: float,
@@ -167,7 +179,8 @@ def mmpp_preemption(topology: Topology, *, seed: int, t_end: float,
                     mean_down: float,
                     partitions: Optional[Sequence[int]] = None,
                     preempt: str = "restart",
-                    resume_penalty: float = 0.05) -> PreemptionModel:
+                    resume_penalty: float = 0.05,
+                    notice: float = 0.0) -> PreemptionModel:
     """MMPP-style correlated revocations.
 
     One hidden calm/storm modulating chain (exponential sojourns of mean
@@ -197,4 +210,4 @@ def mmpp_preemption(topology: Topology, *, seed: int, t_end: float,
             episodes.append((i, t0, t1))
     return PreemptionModel(
         prune_full_outages(episodes, len(topology.partitions)),
-        preempt=preempt, resume_penalty=resume_penalty)
+        preempt=preempt, resume_penalty=resume_penalty, notice=notice)

@@ -67,16 +67,17 @@ import time
 from typing import Optional
 
 from .dag import DAG
+from .faults import FaultModel, FaultState, RecoveryPolicy
 from .lifecycle import SchedulingKernel, split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .preemption import PreemptionModel
 from .schedulers import Scheduler
-from .task import Task
+from .task import Priority, Task
 
 
 class _Assigned:
     __slots__ = ("task", "place", "barrier", "started", "done", "cancelled",
-                 "revoked", "partial")
+                 "revoked", "partial", "fault", "error", "straggle_flagged")
 
     def __init__(self, task, place):
         self.task = task
@@ -87,13 +88,19 @@ class _Assigned:
         self.cancelled = False          # displaced by a revoke before start
         self.revoked = threading.Event()   # cooperative-checkpoint signal
         self.partial = None             # fraction done when preempted, else None
+        self.fault = None               # armed injected fail-stop, else None
+        self.error = None               # real payload exception, else None
+        self.straggle_flagged = False   # straggler monitor saw it already
 
 
 class ThreadedRuntime:
     def __init__(self, scheduler: Scheduler, *,
                  slowdown: Optional[dict[int, float]] = None,
                  idle_sleep: float = 2e-3,
-                 preemption: Optional[PreemptionModel] = None):
+                 preemption: Optional[PreemptionModel] = None,
+                 faults: Optional[FaultModel] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
+                 supervisor=None):
         # idle_sleep is only a fallback poll: every work arrival (wake,
         # assignment, requeue, restore) notifies the condition variable,
         # so idle workers do not need a tight poll — 1e-4 here made eight
@@ -126,6 +133,25 @@ class ThreadedRuntime:
         self.tasks_preempted = 0
         self.work_lost = 0.0
 
+        # fault-injection state (inert without an *enabled* FaultModel; a
+        # zero-probability model is normalized away, matching the DES).
+        # Running payloads cannot be killed, so a threaded hedge loser runs
+        # to completion and is suppressed at commit; hedging therefore
+        # requires idempotent payloads (both copies may execute fully).
+        if faults is not None and not faults.enabled:
+            faults = None
+        self.faults = faults
+        self._fx = (FaultState(faults, recovery or RecoveryPolicy())
+                    if faults is not None else None)
+        self._inflight: dict[int, _Assigned] = {}   # tid -> leader-started rec
+        self._timers: list[threading.Timer] = []    # pending retry backoffs
+        self._straggler: Optional[threading.Thread] = None
+        self._dead_workers: list[int] = []
+        # duck-typed repro.runtime.ft.Supervisor (kept untyped: importing
+        # repro.runtime from repro.core would be circular); workers beat
+        # its heartbeat every pull-loop iteration and drain() polls check()
+        self.supervisor = supervisor
+
     def _now(self) -> float:
         return 0.0 if self.t0 is None else time.perf_counter() - self.t0
 
@@ -149,6 +175,10 @@ class ThreadedRuntime:
     def submit(self, dag: DAG) -> None:
         if self.t0 is None:
             self.t0 = time.perf_counter()
+        if self._fx is not None:
+            # same deterministic BFS numbering as the DES, so both engines
+            # inject identical faults on the same DAG (cross-engine parity)
+            self._fx.register_dag(dag)
         for root in dag.roots:
             self._wake(root, waker_core=0)
 
@@ -163,18 +193,29 @@ class ThreadedRuntime:
                 return rec
             if not self._core_up[core]:
                 return None
-            # 2. own WSQ: oldest HIGH first under priority dequeue, else
-            #    newest LOW (plain work-stealing LIFO)
-            task = self.queues.pop_local(core)
-            if task is None:
-                # 3. steal: most-loaded victim, seeded tie-break, FIFO end,
-                #    re-run of the place search at the thief
-                victim = self.queues.pick_victim(core, self.sched.rng)
-                if victim < 0:
-                    return None
-                task = self.queues.steal_pop(victim)
-                self.kernel.on_steal(task)
-            return self._assign(task, core)
+            while True:
+                # 2. own WSQ: oldest HIGH first under priority dequeue,
+                #    else newest LOW (plain work-stealing LIFO)
+                task = self.queues.pop_local(core)
+                stolen = False
+                if task is None:
+                    # 3. steal: most-loaded victim, seeded tie-break, FIFO
+                    #    end, re-run of the place search at the thief
+                    victim = self.queues.pick_victim(core, self.sched.rng)
+                    if victim < 0:
+                        return None
+                    task = self.queues.steal_pop(victim)
+                    stolen = True
+                if (self._fx is not None
+                        and (task.hedge_of or task).committed):
+                    # the losing copy of a hedged pair, parked in a WSQ
+                    # when the winner committed, resolves at pop
+                    self.outstanding -= 1
+                    self.work_cv.notify_all()
+                    continue
+                if stolen:
+                    self.kernel.on_steal(task)
+                return self._assign(task, core)
 
     def _assign(self, task: Task, core: int) -> _Assigned:
         # caller holds self.lock
@@ -192,26 +233,54 @@ class ThreadedRuntime:
         rec.barrier.wait()        # all members rendezvous
         if is_leader:
             t_start = self._now()
-            rec.task.t_start = t_start
+            task = rec.task
+            task.t_start = t_start
+            fault = None
+            if self._fx is not None:
+                if task.hedge_of is None:
+                    # hedge duplicates run clean (they exist to escape a
+                    # degraded place); originals draw per-attempt faults
+                    fault = self._fx.draw(task, t_start)
+                with self.lock:
+                    self._inflight[task.tid] = rec
             ret = None
-            if rec.task.payload is not None:
-                rec.task.revoke_signal = rec.revoked
+            if task.payload is not None:
+                task.revoke_signal = rec.revoked
                 try:
-                    ret = rec.task.payload(rec.place.width)
+                    ret = task.payload(rec.place.width)
+                except Exception as e:      # a raising payload must never
+                    rec.error = e           # kill the leader thread: the
+                                            # members would block forever
                 finally:
-                    rec.task.revoke_signal = None
+                    task.revoke_signal = None
             factor = max((self.slowdown.get(c, 1.0) for c in rec.place.cores),
                          default=1.0)
             if factor > 1.0:
                 dur = self._now() - t_start
                 time.sleep(dur * (factor - 1.0))
+            if fault is not None and rec.error is None:
+                if fault.kind == "slow":
+                    # the place silently degrades from frac onward: the
+                    # remaining (1-frac) of the work runs factor x slower
+                    dur = self._now() - t_start
+                    time.sleep(dur * (1.0 - fault.frac)
+                               * (fault.factor - 1.0))
+                    with self.lock:
+                        self.metrics.faults_failslow += 1
+                else:
+                    rec.fault = fault       # fail-stop: execution failed
             rec.partial = self._partial_fraction(rec, ret)
             rec.done.set()
         else:
             rec.done.wait()
         rec.barrier.wait()
         if is_leader:
-            if rec.partial is None:
+            if self._fx is not None:
+                with self.lock:
+                    self._inflight.pop(rec.task.tid, None)
+            if rec.error is not None or rec.fault is not None:
+                self._fail(rec)
+            elif rec.partial is None:
                 self._commit(rec)
             else:
                 self._requeue_preempted(rec)
@@ -232,6 +301,11 @@ class ThreadedRuntime:
         progress and hand the task back to the scheduler over the live
         view.  ``outstanding`` is untouched — the task is still pending."""
         task = rec.task
+        if self._fx is not None and (task.hedge_of or task).committed:
+            # a checkpointing hedge loser: the winner already committed
+            # the logical task, so the checkpoint is worthless
+            self._suppress(rec)
+            return
         dur = self._now() - task.t_start
         with self.work_cv:
             for c in rec.place.cores:
@@ -260,6 +334,30 @@ class ThreadedRuntime:
 
     def _commit(self, rec: _Assigned) -> None:
         task = rec.task
+        src = task              # the logical task (successors, sojourn)
+        if self._fx is not None:
+            with self.lock:
+                logical = task.hedge_of or task
+                if logical.committed:
+                    won = False
+                else:
+                    # first copy wins; nudge the loser's cooperative
+                    # payload via the existing revocation channel (it
+                    # cannot be killed — it suppresses at its own commit)
+                    logical.committed = True
+                    won = True
+                    other = (logical if task.hedge_of is not None
+                             else task.hedge_dup)
+                    if other is not None and task.hedge_of is not None:
+                        self.metrics.hedge_wins += 1
+                    if other is not None:
+                        loser = self._inflight.get(other.tid)
+                        if loser is not None:
+                            loser.revoked.set()
+            if not won:
+                self._suppress(rec)
+                return
+            src = task.hedge_of or task
         task.t_end = self._now()
         task.place = rec.place
         observed = task.t_end - task.t_start
@@ -274,15 +372,162 @@ class ThreadedRuntime:
             self.metrics.record(TaskRecord(
                 type_name=task.type.name, priority=int(task.priority),
                 leader=rec.place.leader, width=rec.place.width,
-                t_ready=task.t_ready, t_start=task.t_start, t_end=task.t_end))
-        for ready in self.kernel.commit_successors(task, lock=self.lock):
+                t_ready=src.t_ready, t_start=task.t_start, t_end=task.t_end))
+        for ready in self.kernel.commit_successors(src, lock=self.lock):
             self._wake(ready, rec.place.leader)
         with self.work_cv:
             self.outstanding -= 1
             self.work_cv.notify_all()
 
-    def _worker(self, core: int) -> None:
+    # -- fault recovery (see ``core/faults.py``) ------------------------------
+    def _fail(self, rec: _Assigned) -> None:
+        """A failed execution — real payload exception or injected
+        fail-stop.  Same recovery as the DES: PTT-penalize the failing
+        place, retry after a seeded backoff, or fail permanently once the
+        attempt budget is spent.  Hedge copies never retry."""
+        task = rec.task
+        dur = self._now() - task.t_start
+        if self._fx is not None:
+            self.kernel.fault_feedback(task, rec.place, dur,
+                                       self._fx.policy.fail_penalty)
+        with self.work_cv:
+            for c in rec.place.cores:
+                try:
+                    self.aq[c].remove(rec)
+                except ValueError:
+                    pass
+            if rec.fault is not None:
+                self.metrics.faults_failstop += 1
+                # the strike point was at frac of the work; only that
+                # share of the wall time is work actually lost
+                self.metrics.work_lost_faults_s += dur * rec.fault.frac
+            else:
+                # a real payload exception rides the same recovery path
+                # but is not an *injected* fault — it is surfaced instead
+                self.metrics.work_lost_faults_s += dur
+                self.metrics.errors.append(
+                    f"task {task.tid} ({task.type.name}) payload raised "
+                    f"{type(rec.error).__name__}: {rec.error}")
+            task.fault_count += 1
+            if task.hedge_of is not None:
+                # a speculative duplicate died; the original carries on
+                task.hedge_of.hedge_dup = None
+                self.outstanding -= 1
+                self.work_cv.notify_all()
+                return
+            if task.hedge_dup is not None and not task.committed:
+                # the original died with its duplicate still in flight —
+                # leave recovery to the copy on the healthier place
+                self.outstanding -= 1
+                self.work_cv.notify_all()
+                return
+            can_retry = (self._fx is not None
+                         and task.fault_count <= self._fx.policy.max_retries)
+            if not can_retry:
+                self.metrics.failed_tasks += 1
+                self.metrics.errors.append(
+                    f"task {task.tid} ({task.type.name}) failed permanently "
+                    f"after {task.fault_count - 1} retries")
+                self.outstanding -= 1
+                self.work_cv.notify_all()
+                return
+            self.metrics.retries += 1
+            timer = threading.Timer(self._fx.backoff(task), self._retry,
+                                    args=(task,))
+            timer.daemon = True
+            self._timers.append(timer)
+            timer.start()
+
+    def _retry(self, task: Task) -> None:
+        """Backoff expired: hand the failed task back to the scheduler
+        over the live view (its failing place now PTT-penalized)."""
+        with self.work_cv:
+            if task.committed or self.stop:
+                # the hedge twin won while we backed off, or the runtime
+                # is shutting down — either way this copy resolves here
+                self.outstanding -= 1
+                self.work_cv.notify_all()
+                return
+            self.queues.push(task, self.kernel.requeue_displaced(task))
+            self.work_cv.notify_all()
+
+    def _suppress(self, rec: _Assigned) -> None:
+        """The losing copy of a hedged pair ran to completion (or
+        checkpointed) after the winner committed — running payloads
+        cannot be killed, so the loser is dropped here and its wall time
+        accounted as the hedge premium."""
+        dur = self._now() - rec.task.t_start
+        with self.work_cv:
+            for c in rec.place.cores:
+                try:
+                    self.aq[c].remove(rec)
+                except ValueError:
+                    pass
+            self.metrics.work_hedged_s += dur
+            self.outstanding -= 1
+            self.work_cv.notify_all()
+
+    def _straggler_driver(self) -> None:
+        """Monitor thread: flag executions past ``k`` x their PTT
+        expectation; launch a speculative duplicate for flagged HIGH
+        tasks on the PTT-best place disjoint from the straggler's (the
+        DES schedules exact straggle events instead of polling)."""
+        pol = self._fx.policy
         while True:
+            time.sleep(pol.straggler_poll_s)
+            with self.lock:
+                if self.stop:
+                    return
+                now = self._now()
+                inflight = list(self._inflight.values())
+            for rec in inflight:
+                task = rec.task
+                if (rec.done.is_set() or rec.straggle_flagged
+                        or task.hedge_of is not None):
+                    continue
+                exp = self.kernel.expected_duration(task, rec.place)
+                if exp <= 0.0 or now - task.t_start < pol.straggler_k * exp:
+                    continue
+                rec.straggle_flagged = True
+                with self.lock:
+                    self.metrics.stragglers += 1
+                if (not pol.hedge or task.priority != Priority.HIGH
+                        or task.hedge_launched or task.committed):
+                    continue
+                place = self.kernel.hedge_place(task, set(rec.place.cores),
+                                                self._fx.hedge_rng)
+                if place is None:
+                    continue
+                with self.work_cv:
+                    if task.committed or task.hedge_launched:
+                        continue
+                    task.hedge_launched = True
+                    dup = Task(type=task.type, priority=task.priority,
+                               payload=task.payload)
+                    dup.hedge_of = task
+                    dup.bound_place = place   # honored at dequeue
+                    task.hedge_dup = dup
+                    dup.t_ready = now
+                    self.metrics.hedges_launched += 1
+                    self.outstanding += 1
+                    self.queues.push(dup, place.leader)
+                    self.work_cv.notify_all()
+
+    def _worker(self, core: int) -> None:
+        try:
+            self._worker_loop(core)
+        except BaseException as e:          # surface, never die silently:
+            with self.work_cv:              # drain() reports the death
+                self._dead_workers.append(core)
+                self.metrics.errors.append(
+                    f"worker {core} died: {type(e).__name__}: {e}")
+                self.work_cv.notify_all()
+
+    def _worker_loop(self, core: int) -> None:
+        sup = self.supervisor
+        while True:
+            if sup is not None:
+                sup.heartbeat.beat(core)
             with self.lock:
                 if self.stop:
                     return
@@ -375,6 +620,10 @@ class ThreadedRuntime:
             self._timer = threading.Thread(target=self._preemption_driver,
                                            daemon=True)
             self._timer.start()
+        if self._fx is not None:
+            self._straggler = threading.Thread(target=self._straggler_driver,
+                                               daemon=True)
+            self._straggler.start()
 
     def start(self) -> None:
         """Open-loop mode: launch workers now and keep accepting
@@ -384,15 +633,34 @@ class ThreadedRuntime:
 
     def drain(self, timeout: float = 120.0) -> RunMetrics:
         """Stop accepting work, wait for the queues to empty (or the
-        deadline), shut the workers down and return the metrics."""
+        deadline), shut the workers down and return the metrics.  A
+        worker-thread death or a timeout is *surfaced* in
+        ``metrics.errors`` — an empty list is the "this run is
+        trustworthy" signal; partial data never returns silently."""
         deadline = time.monotonic() + timeout
+        step = 0
         with self.work_cv:
             self._accepting = False
             self.work_cv.notify_all()
             while self.outstanding > 0 and time.monotonic() < deadline:
+                if self._dead_workers:
+                    # a dead worker strands its barrier partners: no
+                    # progress is coming, so bail out now, not at timeout
+                    break
                 self.work_cv.wait(timeout=0.05)
+                if self.supervisor is not None:
+                    step += 1
+                    self.supervisor.check(step)
+            if self.outstanding > 0:
+                self.metrics.errors.append(
+                    f"drain incomplete: {self.outstanding} tasks still "
+                    f"outstanding"
+                    + (f", workers {sorted(self._dead_workers)} dead"
+                       if self._dead_workers else ""))
             self.stop = True
             self.work_cv.notify_all()
+        for t in self._timers:
+            t.cancel()              # pending retry backoffs die with the run
         for th in self._threads:
             th.join(timeout=5.0)
         if self._timer is not None:
@@ -400,6 +668,13 @@ class ThreadedRuntime:
             # on stop) *before* end_run clears the availability mask —
             # otherwise it would re-poison sched.live for a later run
             self._timer.join(timeout=5.0)
+        if self._straggler is not None:
+            self._straggler.join(timeout=5.0)
+        if self.supervisor is not None:
+            self.supervisor.check(step + 1)
+            self.metrics.recovery_events.extend(
+                f"{e.kind}@{e.step}: {e.detail}"
+                for e in self.supervisor.events)
         self.kernel.end_run()
         self.metrics.finish(self._now())
         self.metrics.preempt_events = self.preempt_events
@@ -416,7 +691,12 @@ class ThreadedRuntime:
 def run_threaded(dag: DAG, scheduler: Scheduler, *,
                  slowdown: Optional[dict[int, float]] = None,
                  preemption: Optional[PreemptionModel] = None,
+                 faults: Optional[FaultModel] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
+                 supervisor=None,
                  timeout: float = 120.0) -> RunMetrics:
-    rt = ThreadedRuntime(scheduler, slowdown=slowdown, preemption=preemption)
+    rt = ThreadedRuntime(scheduler, slowdown=slowdown, preemption=preemption,
+                         faults=faults, recovery=recovery,
+                         supervisor=supervisor)
     rt.submit(dag)
     return rt.run(timeout=timeout)

@@ -123,13 +123,14 @@ from typing import Iterable, Optional
 import numpy as np
 
 from .dag import DAG
+from .faults import FaultModel, FaultState, RecoveryPolicy
 from .interference import BackgroundApp, SpeedProfile, SpeedProfileBase
 from .lifecycle import SchedulingKernel, split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
 from .preemption import PreemptionModel
 from .schedulers import Scheduler
-from .task import PARTITION_BW, Task
+from .task import PARTITION_BW, Priority, Task
 
 _EPS = 1e-12
 _NO_DEMAND = (0.0, 0)
@@ -145,7 +146,7 @@ _COMPACT_MIN_STALE = 64
 class _Running:
     __slots__ = ("task", "place", "remaining", "rate", "base", "version",
                  "cores", "domain", "mem_s", "cap", "bw_contrib", "bwkey",
-                 "work_assigned")
+                 "work_assigned", "fault", "slow_mult", "token")
 
     def __init__(self, task: Task, place: ExecutionPlace, remaining: float,
                  domain: str, cap: float, bwkey: int):
@@ -162,6 +163,13 @@ class _Running:
         self.cap = cap
         self.bw_contrib = task.type.bw_demand * place.width
         self.bwkey = bwkey          # interned (domain, cap, mem_s) id; -1 = bw-insensitive
+        # fault-injection state (see ``core/faults.py``): the armed fault
+        # for this execution (``remaining`` is truncated to its strike
+        # point so the strike is an ordinary finish event), the fail-slow
+        # rate multiplier in force, and the straggle-event guard token
+        self.fault = None
+        self.slow_mult = 1.0
+        self.token = 0
 
 
 class Simulator:
@@ -169,6 +177,8 @@ class Simulator:
                  speed: Optional[SpeedProfileBase] = None,
                  background: Iterable[BackgroundApp] = (),
                  preemption: Optional[PreemptionModel] = None,
+                 faults: Optional[FaultModel] = None,
+                 recovery: Optional[RecoveryPolicy] = None,
                  horizon: float = 1e6):
         self.sched = scheduler
         self.topo = scheduler.topology
@@ -233,6 +243,18 @@ class Simulator:
         self.preempt_events = 0             # revoke edges applied
         self.tasks_preempted = 0            # task executions cut short
         self.work_lost = 0.0                # discarded progress (work-s)
+
+        # fault-injection state (inert without an *enabled* FaultModel — a
+        # zero-probability model is normalized away here, so attaching one
+        # is literally the None path; the golden pins check this)
+        if faults is not None and not faults.enabled:
+            faults = None
+        self.faults = faults
+        self._fx = (FaultState(faults, recovery or RecoveryPolicy())
+                    if faults is not None else None)
+        self._pending_retry: dict[int, Task] = {}   # tid -> task in backoff
+        self._notice_token: dict[int, int] = {}     # pidx -> live notice event
+        self._tok = itertools.count(1)              # straggle/notice guards
         self._recompute_bg()
 
     # ------------------------------------------------------------------ util
@@ -358,6 +380,8 @@ class Simulator:
                     f = bw_factor[key] = self._bw_factor(key)
                 if f != 1.0:
                     rate *= f
+            if rec.slow_mult != 1.0:
+                rate *= rec.slow_mult   # fail-slow degradation in force
             if rate < 1e-9:
                 rate = 1e-9
             if rec.rate < 0 or abs(rate - rec.rate) > _EPS * max(rate, rec.rate):
@@ -407,6 +431,11 @@ class Simulator:
                 # rate * 1.0 is an exact identity for positive floats, so
                 # multiplying the insensitive lanes too changes nothing
                 rate = rate * np.where(sens, fmap[np.maximum(kid, 0)], 1.0)
+        if self._fx is not None:
+            # fail-slow multipliers; x1.0 lanes are exact identities, so
+            # this stays bit-for-bit interchangeable with the Python path
+            rate = rate * np.fromiter((r.slow_mult for r in recs),
+                                      np.float64, count=n)
         np.maximum(rate, 1e-9, out=rate)
         old = np.fromiter((r.rate for r in recs), np.float64, count=n)
         changed = (old < 0.0) | (np.abs(rate - old)
@@ -457,6 +486,10 @@ class Simulator:
         self._enqueue(task, self.kernel.requeue_displaced(task))
 
     def submit(self, dag: DAG):
+        if self._fx is not None:
+            # fault sequence numbers follow the DAG's deterministic BFS
+            # order, shared with the threaded engine (cross-engine parity)
+            self._fx.register_dag(dag)
         for root in dag.roots:
             self._wake(root, waker_core=0)
 
@@ -486,6 +519,12 @@ class Simulator:
             self._demand[dom] = _NO_DEMAND if k <= 1 else \
                 (d - rec.bw_contrib, k - 1)
             self._dirty_domains.add(dom)
+        if rec.fault is not None:
+            # an armed fault truncated ``remaining`` to its strike point;
+            # restore the true outstanding work before checkpoint /
+            # work-lost accounting (the re-execution re-draws the fault)
+            rec.remaining += rec.work_assigned * (1.0 - rec.fault.frac)
+            rec.fault = None
         if self._ckpt and rec.work_assigned > 0.0:
             # completed fraction of this assignment carries over (penalty
             # work counts as progress too — a resumed-then-preempted task
@@ -507,15 +546,26 @@ class Simulator:
         self.preempt_events += 1
         self._set_availability()
         displaced: list[Task] = []
-        # 1) running tasks (a place never spans partitions, so every member
-        #    core of an affected task lies in ``part``; dedup via core scan)
         seen: set[int] = set()
-        for c in part.cores:
-            rec = self.core_busy[c]
-            if rec is not None and rec.task.tid not in seen:
-                seen.add(rec.task.tid)
-                self._preempt_running(rec)
-                displaced.append(rec.task)
+        notice = self.preemption.notice if self.preemption is not None else 0.0
+        if notice > 0.0:
+            # 1) notice window: running tasks keep executing and are only
+            #    preempted at its expiry (token-guarded — a restore before
+            #    the expiry lets them run to completion, and a stale event
+            #    from an earlier episode can never fire into a later one)
+            token = next(self._tok)
+            self._notice_token[pidx] = token
+            self._push_event(self.now + notice, "notice", pidx, token)
+        else:
+            # 1) running tasks (a place never spans partitions, so every
+            #    member core of an affected task lies in ``part``; dedup
+            #    via core scan)
+            for c in part.cores:
+                rec = self.core_busy[c]
+                if rec is not None and rec.task.tid not in seen:
+                    seen.add(rec.task.tid)
+                    self._preempt_running(rec)
+                    displaced.append(rec.task)
         # 2) placed-but-unstarted tasks in the partition's AQs (their place
         #    dies with the partition; no progress to account)
         seen.clear()
@@ -544,6 +594,7 @@ class Simulator:
         """Apply one restore edge: the partition's cores re-enter the
         dispatch loop (empty-handed — they steal their way back)."""
         self._down_parts.discard(pidx)
+        self._notice_token.pop(pidx, None)   # pending notice expiry is void
         self._set_availability()
         for c in self.topo.partitions[pidx].cores:
             self._core_up[c] = True
@@ -552,25 +603,35 @@ class Simulator:
     # -------------------------------------------------------------- dispatch
     def _try_assign_from_wsq(self, core: int) -> bool:
         """Pop own WSQ (priority-aware, see ``WorkQueues.pop_local``) and
-        place the task into AQs."""
-        task = self.queues.pop_local(core)
-        if task is None:
-            return False
-        self._place_into_aqs(task, core)
-        return True
+        place the task into AQs.  The losing copy of a hedged pair may be
+        parked in a WSQ when the winner commits; it is dropped — and
+        resolved — here rather than removed eagerly."""
+        while True:
+            task = self.queues.pop_local(core)
+            if task is None:
+                return False
+            if self._fx is not None and (task.hedge_of or task).committed:
+                self._outstanding -= 1      # hedge loser resolves at pop
+                continue
+            self._place_into_aqs(task, core)
+            return True
 
     def _try_steal(self, thief: int) -> bool:
         """Steal from the WSQ with the most stealable tasks (paper step 3),
         FIFO end; re-run the place search at the thief (steps 4-5).  Victim
         selection reads O(cores) queue lengths; maxima tie-break uniformly
         at random, as the shuffled scan did."""
-        victim = self.queues.pick_victim(thief, self.rng)
-        if victim < 0:
-            return False
-        t = self.queues.steal_pop(victim)     # oldest stealable
-        self.kernel.on_steal(t)               # stolen -> decision redone
-        self._place_into_aqs(t, thief)
-        return True
+        while True:
+            victim = self.queues.pick_victim(thief, self.rng)
+            if victim < 0:
+                return False
+            t = self.queues.steal_pop(victim)     # oldest stealable
+            if self._fx is not None and (t.hedge_of or t).committed:
+                self._outstanding -= 1      # hedge loser resolves at pop
+                continue
+            self.kernel.on_steal(t)               # stolen -> decision redone
+            self._place_into_aqs(t, thief)
+            return True
 
     def _place_into_aqs(self, task: Task, worker_core: int):
         place = self.kernel.choose_place(task, worker_core)
@@ -626,6 +687,8 @@ class Simulator:
             d, k = self._demand.get(dom, _NO_DEMAND)
             self._demand[dom] = (d + rec.bw_contrib, k + 1)
             self._dirty_domains.add(dom)
+        if self._fx is not None:
+            self._on_start_faults(rec)
         return True
 
     def _dispatch(self):
@@ -664,9 +727,192 @@ class Simulator:
                 if not self._try_steal(c):
                     self._starving.add(c)
 
+    # ---------------------------------------------------------------- faults
+    def _on_start_faults(self, rec: _Running):
+        """Arm this execution's injected fault — ``remaining`` is truncated
+        to the strike point, so the strike is an ordinary finish event —
+        and schedule the straggler check at ``k`` x the PTT expectation
+        (token-guarded: commits and re-placements invalidate it).  Hedge
+        duplicates run clean: they exist to escape a degraded place."""
+        task = rec.task
+        if task.hedge_of is not None:
+            return
+        fault = self._fx.draw(task, self.now)
+        if fault is not None:
+            rec.fault = fault
+            rec.remaining = rec.work_assigned * fault.frac
+        exp = self.kernel.expected_duration(task, rec.place)
+        if exp > 0.0:
+            rec.token = next(self._tok)
+            self._push_event(self.now + self._fx.policy.straggler_k * exp,
+                             "straggle", task.tid, rec.token)
+
+    def _kill_running(self, rec: _Running, event_outstanding: bool):
+        """Remove an execution without committing (fault death or hedge-
+        loser cancel): release its cores — marked, unlike a revocation's,
+        they are still up and must re-enter dispatch — its bandwidth
+        demand, and its finish event."""
+        if event_outstanding and rec.rate >= 0:
+            self._stale += 1
+        rec.version += 1
+        del self.running[rec.task.tid]
+        for c in rec.cores:
+            self.core_busy[c] = None
+            self._mark(c)
+        if rec.bw_contrib > 0.0:
+            dom = rec.domain
+            d, k = self._demand[dom]
+            self._demand[dom] = _NO_DEMAND if k <= 1 else \
+                (d - rec.bw_contrib, k - 1)
+            self._dirty_domains.add(dom)
+
+    def _on_fault_trigger(self, rec: _Running):
+        """The finish event at an armed fault's strike point fired."""
+        fault = rec.fault
+        if fault.kind == "slow":
+            # the place silently degrades: the rest of the work proceeds
+            # at 1/factor of the healthy rate; nothing fails, so only the
+            # straggler detector can see it
+            rec.fault = None
+            self.metrics.faults_failslow += 1
+            rec.slow_mult = 1.0 / fault.factor
+            rec.remaining = rec.work_assigned * (1.0 - fault.frac)
+            rec.rate = -1.0         # re-derived (with slow_mult) on refresh
+            rec.version += 1
+            self._fresh.append(rec)
+            return
+        self._fail_running(rec)
+
+    def _fail_running(self, rec: _Running):
+        """Fail-stop strike: the execution dies.  Penalize the place in
+        the PTT, then retry after a seeded backoff (the task re-enters the
+        kernel's ``requeue_displaced`` placement at the retry event) or
+        fail permanently once the attempt budget is spent."""
+        task = rec.task
+        pol = self._fx.policy
+        self.metrics.faults_failstop += 1
+        executed = rec.work_assigned * rec.fault.frac - rec.remaining
+        self.metrics.work_lost_faults_s += max(executed, 0.0)
+        elapsed = self.now - task.t_start
+        rec.fault = None
+        self._kill_running(rec, event_outstanding=False)
+        self.kernel.fault_feedback(task, rec.place, elapsed, pol.fail_penalty)
+        task.fault_count += 1
+        if task.hedge_dup is not None and not task.committed:
+            # the original died but its speculative duplicate is still in
+            # flight — leave recovery to the copy on the healthier place
+            self._outstanding -= 1
+            return
+        if task.fault_count > pol.max_retries:
+            self.metrics.failed_tasks += 1
+            self.metrics.errors.append(
+                f"task {task.tid} ({task.type.name}) failed permanently "
+                f"after {task.fault_count - 1} retries")
+            self._outstanding -= 1
+            return
+        self.metrics.retries += 1
+        self._pending_retry[task.tid] = task
+        self._push_event(self.now + self._fx.backoff(task), "retry", task.tid)
+
+    def _on_straggler(self, rec: _Running):
+        """The execution outlived ``k`` x its PTT expectation.  Flag it;
+        if hedging is on and the task is HIGH, launch a speculative
+        duplicate on the PTT-best place sharing no core with the
+        straggler (first commit wins, the loser is cancelled)."""
+        task = rec.task
+        self.metrics.stragglers += 1
+        pol = self._fx.policy
+        if (not pol.hedge or task.priority != Priority.HIGH
+                or task.hedge_launched or task.committed):
+            return
+        place = self.kernel.hedge_place(task, set(rec.cores),
+                                        self._fx.hedge_rng)
+        if place is None:
+            return
+        task.hedge_launched = True
+        dup = Task(type=task.type, priority=task.priority,
+                   payload=task.payload)
+        dup.hedge_of = task
+        dup.bound_place = place     # honored by place_on_dequeue everywhere
+        task.hedge_dup = dup
+        dup.t_ready = self.now
+        self.metrics.hedges_launched += 1
+        self._outstanding += 1
+        self._place_into_aqs(dup, place.leader)
+
+    def _cancel_copy(self, task: Task):
+        """Reap the losing copy of a hedged pair: kill it if running, drop
+        a pending retry or an AQ placement; a WSQ entry is dropped (and
+        resolved) lazily at the next pop.  Each copy resolves exactly
+        once."""
+        rec = self.running.get(task.tid)
+        if rec is not None:
+            executed = rec.work_assigned - rec.remaining
+            if rec.fault is not None:
+                executed = rec.work_assigned * rec.fault.frac - rec.remaining
+                rec.fault = None
+            self.metrics.work_hedged_s += max(executed, 0.0)
+            self._kill_running(rec, event_outstanding=True)
+            self._outstanding -= 1
+            return
+        if self._pending_retry.pop(task.tid, None) is not None:
+            self._outstanding -= 1
+            return
+        for dq in self.aq:
+            for r in dq:
+                if r.task is task:
+                    for c in r.cores:
+                        try:
+                            self.aq[c].remove(r)
+                        except ValueError:
+                            pass
+                        self._mark(c)   # freed AQ heads may unblock members
+                    self._outstanding -= 1
+                    return
+
+    def _suppress_commit(self, rec: _Running):
+        """A losing copy ran to completion after the logical task had
+        already committed (normally unreachable — cancellation reaps
+        losers first; kept so the invariants hold if one slips through)."""
+        self.metrics.work_hedged_s += max(rec.work_assigned - rec.remaining,
+                                          0.0)
+        self._kill_running(rec, event_outstanding=False)
+        self._outstanding -= 1
+
+    def _notice_expire(self, pidx: int):
+        """The revocation notice window closed with the partition still
+        down: preempt whatever is still running there (work finished
+        inside the window committed normally — that is the point)."""
+        del self._notice_token[pidx]
+        part = self.topo.partitions[pidx]
+        displaced: list[Task] = []
+        seen: set[int] = set()
+        for c in part.cores:
+            rec = self.core_busy[c]
+            if rec is not None and rec.task.tid not in seen:
+                seen.add(rec.task.tid)
+                self._preempt_running(rec)
+                displaced.append(rec.task)
+        high, low = split_by_priority(displaced)
+        for task in high:
+            self._requeue(task)
+        for task in low:
+            self._requeue(task)
+
     # --------------------------------------------------------------- commit
     def _commit(self, rec: _Running):
         task = rec.task
+        if self._fx is not None:
+            logical = task.hedge_of or task
+            if logical.committed:
+                self._suppress_commit(rec)  # the other copy already won
+                return
+            logical.committed = True
+            if task.hedge_of is not None:
+                self.metrics.hedge_wins += 1
+                self._cancel_copy(logical)          # the original lost
+            elif task.hedge_dup is not None:
+                self._cancel_copy(task.hedge_dup)   # the duplicate lost
         task.t_end = self.now
         for c in rec.cores:
             self.core_busy[c] = None
@@ -689,14 +935,17 @@ class Simulator:
                                                 task.t_end - task.t_start)
         self.kernel.ptt_feedback(task, rec.place, observed)
 
+        # A winning duplicate commits on behalf of its logical task:
+        # successors and the record's sojourn anchor come from it.
+        src = task if task.hedge_of is None else task.hedge_of
         self.metrics.record(TaskRecord(
             type_name=task.type.name, priority=int(task.priority),
             leader=rec.place.leader, width=rec.place.width,
-            t_ready=task.t_ready, t_start=task.t_start, t_end=task.t_end))
+            t_ready=src.t_ready, t_start=task.t_start, t_end=task.t_end))
 
         # Wake dependents; dynamic DAG growth.
         leader = rec.place.leader
-        for ready in self.kernel.commit_successors(task):
+        for ready in self.kernel.commit_successors(src):
             self._wake(ready, leader)
 
     # ------------------------------------------------------------------ run
@@ -743,7 +992,27 @@ class Simulator:
                     self._push_event(self.now + rec.remaining / rec.rate,
                                      "finish", tid, rec.version)
                     continue
-                self._commit(rec)
+                if rec.fault is not None:
+                    self._on_fault_trigger(rec)    # armed strike point
+                else:
+                    self._commit(rec)
+            elif kind == "straggle":
+                rec = running.get(tid)
+                if rec is None or rec.token != version:
+                    continue       # execution already ended or re-placed
+                self._advance(t)
+                self._on_straggler(rec)
+            elif kind == "retry":
+                retry_task = self._pending_retry.pop(tid, None)
+                if retry_task is None:
+                    continue       # cancelled while in backoff
+                self._advance(t)
+                self._requeue(retry_task)
+            elif kind == "notice":
+                if self._notice_token.get(tid) != version:
+                    continue       # partition restored (or re-revoked)
+                self._advance(t)
+                self._notice_expire(tid)
             else:                  # speed / bg / revoke / restore breakpoint
                 self._advance(t)
                 if kind == "speed":
@@ -777,8 +1046,11 @@ def simulate(dag: DAG, scheduler: Scheduler, *,
              speed: Optional[SpeedProfileBase] = None,
              background: Iterable[BackgroundApp] = (),
              preemption: Optional[PreemptionModel] = None,
+             faults: Optional[FaultModel] = None,
+             recovery: Optional[RecoveryPolicy] = None,
              horizon: float = 1e6) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,
-                    preemption=preemption, horizon=horizon)
+                    preemption=preemption, faults=faults, recovery=recovery,
+                    horizon=horizon)
     sim.submit(dag)
     return sim.run()

@@ -122,6 +122,22 @@ class Task:
     # always None in the DES, which preempts running tasks directly).
     revoke_signal: Optional[object] = None
 
+    # Fault-injection / recovery state (see ``repro.core.faults``; all
+    # inert without a FaultModel attached).  ``fault_seq`` is the task's
+    # deterministic position in the fault draw stream (assigned by
+    # ``FaultState.register_dag``); ``fault_count`` counts failed
+    # executions (injected fail-stops and real payload exceptions alike)
+    # and doubles as the retry-attempt index.  A hedged HIGH task and its
+    # speculative duplicate point at each other via ``hedge_dup`` /
+    # ``hedge_of``; ``committed`` marks the logical task's first commit
+    # (first copy wins, the other is suppressed).
+    fault_seq: Optional[int] = None
+    fault_count: int = 0
+    hedge_of: Optional["Task"] = None      # set on the duplicate only
+    hedge_dup: Optional["Task"] = None     # set on the original only
+    hedge_launched: bool = False
+    committed: bool = False
+
     def add_child(self, child: "Task") -> "Task":
         self.children.append(child)
         child.n_deps += 1

@@ -26,6 +26,16 @@ Two submission modes:
   interference shows up in the TTFT tail instead of being hidden by
   batch submission.  Per-request latency percentiles land in
   ``RunMetrics.request_latency_stats()``.
+
+Graceful degradation (``deadline_s`` on :meth:`ServingEngine.submit`):
+requests carry an optional deadline.  Admission control rejects a request
+outright when even a PTT-best-case estimate (own chain + current backlog)
+misses the deadline — the fleet never queues work that cannot finish in
+time.  Once admitted, queued LOW decode tasks whose deadline has already
+passed are *shed* (dropped, request finalized truncated) instead of
+executed, so an overloaded fleet degrades output length rather than
+collapsing every latency tail.  ``rejected`` / ``shed`` /
+``deadline_miss`` counters land in the same latency stats.
 """
 from __future__ import annotations
 
@@ -56,6 +66,9 @@ class Request:
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    deadline_s: float = 0.0        # 0 = no deadline
+    rejected: bool = False         # refused at admission, nothing ran
+    shed: bool = False             # decode chain truncated past deadline
 
 
 def _bucket(n: int) -> int:
@@ -72,13 +85,16 @@ class ServingEngine:
                  scheduler: str = "DAM-P", seed: int = 0,
                  max_len: int = 256,
                  slowdown: Optional[dict[int, float]] = None,
-                 preemption: Optional[PreemptionModel] = None):
+                 preemption: Optional[PreemptionModel] = None,
+                 faults=None, recovery=None, supervisor=None):
         self.cfg = cfg
         self.max_len = max_len
         self.params = init_params(cfg, jax.random.PRNGKey(seed))
         self.sched = make_scheduler(scheduler, topology, seed=seed)
         self.runtime = ThreadedRuntime(self.sched, slowdown=slowdown,
-                                       preemption=preemption)
+                                       preemption=preemption, faults=faults,
+                                       recovery=recovery,
+                                       supervisor=supervisor)
         self._prefill = jax.jit(
             lambda p, t: prefill(p, cfg, t, max_len),
             static_argnames=())
@@ -101,11 +117,34 @@ class ServingEngine:
         req.out_tokens.append(nxt)
         return state, nxt
 
+    # -- graceful degradation ----------------------------------------------------
+    def _ptt_floor(self, task_type: TaskType) -> float:
+        """Best-case per-task seconds for ``task_type``: the smallest
+        positive PTT expectation across the topology's places, falling
+        back to the type's best serial-time prior while the table is
+        still unexplored."""
+        tbl = self.sched.ptt.for_type(task_type.name)
+        seen = [tbl.get(p) for p in self.sched.topology.places()]
+        seen = [v for v in seen if v > 0.0]
+        return min(seen) if seen else min(task_type.serial_time.values())
+
+    def _admission_estimate(self, pre_type: TaskType, dec_type: TaskType,
+                            max_new_tokens: int) -> float:
+        """Optimistic completion-time estimate used by deadline admission:
+        the request's own prefill + decode chain at PTT-best speed, plus
+        queueing delay approximated by the current backlog at decode-floor
+        cost each.  Optimistic by construction — a reject means even the
+        best case misses, so nothing that could finish is refused."""
+        dec_floor = self._ptt_floor(dec_type)
+        own = self._ptt_floor(pre_type) + max(max_new_tokens - 1, 0) * dec_floor
+        return own + self.runtime.outstanding * dec_floor
+
     # -- request -> dynamic DAG --------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 8,
+               deadline_s: float = 0.0) -> Request:
         self._rid += 1
         req = Request(self._rid, prompt.astype(np.int32), max_new_tokens,
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(), deadline_s=deadline_s)
         self.requests[req.rid] = req
 
         pre_type = TaskType(
@@ -115,6 +154,14 @@ class ServingEngine:
             "decode",
             serial_time={p.kind: 1e-4 for p in self.sched.topology.partitions})
 
+        if deadline_s > 0.0 and self._admission_estimate(
+                pre_type, dec_type, max_new_tokens) > deadline_s:
+            # deadline-aware admission: refuse rather than burn fleet time
+            # on a request that cannot finish in time (nothing is queued)
+            req.rejected = True
+            req.t_first_token = req.t_done = req.t_submit
+            return req
+
         ctx: dict = {}
 
         def prefill_payload(width: int, _req=req):
@@ -122,13 +169,21 @@ class ServingEngine:
 
         def make_decode_task(step_idx: int) -> Task:
             def decode_payload(width: int, _req=req):
+                # load shedding: queued LOW decode work whose deadline has
+                # already passed is dropped instead of executed — the
+                # request finalizes truncated and the fleet time goes to
+                # requests that can still meet theirs
+                if (_req.deadline_s > 0.0 and time.perf_counter()
+                        > _req.t_submit + _req.deadline_s):
+                    _req.shed = True
+                    return
                 ctx["state"], ctx["tok"] = self._run_decode(
                     _req, ctx["state"], ctx["tok"])
 
             t = Task(dec_type, priority=Priority.LOW, payload=decode_payload)
 
             def on_commit(_task, _i=step_idx, _req=req):
-                if _i + 1 < _req.max_new_tokens - 1:
+                if not _req.shed and _i + 1 < _req.max_new_tokens - 1:
                     return [make_decode_task(_i + 1)]
                 _req.t_done = time.perf_counter()
                 return []
@@ -159,19 +214,21 @@ class ServingEngine:
 
     def run_open_loop(self, prompts: Sequence[np.ndarray], *,
                       rate_rps: float, max_new_tokens: int = 8,
-                      arrival_seed: int = 0,
+                      arrival_seed: int = 0, deadline_s: float = 0.0,
                       timeout: float = 300.0):
         """Open-loop serving: start the runtime, then submit one request
         per prompt with Poisson inter-arrival gaps (seeded ``expovariate``
         at ``rate_rps`` requests/s) while earlier requests execute.
-        Returns the :class:`RunMetrics` with per-request latency records
-        attached."""
+        ``deadline_s`` > 0 puts every request under that deadline
+        (admission rejection + decode shedding).  Returns the
+        :class:`RunMetrics` with per-request latency records attached."""
         arrivals = random.Random(f"serve-arrival:{arrival_seed}")
         self.runtime.start()
         for i, prompt in enumerate(prompts):
             if i:
                 time.sleep(arrivals.expovariate(rate_rps))
-            self.submit(np.asarray(prompt), max_new_tokens=max_new_tokens)
+            self.submit(np.asarray(prompt), max_new_tokens=max_new_tokens,
+                        deadline_s=deadline_s)
         m = self.runtime.drain(timeout=timeout)
         self._finalize_requests()
         return m
@@ -183,10 +240,12 @@ class ServingEngine:
         metrics = self.runtime.metrics
         seen = {r.rid for r in metrics.request_records}
         for r in self.requests.values():
-            if r.t_done > 0 and r.rid not in seen:
+            if (r.t_done > 0 or r.rejected) and r.rid not in seen:
                 metrics.record_request(RequestRecord(
                     rid=r.rid, t_submit=r.t_submit,
-                    t_first_token=r.t_first_token, t_done=r.t_done))
+                    t_first_token=r.t_first_token, t_done=r.t_done,
+                    deadline_s=r.deadline_s, rejected=r.rejected,
+                    shed=r.shed))
 
     def latency_stats(self) -> dict:
         """Flat-key view over ``RunMetrics.request_latency_stats()`` (one
@@ -195,12 +254,19 @@ class ServingEngine:
         stats = self.runtime.metrics.request_latency_stats()
         if not stats:
             return {}
-        return {
+        out = {
             "completed": stats["completed"],
-            "ttft_ms_mean": stats["ttft_ms"]["mean"],
-            "ttft_ms_p50": stats["ttft_ms"]["p50"],
-            "ttft_ms_p95": stats["ttft_ms"]["p95"],
-            "ttft_ms_p99": stats["ttft_ms"]["p99"],
-            "e2e_ms_mean": stats["e2e_ms"]["mean"],
-            "e2e_ms_p99": stats["e2e_ms"]["p99"],
+            "rejected": stats["rejected"],
+            "shed": stats["shed"],
+            "deadline_miss": stats["deadline_miss"],
         }
+        if "ttft_ms" in stats:      # at least one request actually ran
+            out.update({
+                "ttft_ms_mean": stats["ttft_ms"]["mean"],
+                "ttft_ms_p50": stats["ttft_ms"]["p50"],
+                "ttft_ms_p95": stats["ttft_ms"]["p95"],
+                "ttft_ms_p99": stats["ttft_ms"]["p99"],
+                "e2e_ms_mean": stats["e2e_ms"]["mean"],
+                "e2e_ms_p99": stats["e2e_ms"]["p99"],
+            })
+        return out

@@ -14,8 +14,9 @@ import time
 
 import pytest
 
-from repro.core import (SpeedProfile, make_scheduler, matmul_type,
-                        run_threaded, simulate, synthetic_dag, tx2)
+from repro.core import (RecoveryPolicy, SpeedProfile, make_scheduler,
+                        matmul_type, run_threaded, simulate, synthetic_dag,
+                        task_faults, tx2)
 
 SLOW_CORE = 0
 FACTOR = 5.0
@@ -84,6 +85,28 @@ def test_placement_histograms_agree(name):
     # overall load on the interfered core agrees within tolerance
     assert abs(_work_fraction_on(des, SLOW_CORE)
                - _work_fraction_on(thr, SLOW_CORE)) < 0.25
+
+
+def test_fault_draw_parity():
+    """Constant-rate fault draws are a pure function of (model seed, BFS
+    fault_seq, attempt count) — the clock never enters — so both engines
+    must inject the exact same fail-stops and perform the same retries
+    on the same DAG shape."""
+    des = simulate(_dag(), make_scheduler("DAM-C", tx2(), seed=0),
+                   faults=task_faults(seed=3, p_fail=0.25),
+                   recovery=RecoveryPolicy(backoff_base=1e-5,
+                                           backoff_cap=1e-4))
+    thr = run_threaded(_dag(payload_s=1e-3),
+                       make_scheduler("DAM-C", tx2(), seed=0),
+                       faults=task_faults(seed=3, p_fail=0.25),
+                       recovery=RecoveryPolicy(backoff_base=1e-3,
+                                               backoff_cap=5e-3),
+                       timeout=120)
+    assert des.n_tasks == thr.n_tasks == N_TASKS
+    assert des.faults_failstop == thr.faults_failstop > 0
+    assert des.retries == thr.retries == des.faults_failstop
+    assert des.failed_tasks == thr.failed_tasks == 0
+    assert not des.errors and not thr.errors
 
 
 def test_dam_c_learns_same_relative_speeds():

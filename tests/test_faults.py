@@ -1,0 +1,230 @@
+"""Fault injection + criticality-aware recovery (``repro.core.faults``).
+
+Covers the tentpole invariants: a disabled model is bit-identical to no
+model at all (the zero-cost claim, beyond the golden pins), fail-stop
+retries drive every task to commit, retry budgets exhaust into recorded
+permanent failures instead of hangs, fail-slow + hedging beats retry-only
+on the same seeds, MMPP storms cluster faults, and the DES preemption
+notice window is bit-identical at ``notice=0``.  Threaded-engine
+regressions (payload-exception hang, heartbeat wiring) live here too.
+"""
+import time
+
+import pytest
+
+from repro.core import (DAG, Priority, RecoveryPolicy, SpeedProfile, Task,
+                        TaskType, corun_chain, make_scheduler, matmul_type,
+                        mmpp_faults, pod_slice_preemption, run_threaded,
+                        simulate, synthetic_dag, task_faults, tx2)
+from repro.runtime.ft import HeartbeatMonitor, Supervisor
+
+N_TASKS = 240
+
+
+def _run(name="DAM-C", *, faults=None, recovery=None, preemption=None):
+    """The golden-schedule workload (interference + DVFS square wave),
+    with optional fault/preemption models on top."""
+    sched = make_scheduler(name, tx2(), seed=7)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=2, total_tasks=N_TASKS)
+    speed = SpeedProfile(6).add_square_wave((0, 1), period=0.004, lo=0.17,
+                                            t_end=0.2)
+    return simulate(dag, sched, background=[corun_chain(tt, core=0)],
+                    speed=speed, faults=faults, recovery=recovery,
+                    preemption=preemption)
+
+
+# -- zero-cost / bit-identity -------------------------------------------------
+
+def test_disabled_model_bit_identical_to_none():
+    """A FaultModel with all probabilities zero IS the no-model path: same
+    makespan to the last bit, same placement histogram, zero counters —
+    attaching the subsystem costs nothing until it injects."""
+    base = _run(faults=None)
+    off = _run(faults=task_faults(seed=3), recovery=RecoveryPolicy(hedge=True))
+    assert off.makespan == base.makespan
+    assert off.placement_counts() == base.placement_counts()
+    assert off.fault_summary() == base.fault_summary()
+    assert off.faults_failstop == 0 and off.hedges_launched == 0
+
+
+def test_fault_runs_are_deterministic():
+    """Same seeds -> identical run, faults and hedges included."""
+    kw = dict(faults=task_faults(seed=5, p_fail=0.1, p_slow=0.15,
+                                 slow_factor=5.0),
+              recovery=RecoveryPolicy(hedge=True, backoff_base=1e-4,
+                                      backoff_cap=1e-3))
+    a, b = _run(**kw), _run(**kw)
+    assert a.makespan == b.makespan
+    assert a.placement_counts() == b.placement_counts()
+    assert a.fault_summary() == b.fault_summary()
+
+
+# -- fail-stop + retry --------------------------------------------------------
+
+def test_failstop_retries_to_completion():
+    m = _run(faults=task_faults(seed=2, p_fail=0.2),
+             recovery=RecoveryPolicy(backoff_base=1e-4, backoff_cap=1e-3))
+    assert m.n_tasks == N_TASKS                 # every task still commits
+    assert m.faults_failstop > 0
+    assert m.retries == m.faults_failstop       # budget never exhausted
+    assert m.failed_tasks == 0 and not m.errors
+    assert m.work_lost_faults_s > 0.0
+    # injected faults cost time: strictly slower than the clean run
+    assert m.makespan > _run().makespan
+
+
+def test_retry_budget_exhausts_into_recorded_failure():
+    """max_retries=0: first fail-stop is permanent — the run terminates
+    (no hang on the un-commitable task) and reports it honestly."""
+    m = _run(faults=task_faults(seed=2, p_fail=0.2),
+             recovery=RecoveryPolicy(max_retries=0))
+    assert m.failed_tasks > 0
+    assert m.n_tasks < N_TASKS                  # failed tasks never commit
+    assert any("permanently" in e for e in m.errors)
+    assert m.retries == 0
+
+
+# -- fail-slow + hedging ------------------------------------------------------
+
+def test_failslow_hedging_beats_retry_only():
+    """The acceptance claim at test scale: on the same fail-slow seeds
+    over a heterogeneous fleet (where a PTT-better alternative place
+    exists to duplicate onto), speculative duplicates for flagged HIGH
+    stragglers shorten the run.  On a small saturated box hedging can
+    *lose* — duplicates compete for scarce cores — which is exactly why
+    the benchmark sweeps a clean x hedge column too."""
+    from repro.core import tpu_pod_slices
+
+    def run_hetero(hedge):
+        sched = make_scheduler("DAM-C",
+                               tpu_pod_slices(4, 8, kinds=("pod", "pod_v4",
+                                                           "pod_v4",
+                                                           "pod_v4")),
+                               seed=7)
+        dag = synthetic_dag(matmul_type(64), parallelism=8,
+                            total_tasks=N_TASKS)
+        return simulate(dag, sched,
+                        faults=task_faults(seed=4, p_slow=0.3,
+                                           slow_factor=8.0),
+                        recovery=RecoveryPolicy(hedge=hedge))
+
+    plain = run_hetero(False)
+    hedged = run_hetero(True)
+    assert plain.faults_failslow > 0 and plain.hedges_launched == 0
+    assert hedged.stragglers > 0
+    assert hedged.hedges_launched > 0
+    assert hedged.hedge_wins > 0
+    assert hedged.work_hedged_s > 0.0           # losing copies are accounted
+    assert hedged.makespan < plain.makespan
+    assert hedged.n_tasks == plain.n_tasks == N_TASKS
+
+
+def test_mmpp_storms_inject():
+    m = _run(faults=mmpp_faults(seed=6, t_end=1.0, mean_calm=0.02,
+                                mean_storm=0.01, p_fail=0.02, p_slow=0.03,
+                                slow_factor=5.0),
+             recovery=RecoveryPolicy(backoff_base=1e-4, backoff_cap=1e-3))
+    assert m.n_tasks == N_TASKS
+    assert m.faults_failstop + m.faults_failslow > 0
+
+
+# -- preemption notice window -------------------------------------------------
+
+def test_notice_zero_bit_identical():
+    pre = lambda notice: pod_slice_preemption(
+        tx2(), seed=11, t_end=0.2, mean_up=0.004, mean_down=0.002,
+        notice=notice)
+    base = _run(preemption=pre(0.0))
+    assert base.preempt_events > 0              # revokes land mid-run
+    # the notice=0 path must not even differ in float ops from no-notice
+    again = _run(preemption=pod_slice_preemption(
+        tx2(), seed=11, t_end=0.2, mean_up=0.004, mean_down=0.002))
+    assert base.makespan == again.makespan
+    assert base.placement_counts() == again.placement_counts()
+    # a real grace window lets running tasks finish instead of dying at
+    # the revoke edge: fewer preempted tasks, less discarded work, and
+    # the run still completes
+    graced = _run(preemption=pre(5e-4))
+    assert graced.n_tasks == N_TASKS
+    assert graced.makespan != base.makespan
+    assert graced.tasks_preempted < base.tasks_preempted
+    assert graced.work_lost_s < base.work_lost_s
+
+
+# -- threaded engine ----------------------------------------------------------
+
+def _threaded_dag(n, boom_at=None):
+    tt = TaskType("t", {"denver": 2e-3, "a57": 2e-3})
+    tasks = []
+    for i in range(n):
+        def payload(width, _i=i):
+            if boom_at is not None and _i == boom_at:
+                raise RuntimeError(f"boom {_i}")
+            time.sleep(2e-3)
+        tasks.append(Task(type=tt, payload=payload,
+                          priority=Priority.HIGH if i % 2 == 0
+                          else Priority.LOW))
+    return DAG(tasks, n)
+
+
+def test_payload_exception_does_not_hang():
+    """Regression: a raising payload used to kill the leader thread mid-
+    barrier — members blocked forever and drain() burned its whole
+    timeout before returning silently-partial metrics.  Now the failure
+    is caught, recorded, and the run returns promptly."""
+    sched = make_scheduler("DAM-C", tx2(), seed=1)
+    t0 = time.perf_counter()
+    m = run_threaded(_threaded_dag(12, boom_at=3), sched, timeout=60.0)
+    assert time.perf_counter() - t0 < 20.0      # nowhere near the timeout
+    assert m.n_tasks == 11                      # all but the raising task
+    assert m.failed_tasks == 1
+    assert any("boom 3" in e for e in m.errors)
+    assert m.faults_failstop == 0               # real, not injected
+    assert not any("workers" in e and "dead" in e for e in m.errors)
+
+
+def test_threaded_injected_failstop_retries():
+    sched = make_scheduler("DAM-C", tx2(), seed=2)
+    m = run_threaded(_threaded_dag(24), sched,
+                     faults=task_faults(seed=8, p_fail=0.3),
+                     recovery=RecoveryPolicy(backoff_base=1e-3,
+                                             backoff_cap=5e-3),
+                     timeout=60.0)
+    assert m.n_tasks == 24
+    assert m.faults_failstop > 0
+    assert m.retries == m.faults_failstop
+    assert not m.errors
+
+
+def test_heartbeat_supervisor_wiring():
+    """Workers beat through the pull loop: a monitor over the real worker
+    ids stays healthy; a phantom worker that can never beat is detected
+    and surfaces as a recovery event in the metrics."""
+    sup = Supervisor(HeartbeatMonitor(list(range(6)), timeout=30.0))
+    sched = make_scheduler("DAM-C", tx2(), seed=3)
+    m = run_threaded(_threaded_dag(8), sched, supervisor=sup, timeout=60.0)
+    assert m.n_tasks == 8 and m.recovery_events == []
+
+    phantom = Supervisor(HeartbeatMonitor(list(range(7)), timeout=1e-6))
+    time.sleep(0.01)                            # let worker 6 "miss" beats
+    sched = make_scheduler("DAM-C", tx2(), seed=3)
+    m = run_threaded(_threaded_dag(8), sched, supervisor=phantom,
+                     timeout=60.0)
+    assert m.n_tasks == 8
+    assert any(e.startswith("failure@") and "6" in e
+               for e in m.recovery_events)
+
+
+def test_threaded_disabled_model_is_none_path():
+    sched_a = make_scheduler("DAM-C", tx2(), seed=4)
+    a = run_threaded(_threaded_dag(12), sched_a, timeout=60.0)
+    sched_b = make_scheduler("DAM-C", tx2(), seed=4)
+    b = run_threaded(_threaded_dag(12), sched_b,
+                     faults=task_faults(seed=1), timeout=60.0)
+    assert a.n_tasks == b.n_tasks == 12
+    assert b.fault_summary() == a.fault_summary()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

@@ -50,6 +50,47 @@ def test_hlo_analysis_on_toy_program():
     assert res["collective_bytes"]["total"] == 0
 
 
+def test_deadline_admission_rejects_hopeless_requests(engine_cfg):
+    """A deadline below even the PTT-best-case estimate is refused at
+    admission: nothing runs for it, it finalizes instantly with the
+    ``rejected`` flag, and admitted requests are unaffected."""
+    topo = tpu_pod_slices(2, 2)
+    eng = ServingEngine(engine_cfg, topo, scheduler="DAM-C", max_len=48)
+    rng = np.random.default_rng(2)
+    ok = eng.submit(rng.integers(0, engine_cfg.vocab, 16), max_new_tokens=2)
+    doomed = [eng.submit(rng.integers(0, engine_cfg.vocab, 16),
+                         max_new_tokens=4, deadline_s=1e-5)
+              for _ in range(3)]
+    for r in doomed:
+        assert r.rejected and r.t_done == r.t_submit
+        assert not r.out_tokens                  # nothing ever ran
+    eng.run(timeout=300)
+    stats = eng.latency_stats()
+    assert stats["completed"] == 1 and stats["rejected"] == 3
+    assert stats["deadline_miss"] == 3           # rejections count as misses
+    assert len(ok.out_tokens) == 2
+
+
+def test_deadline_shedding_truncates_decode_chain(engine_cfg):
+    """Admitted requests whose deadline passes mid-chain shed their queued
+    LOW decode work: the request finalizes truncated (``shed``) instead
+    of holding the fleet while it finishes a dead output."""
+    topo = tpu_pod_slices(2, 2)
+    eng = ServingEngine(engine_cfg, topo, scheduler="DAM-C", max_len=48)
+    rng = np.random.default_rng(3)
+    # admitted (deadline >> PTT-prior estimate) but the first prefill pays
+    # real jit-compile time, far past the deadline -> decodes shed
+    reqs = [eng.submit(rng.integers(0, engine_cfg.vocab, 16),
+                       max_new_tokens=6, deadline_s=0.02) for _ in range(3)]
+    eng.run(timeout=300)
+    stats = eng.latency_stats()
+    assert stats["rejected"] == 0                # all were admitted
+    assert stats["shed"] == 3
+    for r in reqs:
+        assert r.shed and r.t_done > 0
+        assert 1 <= len(r.out_tokens) < 6        # truncated, not empty
+
+
 def test_open_loop_poisson_arrival(engine_cfg):
     """Open-loop serving: continuous submission while the runtime runs;
     per-request latency percentiles land in RunMetrics."""
