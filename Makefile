@@ -4,9 +4,15 @@
 # _meta.suite_wall_s) so perf regressions are visible in the trajectory.
 PY := PYTHONPATH=src python
 
-.PHONY: check test lint bench-smoke bench
+.PHONY: check test lint bench-smoke bench acceptance
 
-check: lint test bench-smoke
+check: lint test bench-smoke acceptance
+
+# the serve suite's acceptance block gates: every `false` entry in the
+# root BENCH_serve.json must be in tools/check_acceptance.py's
+# documented-negatives allowlist (see DESIGN.md §2)
+acceptance:
+	python tools/check_acceptance.py
 
 test:
 	$(PY) -m pytest -q

@@ -17,6 +17,11 @@ error bars per cell:
   segment materialization at any horizon).
 * ``trace``    — per-core random-walk speed traces (stand-ins for
   recorded co-tenancy traces) plus a persistent core-0 co-runner.
+* ``governor_load`` — a single-cell probe (first topology, P=8): the
+  governor square-waves are *coupled to partition load* via
+  ``LoadCoupledGovernor`` (a partition running more tasks detunes
+  harder), so placement decisions feed back into the asymmetry the
+  scheduler must adapt to.
 
 Each (scenario, topology, P, scheduler) cell runs at several seeds; the
 emitted aggregates are mean ± population-std of throughput across seeds.
@@ -66,10 +71,19 @@ def _scenario_kwargs(scenario: str, seed: int) -> dict:
             background=(("chain", {"task_type": _TT, "core": 0}),),
             speed=("trace_walk", {"seed": seed, "dt": 0.002, "t_end": _T_END,
                                   "lo": 0.25, "step": 0.2}))
+    if scenario == "governor_load":
+        # same detuned square-wave governors, but coupled to partition
+        # load (``LoadCoupledGovernor``): a partition running more tasks
+        # detunes harder, so the scheduler's own placement shifts the
+        # asymmetry it must adapt to
+        return dict(speed=("governor_load", {"coupling": 0.3,
+                                             "period": 0.004, "lo": 0.2,
+                                             "t_end": _T_END,
+                                             "period_spread": 0.05}))
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
-SCENARIOS = ("bursty", "governor", "trace")
+SCENARIOS = ("bursty", "governor", "trace", "governor_load")
 
 
 def grid(fast: bool = False) -> list[RunSpec]:
@@ -80,8 +94,12 @@ def grid(fast: bool = False) -> list[RunSpec]:
     total = FULL_TASKS if not fast else CI_TASKS
     specs = []
     for scenario in SCENARIOS:
-        for tname, topo_spec in topos:
-            for p in par:
+        # governor_load is a single-cell probe of the load-feedback
+        # coupling, not a full sweep axis: first topology, smallest P
+        sc_topos = topos[:1] if scenario == "governor_load" else topos
+        sc_par = par[:1] if scenario == "governor_load" else par
+        for tname, topo_spec in sc_topos:
+            for p in sc_par:
                 for sched_name in scheds:
                     for seed in seeds:
                         specs.append(RunSpec(

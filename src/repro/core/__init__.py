@@ -20,10 +20,11 @@ from .dag import DAG, chain_dag, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
 from .faults import (Fault, FaultModel, RecoveryPolicy, mmpp_faults,
                      task_faults)
 from .lifecycle import SchedulingKernel, ptt_observe, split_by_priority
-from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
-                           SpeedProfileBase, TraceProfile, burst_episodes,
-                           corun_chain, corun_socket, dvfs_denver,
-                           governor_profile, mmpp_on_off, mmpp_state_timeline,
+from .interference import (BackgroundApp, LoadCoupledGovernor,
+                           PeriodicProfile, SpeedProfile, SpeedProfileBase,
+                           TraceProfile, burst_episodes, corun_chain,
+                           corun_socket, dvfs_denver, governor_profile,
+                           mmpp_on_off, mmpp_state_timeline,
                            random_walk_trace, renewal_on_off)
 from .metrics import RequestRecord, RunMetrics, TaskRecord
 from .multirun import (RunSpec, default_workers, run_cell, run_cells,
@@ -46,7 +47,7 @@ __all__ = [
     "synthetic_dag",
     "BackgroundApp", "PeriodicProfile", "SpeedProfile", "SpeedProfileBase",
     "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
-    "dvfs_denver", "governor_profile", "mmpp_on_off", "mmpp_state_timeline",
+    "dvfs_denver", "governor_profile", "LoadCoupledGovernor", "mmpp_on_off", "mmpp_state_timeline",
     "random_walk_trace", "renewal_on_off",
     "RequestRecord", "RunMetrics", "TaskRecord", "ExecutionPlace", "LiveView",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",

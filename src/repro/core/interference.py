@@ -508,6 +508,58 @@ def dvfs_denver(n_cores: int = 6, *, period: float = 10.0,
                                        lo=lo_mhz / hi_mhz)
 
 
+class LoadCoupledGovernor(SpeedProfileBase):
+    """A governor whose detune depends on partition *load* (scenario
+    realism: power/thermal governors clamp harder exactly when a partition
+    is busy, so the scheduler's own placement feeds back into the
+    asymmetry it must ride out).
+
+    Wraps any base profile; a partition with a fraction ``f`` of its cores
+    occupied runs at ``base_speed * (1 - coupling * f)``.  The simulator
+    detects the ``load_coupled`` marker and feeds per-partition busy-core
+    counts through :meth:`set_busy` before every rate refresh, so the
+    effective speed stays piecewise-constant between events (occupancy
+    only changes at task start/finish events).  The threaded runtime has
+    no cost models to couple into — this is a DES scenario mechanism.
+    """
+
+    load_coupled = True
+
+    def __init__(self, base: SpeedProfileBase, topology, *,
+                 coupling: float = 0.3):
+        if not 0.0 <= coupling < 1.0:
+            raise ValueError(f"coupling {coupling!r} outside [0, 1)")
+        self.base = base
+        self.n_cores = base.n_cores
+        self.coupling = coupling
+        self._part_size = [p.size for p in topology.partitions]
+        self._pidx_of = [0] * topology.n_cores
+        for pidx, part in enumerate(topology.partitions):
+            for c in part.cores:
+                self._pidx_of[c] = pidx
+        self._busy_frac = [0.0] * len(self._part_size)
+
+    def set_busy(self, busy_counts: Sequence[int]) -> bool:
+        """Update per-partition occupancy; returns True when any fraction
+        moved (the caller then refreshes every cached core speed)."""
+        changed = False
+        for pidx, n in enumerate(busy_counts):
+            f = n / self._part_size[pidx]
+            if f != self._busy_frac[pidx]:
+                self._busy_frac[pidx] = f
+                changed = True
+        return changed
+
+    def speed(self, core: int, t: float) -> float:
+        return (self.base.speed(core, t)
+                * (1.0 - self.coupling * self._busy_frac[self._pidx_of[core]]))
+
+    def next_breakpoint(self, t: float) -> Optional[float]:
+        # load-driven changes are injected by the engine at its own events;
+        # only the base profile contributes *time*-driven breakpoints
+        return self.base.next_breakpoint(t)
+
+
 def governor_profile(topology, *, period: float = 10.0, lo: float = 0.25,
                      hi: float = 1.0, t_end: float = 1e6,
                      period_spread: float = 0.0,

@@ -23,7 +23,10 @@ streams even though its measurements are wall-clock.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Iterable, Iterator, Optional
+
+import numpy as np
 
 from .places import ExecutionPlace
 from .queues import WorkQueues
@@ -53,11 +56,30 @@ class SchedulingKernel:
     def __init__(self, scheduler: Scheduler, *, now: Callable[[], float]):
         self.sched = scheduler
         self.now = now
+        # Outstanding-work accounting for queue-aware placement: on when
+        # the scheduler either penalizes load or asks for observability.
+        # Off (the default) every tracking branch below is dead code, so
+        # load-oblivious runs stay bit-identical.
+        self.track_load = scheduler.queue_penalty > 0.0 or scheduler.track_load
         self.queues = WorkQueues(
             scheduler.topology.n_cores,
             priority_dequeue=scheduler.priority_dequeue,
-            steal_high=scheduler.steal_high)
+            steal_high=scheduler.steal_high,
+            track_load=self.track_load)
         self._all_cores = tuple(range(scheduler.topology.n_cores))
+        if self.track_load:
+            # per-core estimated seconds of placed/running work, charged at
+            # choose_place and discharged at commit/fail/requeue; keyed by
+            # tid so a discharge cancels exactly what was charged even if
+            # the PTT moved in between.  The kernel-local lock exists for
+            # the threaded engine, whose commit path runs outside the
+            # runtime lock; the DES is single-threaded and uncontended.
+            self._running_s = np.zeros(scheduler.topology.n_cores)
+            self._run_charges: dict[int, tuple[tuple[int, ...], float]] = {}
+            self._load_lock = threading.Lock()
+            self._place_lw = [(p.leader, p.width)
+                              for p in scheduler.topology.places()]
+            scheduler.load_view = self.place_load
         scheduler.begin_run()
 
     # -- wake (steps 1-2): binding placement of HIGH tasks -------------------
@@ -66,7 +88,10 @@ class SchedulingKernel:
         core whose WSQ receives the task."""
         task.t_ready = self.now()
         target = self.sched.place_on_wake(task, waker_core)
-        return waker_core if target is None else target
+        core = waker_core if target is None else target
+        if self.track_load:
+            self._stamp_load_est(task, core)
+        return core
 
     def live_cores(self) -> tuple[int, ...]:
         view = self.sched.live
@@ -84,7 +109,98 @@ class SchedulingKernel:
         rng = self.sched.rng
         waker = live[rng.randrange(len(live))] if len(live) > 1 else live[0]
         target = self.sched.place_on_wake(task, waker)
-        return waker if target is None else target
+        core = waker if target is None else target
+        if self.track_load:
+            # any in-flight charge from the displaced assignment is void
+            self.discharge(task)
+            self._stamp_load_est(task, core)
+        return core
+
+    # -- outstanding-work accounting (queue-aware placement) ------------------
+    def estimate_seconds(self, task_type: TaskType, place: ExecutionPlace) \
+            -> float:
+        """Expected execution seconds of (type, place): the PTT entry, or
+        the type's cost-model prior while the entry is unexplored (a cold
+        table must still produce a usable backlog signal)."""
+        est = self.sched.ptt.for_type(task_type.name).get(place)
+        if est > 0.0:
+            return est
+        st = task_type.serial_time
+        if not st:
+            return 0.0
+        kind = self.sched.topology.partition_of(place.leader).kind
+        if kind in st:
+            try:
+                return task_type.duration(kind, place.width)
+            except Exception:
+                return st[kind] / place.width
+        return min(st.values())
+
+    def _stamp_load_est(self, task: Task, core: int) -> None:
+        """Stamp the estimate the WSQ accounting will carry while the task
+        sits queued: the bound place's expectation for HIGH tasks, the
+        width-1 expectation at the receiving core otherwise."""
+        place = task.bound_place
+        if place is None:
+            try:
+                place = self.sched.topology.place_at(core, 1)
+            except Exception:
+                task.load_est = 0.0
+                return
+        task.load_est = self.estimate_seconds(task.type, place)
+
+    def discharge(self, task: Task) -> None:
+        """Drop the running-work charge of ``task`` if one is held — called
+        at commit/fail feedback and by engine paths that abandon a placed
+        task without either (hedge losers, suppressed commits, cancelled
+        copies).  Idempotent."""
+        if not self.track_load:
+            return
+        with self._load_lock:
+            ch = self._run_charges.pop(task.tid, None)
+            if ch is not None:
+                cores, est = ch
+                for c in cores:
+                    self._running_s[c] -= est
+
+    def place_load(self) -> np.ndarray:
+        """Per-place outstanding estimated seconds (queued + running),
+        aligned with ``topology.places()``.  A molded place starts when its
+        most-backlogged member drains, so wide places take the max over
+        member cores."""
+        load = self.queues.queued_s + self._running_s
+        out = np.empty(len(self._place_lw))
+        for i, (leader, width) in enumerate(self._place_lw):
+            out[i] = (load[leader] if width == 1
+                      else load[leader:leader + width].max())
+        return np.maximum(out, 0.0)
+
+    def load_per_core(self) -> np.ndarray:
+        """Per-core outstanding estimated seconds (queued + running)."""
+        return np.maximum(self.queues.queued_s + self._running_s, 0.0)
+
+    def backlog_signal(self) -> float:
+        """Mean outstanding estimated seconds per *live* core — the load
+        signal the serving brownout ladder thresholds on."""
+        live = self.live_cores()
+        load = self.queues.queued_s + self._running_s
+        return max(float(load[list(live)].sum()), 0.0) / max(len(live), 1)
+
+    def prime_ptt(self, task_type: TaskType, estimate: float = None) -> int:
+        """Explicit PTT warmup: seed every unexplored place of ``task_type``
+        with a prior (the type's cost model per place, or ``estimate``), so
+        a cold table does not herd early arrivals onto one unexplored place
+        at a time.  Primed entries are weak priors — the first real
+        observation overwrites them directly.  Returns the number of
+        entries primed."""
+        tbl = self.sched.ptt.for_type(task_type.name)
+        n = 0
+        for place in self.sched.topology.places():
+            val = (self.estimate_seconds(task_type, place)
+                   if estimate is None else float(estimate))
+            if val > 0.0 and tbl.prime(place, val):
+                n += 1
+        return n
 
     # -- dequeue / steal (steps 3-5) -----------------------------------------
     def on_steal(self, task: Task) -> None:
@@ -94,7 +210,19 @@ class SchedulingKernel:
     def choose_place(self, task: Task, worker_core: int) -> ExecutionPlace:
         """Final execution place chosen by the worker that will run it
         (re-runs the local width search after a steal, steps 4-5)."""
-        return self.sched.place_on_dequeue(task, worker_core)
+        place = self.sched.place_on_dequeue(task, worker_core)
+        if self.track_load:
+            # the task left the WSQ (pop already dropped its queued charge);
+            # charge its expected duration to every member core until the
+            # commit/fail/requeue discharge
+            self.discharge(task)
+            est = self.estimate_seconds(task.type, place)
+            cores = tuple(place.cores)
+            with self._load_lock:
+                self._run_charges[task.tid] = (cores, est)
+                for c in cores:
+                    self._running_s[c] += est
+        return place
 
     # -- commit (step 8): measurement + PTT feedback + dependents ------------
     def observe_simulated(self, task_type: TaskType, duration: float) -> float:
@@ -111,6 +239,7 @@ class SchedulingKernel:
 
     def ptt_feedback(self, task: Task, place: ExecutionPlace,
                      observed: float) -> None:
+        self.discharge(task)
         ptt_observe(self.sched.ptt, task.type.name, place, observed)
 
     # -- fault recovery (see ``repro.core.faults``) ---------------------------
@@ -126,6 +255,7 @@ class SchedulingKernel:
         avoids it: fold in ``penalty`` x the worse of (time lost on the
         failure, current expectation) — a failure is evidence the place is
         unhealthy, not just slow."""
+        self.discharge(task)
         tbl = self.sched.ptt.for_type(task.type.name)
         obs = max(elapsed, tbl.get(place)) * penalty
         if obs > 0.0:

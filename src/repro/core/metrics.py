@@ -25,10 +25,13 @@ def percentile(sorted_vals: list[float], q: float) -> float:
 class RequestRecord:
     """One serving request's lifecycle timestamps (all on the engine's
     clock): submission, first token out (prefill commit), last token out.
-    Graceful-degradation flags: ``rejected`` = refused at admission (the
-    deadline could not be met, nothing ran); ``shed`` = admitted but its
-    queued LOW decode work was dropped once the deadline passed
-    (truncated output, request still finalized)."""
+    Graceful-degradation flags: ``rejected`` = refused at admission with
+    ``reject_cause`` attributing it — ``"deadline"`` (the deadline could
+    not be met even best-case) or ``"backpressure"`` (bounded pending
+    queue full, or the brownout ladder's reject rung); ``shed`` = admitted
+    but its queued LOW decode work was dropped — ``shed_cause`` is
+    ``"deadline"`` (deadline passed mid-chain) or ``"brownout"`` (the
+    ladder's shed rung) — truncated output, request still finalized."""
     rid: int
     t_submit: float
     t_first_token: float
@@ -36,6 +39,8 @@ class RequestRecord:
     deadline_s: float = 0.0         # 0 = no deadline
     rejected: bool = False
     shed: bool = False
+    reject_cause: str = ""
+    shed_cause: str = ""
 
     @property
     def ttft(self) -> float:
@@ -104,6 +109,10 @@ class RunMetrics:
     # serving-path accounting: one record per completed request (open-loop
     # or batch), feeding the TTFT / end-to-end latency percentiles
     request_records: list[RequestRecord] = dataclasses.field(
+        default_factory=list)
+    # brownout-ladder transitions (t, from_rung, to_rung) copied from the
+    # serving engine's OverloadController at finalize; empty without one
+    brownout_transitions: list[tuple] = dataclasses.field(
         default_factory=list)
 
     def record(self, rec: TaskRecord) -> None:
@@ -178,9 +187,27 @@ class RunMetrics:
         out: dict = {
             "completed": len(done),
             "rejected": sum(1 for r in recs if r.rejected),
+            "rejected_deadline": sum(1 for r in recs if r.rejected
+                                     and r.reject_cause == "deadline"),
+            "rejected_backpressure": sum(1 for r in recs if r.rejected
+                                         and r.reject_cause == "backpressure"),
             "shed": sum(1 for r in recs if r.shed),
+            "shed_deadline": sum(1 for r in recs if r.shed
+                                 and r.shed_cause == "deadline"),
+            "shed_brownout": sum(1 for r in recs if r.shed
+                                 and r.shed_cause == "brownout"),
             "deadline_miss": sum(1 for r in recs if r.deadline_miss),
         }
+        if self.brownout_transitions:
+            trans = self.brownout_transitions
+            out["brownout"] = {
+                "transitions": len(trans),
+                "max_rung": max(to for _, _, to in trans),
+                "rung_enters": {
+                    str(r): sum(1 for _, frm, to in trans
+                                if frm < r <= to)
+                    for r in (1, 2, 3)},
+            }
         if not done:
             return out
         for key, vals in (("ttft_ms", sorted(r.ttft for r in done)),

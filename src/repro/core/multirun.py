@@ -50,10 +50,10 @@ from typing import Iterable, Optional, Sequence
 
 from .dag import DAG, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
 from .faults import FaultModel, RecoveryPolicy, mmpp_faults, task_faults
-from .interference import (BackgroundApp, PeriodicProfile, SpeedProfile,
-                           SpeedProfileBase, burst_episodes, corun_chain,
-                           corun_socket, dvfs_denver, governor_profile,
-                           random_walk_trace)
+from .interference import (BackgroundApp, LoadCoupledGovernor,
+                           PeriodicProfile, SpeedProfile, SpeedProfileBase,
+                           burst_episodes, corun_chain, corun_socket,
+                           dvfs_denver, governor_profile, random_walk_trace)
 from .metrics import RunMetrics
 from .places import (Topology, haswell, haswell_cluster, tpu_pod_slices, tx2,
                      tx2_xl)
@@ -161,6 +161,14 @@ def _speed_governor(topo: Topology, **kw) -> PeriodicProfile:
     return governor_profile(topo, **kw)
 
 
+def _speed_governor_load(topo: Topology, *, coupling: float = 0.3,
+                         **kw) -> SpeedProfileBase:
+    # per-partition governors whose detune additionally deepens with the
+    # partition's occupancy (see interference.LoadCoupledGovernor)
+    return LoadCoupledGovernor(governor_profile(topo, **kw), topo,
+                               coupling=coupling)
+
+
 def _speed_trace_walk(topo: Topology, cores: Sequence[int] = (),
                       **kw) -> SpeedProfileBase:
     return random_walk_trace(topo.n_cores, tuple(cores), **kw)
@@ -172,6 +180,7 @@ SPEED_BUILDERS = {
     "constant": _speed_constant,
     "periodic_square": _speed_periodic_square,
     "governor": _speed_governor,
+    "governor_load": _speed_governor_load,
     "trace_walk": _speed_trace_walk,
 }
 

@@ -99,6 +99,25 @@ class PTT:
             self._tick += 1
             return new
 
+    def prime(self, place: ExecutionPlace, value: float) -> bool:
+        """Seed an *unexplored* entry with a prior estimate (PTT warmup
+        without traffic).  Returns True if the entry was primed, False if
+        it already holds a measurement (priming never overrides data).
+        A primed entry does not count as visited: the first real
+        observation still overwrites it directly (``first_visit_direct``)
+        and ``stalest`` still treats it as never-measured — the prior is
+        deliberately weak."""
+        if value <= 0 or not np.isfinite(value):
+            raise ValueError(f"bad prime value {value!r}")
+        r, c = place.leader, self._w_slot[place.width]
+        with self._lock:
+            if np.isnan(self.table[r, c]):
+                raise KeyError(f"invalid place {place}")
+            if self.visits[r, c] == 0 and self.table[r, c] == 0.0:
+                self.table[r, c] = float(value)
+                return True
+            return False
+
     # -- searches (Algorithm 1 primitives) ------------------------------------
     def _score(self, place: ExecutionPlace, *, cost: bool) -> tuple[float, float]:
         """Sort key: unexplored (0.0) places sort first, then by predicted
@@ -148,35 +167,53 @@ class PTT:
         return self._places[int(k) if idx is None else int(idx[int(k)])]
 
     def _best_from_indices(self, idx: Optional[np.ndarray], *, cost: bool,
-                           rng=None) -> ExecutionPlace:
+                           rng=None, load: Optional[np.ndarray] = None,
+                           penalty: float = 0.0) -> ExecutionPlace:
         """Masked argmin over the dense table restricted to place indices
         ``idx`` (None = all valid places).  Semantics identical to ``best``
         over the same candidates in the same order: unexplored entries (0.0)
         sort first, ties prefer the narrowest width, residual ties are
-        broken uniformly at random."""
-        vals, w = self._gather(self._flat, idx)
-        return self._pick_min(vals * w if cost else vals, w, idx, rng)
+        broken uniformly at random.
 
-    def local_search(self, core: int, *, cost: bool = True, rng=None) -> ExecutionPlace:
+        ``load`` (aligned with the full place list) makes the search
+        queue-aware: the score becomes ``ptt + penalty * load[place]``, so
+        concurrent wakes spread over places instead of herding onto the
+        current argmin.  ``load=None`` (the default) is the exact
+        pre-load-awareness code path."""
+        vals, w = self._gather(self._flat, idx)
+        score = vals * w if cost else vals
+        if load is not None and penalty > 0.0:
+            score = score + penalty * (load if idx is None else load[idx])
+        return self._pick_min(score, w, idx, rng)
+
+    def local_search(self, core: int, *, cost: bool = True, rng=None,
+                     load: Optional[np.ndarray] = None,
+                     penalty: float = 0.0) -> ExecutionPlace:
         """Paper: keep partition+core fixed, mold only the width."""
         return self._best_from_indices(
-            self.topology.local_place_indices(core), cost=cost, rng=rng)
+            self.topology.local_place_indices(core), cost=cost, rng=rng,
+            load=load, penalty=penalty)
 
     def global_search(self, *, cost: bool, rng=None,
-                      idx: Optional[np.ndarray] = None) -> ExecutionPlace:
+                      idx: Optional[np.ndarray] = None,
+                      load: Optional[np.ndarray] = None,
+                      penalty: float = 0.0) -> ExecutionPlace:
         """Paper: sweep all execution places in the system.  ``idx``
         restricts the sweep to those place indices (a revoked-capacity
         live view); None sweeps everything, exactly as before."""
-        return self._best_from_indices(idx, cost=cost, rng=rng)
+        return self._best_from_indices(idx, cost=cost, rng=rng,
+                                       load=load, penalty=penalty)
 
     def width1_search(self, *, cost: bool = False, rng=None,
-                      idx: Optional[np.ndarray] = None) -> ExecutionPlace:
+                      idx: Optional[np.ndarray] = None,
+                      load: Optional[np.ndarray] = None,
+                      penalty: float = 0.0) -> ExecutionPlace:
         """Global sweep restricted to width-1 places (the DA scheduler).
         ``idx``, when given, must already be a width-1 subset (e.g. a
         live view's ``width1_idx``); None uses every width-1 place."""
         return self._best_from_indices(
             self.topology.width1_place_indices if idx is None else idx,
-            cost=cost, rng=rng)
+            cost=cost, rng=rng, load=load, penalty=penalty)
 
     def stalest(self, idx: Optional[np.ndarray] = None, *,
                 rng=None) -> ExecutionPlace:

@@ -26,6 +26,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Iterable, Optional
 
+import numpy as np
+
 from .task import Priority, Task
 
 
@@ -55,13 +57,19 @@ class WorkQueues:
     """
 
     def __init__(self, n_cores: int, *, priority_dequeue: bool,
-                 steal_high: bool):
+                 steal_high: bool, track_load: bool = False):
         self.n_cores = n_cores
         self.priority_dequeue = priority_dequeue
         self.steal_high = steal_high
         self.route_high = priority_dequeue or not steal_high
         self.wsq: list[SplitWSQ] = [SplitWSQ() for _ in range(n_cores)]
         self.aq: list[deque] = [deque() for _ in range(n_cores)]
+        # Queued-work accounting for queue-aware placement: per-core
+        # estimated seconds of ready work sitting in the WSQs, maintained
+        # at push/pop/steal/drain from the estimate the kernel stamped on
+        # the task (``task.load_est``).  Off by default — zero cost.
+        self.track_load = track_load
+        self.queued_s = np.zeros(n_cores) if track_load else None
 
     # -- ready-task (WSQ) operations ----------------------------------------
     def push(self, task: Task, core: int) -> None:
@@ -70,18 +78,24 @@ class WorkQueues:
             q.high.append(task)
         else:
             q.low.append(task)
+        if self.track_load:
+            self.queued_s[core] += task.load_est
 
     def pop_local(self, core: int) -> Optional[Task]:
         """Owner pop: oldest HIGH first under priority dequeue; LOW pops
         LIFO for locality; leftover HIGHs (non-priority dequeue) FIFO."""
         q = self.wsq[core]
         if self.priority_dequeue and q.high:
-            return q.high.popleft()
-        if q.low:
-            return q.low.pop()
-        if q.high:
-            return q.high.popleft()
-        return None
+            task = q.high.popleft()
+        elif q.low:
+            task = q.low.pop()
+        elif q.high:
+            task = q.high.popleft()
+        else:
+            return None
+        if self.track_load:
+            self.queued_s[core] -= task.load_est
+        return task
 
     def wsq_len(self, core: int) -> int:
         return len(self.wsq[core])
@@ -117,7 +131,10 @@ class WorkQueues:
         ever surface here when ``steal_high`` routed them to ``low`` or
         priority dequeue left them exposed)."""
         q = self.wsq[victim]
-        return q.low.popleft() if q.low else q.high.popleft()
+        task = q.low.popleft() if q.low else q.high.popleft()
+        if self.track_load:
+            self.queued_s[victim] -= task.load_est
+        return task
 
     def drain_wsq(self, cores: Iterable[int]) -> list[Task]:
         """Empty the WSQs of ``cores`` (a revoked partition), returning
@@ -130,4 +147,6 @@ class WorkQueues:
             out.extend(q.low)
             q.high.clear()
             q.low.clear()
+            if self.track_load:
+                self.queued_s[c] = 0.0
         return out

@@ -387,6 +387,9 @@ class ThreadedRuntime:
         attempt budget is spent.  Hedge copies never retry."""
         task = rec.task
         dur = self._now() - task.t_start
+        self.kernel.discharge(task)     # fault_feedback also discharges,
+                                        # but a real payload exception with
+                                        # no fault model must not leak load
         if self._fx is not None:
             self.kernel.fault_feedback(task, rec.place, dur,
                                        self._fx.policy.fail_penalty)
@@ -456,6 +459,7 @@ class ThreadedRuntime:
         checkpointed) after the winner committed — running payloads
         cannot be killed, so the loser is dropped here and its wall time
         accounted as the hedge premium."""
+        self.kernel.discharge(rec.task)
         dur = self._now() - rec.task.t_start
         with self.work_cv:
             for c in rec.place.cores:

@@ -82,11 +82,30 @@ class Scheduler:
     # Dequeue-time local searches need no mask: the dispatching worker is
     # live and places never span partitions.
     live: Optional[LiveView] = None
+    # Queue-aware placement: every PTT placement search minimizes
+    # ``ptt_estimate + queue_penalty * outstanding(place)`` where
+    # ``outstanding`` is the per-place estimated seconds of queued+running
+    # work, read through ``load_view`` (a callable installed by the
+    # :class:`~.lifecycle.SchedulingKernel` that owns the accounting).
+    # ``queue_penalty=0.0`` (the default) never calls ``load_view`` and is
+    # bit-identical to load-oblivious placement.  ``track_load`` turns on
+    # the kernel's accounting without the penalty (observability only).
+    queue_penalty: float = 0.0
+    track_load: bool = False
+    load_view: Optional[object] = None
     _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
 
     @property
     def search_rng(self) -> random.Random:
         return self.tiebreak_rng if self.tiebreak_rng is not None else self.rng
+
+    def _load_penalty(self):
+        """(per-place load vector, penalty) for the placement searches —
+        ``(None, 0.0)`` unless queue-aware placement is on, which keeps the
+        default searches bit-identical to load-oblivious builds."""
+        if self.queue_penalty > 0.0 and self.load_view is not None:
+            return self.load_view(), self.queue_penalty
+        return None, 0.0
 
     def begin_run(self) -> None:
         """Reset per-run scheduling state.  PTT contents deliberately
@@ -128,8 +147,10 @@ class Scheduler:
                         self.topology.local_place_indices(core),
                         rng=self.revisit_rng)
                 else:
-                    task.bound_place = tbl.local_search(core, cost=True,
-                                                        rng=self.search_rng)
+                    load, pen = self._load_penalty()
+                    task.bound_place = tbl.local_search(
+                        core, cost=True, rng=self.search_rng,
+                        load=load, penalty=pen)
             else:
                 task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
@@ -143,9 +164,11 @@ class Scheduler:
                         else live.width1_idx,
                         rng=self.revisit_rng)
                 else:
+                    load, pen = self._load_penalty()
                     task.bound_place = tbl.width1_search(
                         cost=False, rng=self.search_rng,
-                        idx=None if live is None else live.width1_idx)
+                        idx=None if live is None else live.width1_idx,
+                        load=load, penalty=pen)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
@@ -154,9 +177,11 @@ class Scheduler:
                         None if live is None else live.place_idx,
                         rng=self.revisit_rng)
                 else:
+                    load, pen = self._load_penalty()
                     task.bound_place = tbl.global_search(
                         cost=self.high_target_cost, rng=self.search_rng,
-                        idx=None if live is None else live.place_idx)
+                        idx=None if live is None else live.place_idx,
+                        load=load, penalty=pen)
             return task.bound_place.leader
         return None                          # RWS/RWSM-C: no special handling
 
@@ -172,7 +197,9 @@ class Scheduler:
         if self._force_revisit():
             return tbl.stalest(self.topology.local_place_indices(worker_core),
                                rng=self.revisit_rng)
-        return tbl.local_search(worker_core, cost=True, rng=self.search_rng)
+        load, pen = self._load_penalty()
+        return tbl.local_search(worker_core, cost=True, rng=self.search_rng,
+                                load=load, penalty=pen)
 
     def may_steal(self, task: Task) -> bool:
         return self.steal_high or task.priority != Priority.HIGH
@@ -181,7 +208,9 @@ class Scheduler:
 def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
                    ptt_new_weight: float = 1.0, ptt_old_weight: float = 4.0,
                    ptt_tiebreak: str = "shared",
-                   ptt_revisit: float = 0.0) -> Scheduler:
+                   ptt_revisit: float = 0.0,
+                   queue_penalty: float = 0.0,
+                   track_load: bool = False) -> Scheduler:
     """Factory for the paper's seven configurations (Table 1).
 
     ``ptt_tiebreak`` selects where PTT-search tie-breaks draw from:
@@ -196,6 +225,13 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
     poisoned entry is eventually re-measured.  Draws use a dedicated
     stream seeded from ``seed``; 0.0 is bit-identical to builds without
     the hatch.
+
+    ``queue_penalty`` (off at 0.0, the paper-faithful default) makes every
+    PTT placement search queue-aware: the score becomes ``ptt_estimate +
+    queue_penalty * outstanding_seconds(place)``, so bursts of concurrent
+    HIGH wakes spread instead of herding onto one argmin place.  0.0 is
+    bit-identical to load-oblivious placement.  ``track_load`` enables the
+    kernel's outstanding-work accounting without the penalty term.
     """
     bank = PTTBank(topology, new_weight=ptt_new_weight, old_weight=ptt_old_weight)
     rng = random.Random(seed)
@@ -212,10 +248,13 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
         raise ValueError(f"ptt_revisit {ptt_revisit!r} outside [0, 1)")
     revisit_rng = (random.Random(f"ptt-revisit:{seed}")
                    if ptt_revisit > 0.0 else None)
+    if queue_penalty < 0.0:
+        raise ValueError(f"queue_penalty {queue_penalty!r} must be >= 0")
     n = name.upper()
     common = dict(topology=topology, ptt=bank, rng=rng,
                   tiebreak_rng=tiebreak_rng, revisit_eps=ptt_revisit,
-                  revisit_rng=revisit_rng)
+                  revisit_rng=revisit_rng, queue_penalty=queue_penalty,
+                  track_load=track_load)
     if n == "RWS":
         # priority-oblivious: plain LIFO dequeue, HIGH stealable
         return Scheduler("RWS", steal_high=True, priority_dequeue=False,

@@ -255,6 +255,17 @@ class Simulator:
         self._pending_retry: dict[int, Task] = {}   # tid -> task in backoff
         self._notice_token: dict[int, int] = {}     # pidx -> live notice event
         self._tok = itertools.count(1)              # straggle/notice guards
+
+        # load-coupled speed profiles (e.g. a power governor that detunes
+        # harder on loaded partitions, ``interference.LoadCoupledGovernor``)
+        # are fed per-partition busy-core counts before every rate refresh;
+        # a profile without the hook costs one getattr at construction
+        self._load_coupled = bool(getattr(self.speed, "load_coupled", False))
+        if self._load_coupled:
+            self._pidx_of = [0] * n
+            for pidx, part in enumerate(self.topo.partitions):
+                for c in part.cores:
+                    self._pidx_of[c] = pidx
         self._recompute_bg()
 
     # ------------------------------------------------------------------ util
@@ -341,6 +352,16 @@ class Simulator:
     def _refresh_rates(self):
         """Re-derive rates + reschedule finishes for tasks whose inputs
         changed since the last event (see module docstring)."""
+        if self._load_coupled:
+            busy = [0] * len(self.topo.partitions)
+            pidx_of = self._pidx_of
+            for c, rec in enumerate(self.core_busy):
+                if rec is not None:
+                    busy[pidx_of[c]] += 1
+            if self.speed.set_busy(busy):
+                # partition occupancy moved -> the governor's detune factor
+                # moved -> every cached core speed is stale
+                self._recompute_speed()
         if self._rates_global_dirty:
             recs = list(self.running.values())
         elif self._dirty_domains:
@@ -845,6 +866,7 @@ class Simulator:
         a pending retry or an AQ placement; a WSQ entry is dropped (and
         resolved) lazily at the next pop.  Each copy resolves exactly
         once."""
+        self.kernel.discharge(task)     # whatever load it held is void
         rec = self.running.get(task.tid)
         if rec is not None:
             executed = rec.work_assigned - rec.remaining
@@ -874,6 +896,7 @@ class Simulator:
         """A losing copy ran to completion after the logical task had
         already committed (normally unreachable — cancellation reaps
         losers first; kept so the invariants hold if one slips through)."""
+        self.kernel.discharge(rec.task)
         self.metrics.work_hedged_s += max(rec.work_assigned - rec.remaining,
                                           0.0)
         self._kill_running(rec, event_outstanding=False)

@@ -107,6 +107,13 @@ class Task:
     t_start: float = -1.0
     t_end: float = -1.0
 
+    # Load-accounting state (see ``core/lifecycle.py``): the estimated
+    # execution seconds this task contributes to its queue's outstanding
+    # work while it sits in a WSQ.  Stamped by the kernel at wake/requeue
+    # when load tracking is on; 0.0 (the default) contributes nothing, so
+    # untracked runs never touch it.
+    load_est: float = 0.0
+
     # Preemption state (see ``repro.core.preemption``): fraction of the
     # place-normalized work still outstanding (checkpointed progress keeps
     # it < 1.0 across re-placements; "restart" kills leave it at 1.0), and

@@ -1,3 +1,5 @@
 from .engine import Request, ServingEngine
+from .overload import BrownoutConfig, OverloadController
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["BrownoutConfig", "OverloadController", "Request",
+           "ServingEngine"]

@@ -14,7 +14,10 @@ threaded runtime; on a real fleet each place maps to a pjit program
 compiled for that submesh shape (the compile cache keyed by place width).
 The scheduler logic is byte-identical in both cases — both engines drive
 the same :class:`~..core.lifecycle.SchedulingKernel` (DESIGN.md §3); that
-is the point.
+is the point.  ``cfg=None`` selects **synthetic-payload mode**: request
+payloads are calibrated sleeps (``prefill_s`` / ``decode_s``) instead of
+jitted model dispatches, which is what the overload benchmark uses to
+push the fleet past saturation without paying model-compile time.
 
 Two submission modes:
 
@@ -27,25 +30,42 @@ Two submission modes:
   batch submission.  Per-request latency percentiles land in
   ``RunMetrics.request_latency_stats()``.
 
-Graceful degradation (``deadline_s`` on :meth:`ServingEngine.submit`):
-requests carry an optional deadline.  Admission control rejects a request
-outright when even a PTT-best-case estimate (own chain + current backlog)
-misses the deadline — the fleet never queues work that cannot finish in
-time.  Once admitted, queued LOW decode tasks whose deadline has already
-passed are *shed* (dropped, request finalized truncated) instead of
-executed, so an overloaded fleet degrades output length rather than
-collapsing every latency tail.  ``rejected`` / ``shed`` /
-``deadline_miss`` counters land in the same latency stats.
+Robustness under load (this is the serving half of the load-aware
+kernel, DESIGN.md §2):
+
+* **Warm start** — ``warm_start=True`` (default) primes the PTT for each
+  new task type via :meth:`SchedulingKernel.prime_ptt` before its first
+  request is placed, so a cold table never herds early arrivals onto one
+  unexplored place.  :meth:`prime` does it explicitly.
+* **Load-aware admission** — ``_admission_estimate`` is per-place: the
+  best over places of (outstanding estimated work *at that place* +
+  the prefill estimate there), plus the decode chain at the fleet-best
+  decode estimate.  A request is rejected (``reject_cause="deadline"``)
+  only when even that estimate misses its deadline.
+* **Backpressure** — ``max_pending`` bounds the number of admitted
+  in-flight requests; past it, admission refuses immediately
+  (``reject_cause="backpressure"``) instead of growing an unbounded
+  queue.
+* **Brownout ladder** — pass a :class:`~.overload.BrownoutConfig` to
+  attach an :class:`~.overload.OverloadController` driven by the
+  kernel's backlog signal (outstanding estimated seconds per live core),
+  updated at every admission and completion.  Under sustained saturation
+  it degrades LOW-tier traffic in order of destroyed value: rung 1
+  clamps ``max_new_tokens`` to ``min_tokens``, rung 2 sheds queued LOW
+  decode chains (``shed_cause="brownout"``), rung 3 rejects LOW
+  admissions outright.  Each rung has hysteresis; every transition lands
+  in ``RunMetrics.brownout_transitions`` and is counted by
+  ``request_latency_stats()``.  HIGH-tier requests (``tier="high"``)
+  are exempt from all three rungs.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
+import threading
 import time
 from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
@@ -53,8 +73,7 @@ from ..core import (Priority, RequestRecord, Task, TaskType, ThreadedRuntime,
                     Topology, make_scheduler)
 from ..core.dag import DAG
 from ..core.preemption import PreemptionModel
-from ..models import decode_step, init_params
-from ..models.transformer import prefill
+from .overload import BrownoutConfig, OverloadController
 
 
 @dataclasses.dataclass
@@ -62,13 +81,17 @@ class Request:
     rid: int
     prompt: np.ndarray             # [S] int32
     max_new_tokens: int
+    tier: str = "low"              # "high" is exempt from the brownout ladder
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     deadline_s: float = 0.0        # 0 = no deadline
     rejected: bool = False         # refused at admission, nothing ran
-    shed: bool = False             # decode chain truncated past deadline
+    shed: bool = False             # decode chain truncated
+    reject_cause: str = ""         # "deadline" | "backpressure"
+    shed_cause: str = ""           # "deadline" | "brownout"
+    tokens_clamped: bool = False   # brownout rung 1 shrank max_new_tokens
 
 
 def _bucket(n: int) -> int:
@@ -79,31 +102,59 @@ def _bucket(n: int) -> int:
 
 
 class ServingEngine:
-    """PTT-scheduled engine running a real (reduced) model on CPU."""
+    """PTT-scheduled engine: a real (reduced) model on CPU when ``cfg``
+    is given, calibrated-sleep payloads when ``cfg is None``."""
 
-    def __init__(self, cfg: ModelConfig, topology: Topology, *,
+    def __init__(self, cfg: Optional[ModelConfig], topology: Topology, *,
                  scheduler: str = "DAM-P", seed: int = 0,
                  max_len: int = 256,
                  slowdown: Optional[dict[int, float]] = None,
                  preemption: Optional[PreemptionModel] = None,
-                 faults=None, recovery=None, supervisor=None):
+                 faults=None, recovery=None, supervisor=None,
+                 queue_penalty: float = 1.0, warm_start: bool = True,
+                 max_pending: Optional[int] = None,
+                 brownout: Optional[BrownoutConfig] = None,
+                 prefill_s: float = 8e-3, decode_s: float = 2e-3):
         self.cfg = cfg
         self.max_len = max_len
-        self.params = init_params(cfg, jax.random.PRNGKey(seed))
-        self.sched = make_scheduler(scheduler, topology, seed=seed)
+        self.prefill_s = prefill_s
+        self.decode_s = decode_s
+        if cfg is not None:
+            # real-model mode: jitted dispatches (deferred imports keep
+            # synthetic engines from touching jax at all)
+            import jax
+            from ..models import decode_step, init_params
+            from ..models.transformer import prefill
+            self.params = init_params(cfg, jax.random.PRNGKey(seed))
+            self._prefill = jax.jit(
+                lambda p, t: prefill(p, cfg, t, max_len),
+                static_argnames=())
+            self._decode = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+        self.sched = make_scheduler(scheduler, topology, seed=seed,
+                                    queue_penalty=queue_penalty,
+                                    track_load=True)
         self.runtime = ThreadedRuntime(self.sched, slowdown=slowdown,
                                        preemption=preemption, faults=faults,
                                        recovery=recovery,
                                        supervisor=supervisor)
-        self._prefill = jax.jit(
-            lambda p, t: prefill(p, cfg, t, max_len),
-            static_argnames=())
-        self._decode = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+        self.warm_start = warm_start
+        self.max_pending = max_pending
+        self.controller = (OverloadController(brownout)
+                           if brownout is not None else None)
+        self.tokens_clamped = 0
         self.requests: dict[int, Request] = {}
         self._rid = 0
+        self._pending = 0              # admitted, not yet finalized
+        self._admit_lock = threading.Lock()
+        self._primed: set[str] = set()
 
     # -- task payloads ---------------------------------------------------------
     def _run_prefill(self, req: Request) -> tuple:
+        if self.cfg is None:
+            time.sleep(self.prefill_s)
+            req.out_tokens.append(0)
+            return None, 0
+        import jax.numpy as jnp
         toks = jnp.asarray(req.prompt)[None, :]
         logits, state = self._prefill(self.params, toks)
         nxt = int(jnp.argmax(logits[0]))
@@ -111,57 +162,131 @@ class ServingEngine:
         return state, nxt
 
     def _run_decode(self, req: Request, state, tok: int) -> tuple:
+        if self.cfg is None:
+            time.sleep(self.decode_s)
+            req.out_tokens.append(0)
+            return None, 0
+        import jax.numpy as jnp
         logits, state = self._decode(self.params, state,
                                      jnp.asarray([tok], jnp.int32))
         nxt = int(jnp.argmax(logits[0]))
         req.out_tokens.append(nxt)
         return state, nxt
 
+    # -- PTT warmup --------------------------------------------------------------
+    def prime(self, *task_types: TaskType) -> int:
+        """Explicitly seed the PTT for ``task_types`` (every unexplored
+        place gets its cost-model prior — see
+        :meth:`SchedulingKernel.prime_ptt`).  Returns entries primed."""
+        n = 0
+        for tt in task_types:
+            n += self.runtime.kernel.prime_ptt(tt)
+            self._primed.add(tt.name)
+        return n
+
+    def _maybe_prime(self, *task_types: TaskType) -> None:
+        if not self.warm_start:
+            return
+        for tt in task_types:
+            if tt.name not in self._primed:
+                self.prime(tt)
+
     # -- graceful degradation ----------------------------------------------------
-    def _ptt_floor(self, task_type: TaskType) -> float:
-        """Best-case per-task seconds for ``task_type``: the smallest
-        positive PTT expectation across the topology's places, falling
-        back to the type's best serial-time prior while the table is
-        still unexplored."""
-        tbl = self.sched.ptt.for_type(task_type.name)
-        seen = [tbl.get(p) for p in self.sched.topology.places()]
-        seen = [v for v in seen if v > 0.0]
-        return min(seen) if seen else min(task_type.serial_time.values())
+    def _best_estimate(self, task_type: TaskType) -> float:
+        """Fleet-best per-task seconds for ``task_type`` (PTT entry or
+        cost-model prior, whichever the kernel's estimator resolves)."""
+        kernel = self.runtime.kernel
+        return min(kernel.estimate_seconds(task_type, p)
+                   for p in self.sched.topology.places())
 
     def _admission_estimate(self, pre_type: TaskType, dec_type: TaskType,
                             max_new_tokens: int) -> float:
-        """Optimistic completion-time estimate used by deadline admission:
-        the request's own prefill + decode chain at PTT-best speed, plus
-        queueing delay approximated by the current backlog at decode-floor
-        cost each.  Optimistic by construction — a reject means even the
-        best case misses, so nothing that could finish is refused."""
-        dec_floor = self._ptt_floor(dec_type)
-        own = self._ptt_floor(pre_type) + max(max_new_tokens - 1, 0) * dec_floor
-        return own + self.runtime.outstanding * dec_floor
+        """Per-place, load-aware completion-time estimate for deadline
+        admission: the best over places of (outstanding estimated work
+        already at that place + the prefill estimate there), plus the
+        request's decode chain at the fleet-best decode estimate.  Still
+        optimistic past the prefill (decode steps are assumed to land on
+        the fleet-best place with no queueing), so a reject means even a
+        rosy forecast misses the deadline."""
+        kernel = self.runtime.kernel
+        places = self.sched.topology.places()
+        if kernel.track_load:
+            load = kernel.place_load()
+            start = min(load[i] + kernel.estimate_seconds(pre_type, p)
+                        for i, p in enumerate(places))
+        else:
+            start = self._best_estimate(pre_type)
+        chain = max(max_new_tokens - 1, 0) * self._best_estimate(dec_type)
+        return start + chain
+
+    def _elapsed(self) -> float:
+        t0 = self.runtime.t0
+        return 0.0 if t0 is None else time.perf_counter() - t0
+
+    def _update_controller(self) -> int:
+        """Fold the kernel's backlog signal into the brownout controller
+        (called at every admission and completion)."""
+        if self.controller is None:
+            return 0
+        signal = (self.runtime.kernel.backlog_signal()
+                  if self.runtime.kernel.track_load else 0.0)
+        with self._admit_lock:
+            return self.controller.update(signal, self._elapsed())
+
+    def _request_done(self, req: Request) -> None:
+        req.t_done = time.perf_counter()
+        with self._admit_lock:
+            self._pending -= 1
+        self._update_controller()
 
     # -- request -> dynamic DAG --------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 8,
-               deadline_s: float = 0.0) -> Request:
+               deadline_s: float = 0.0, tier: str = "low") -> Request:
         self._rid += 1
-        req = Request(self._rid, prompt.astype(np.int32), max_new_tokens,
+        req = Request(self._rid, np.asarray(prompt).astype(np.int32),
+                      max_new_tokens, tier=tier,
                       t_submit=time.perf_counter(), deadline_s=deadline_s)
         self.requests[req.rid] = req
 
-        pre_type = TaskType(
-            f"prefill_{_bucket(len(prompt))}",
-            serial_time={p.kind: 1e-3 for p in self.sched.topology.partitions})
-        dec_type = TaskType(
-            "decode",
-            serial_time={p.kind: 1e-4 for p in self.sched.topology.partitions})
+        def _reject(cause: str) -> Request:
+            req.rejected = True
+            req.reject_cause = cause
+            req.t_first_token = req.t_done = req.t_submit
+            return req
+
+        # backpressure: a bounded pending queue, never unbounded growth —
+        # past the bound the fleet refuses immediately rather than
+        # queueing work it will finish long past anyone's patience
+        if self.max_pending is not None and self._pending >= self.max_pending:
+            return _reject("backpressure")
+
+        self._update_controller()
+        ctl = self.controller
+        if ctl is not None and tier != "high":
+            if ctl.reject_low:          # rung 3: refuse LOW at admission
+                return _reject("backpressure")
+            if ctl.shrink_low and max_new_tokens > ctl.config.min_tokens:
+                # rung 1+: degrade LOW output length before dropping work
+                req.max_new_tokens = max_new_tokens = ctl.config.min_tokens
+                req.tokens_clamped = True
+                self.tokens_clamped += 1
+
+        kinds = {p.kind for p in self.sched.topology.partitions}
+        pre_s = self.prefill_s if self.cfg is None else 1e-3
+        dec_s = self.decode_s if self.cfg is None else 1e-4
+        pre_type = TaskType(f"prefill_{_bucket(len(prompt))}",
+                            serial_time={k: pre_s for k in kinds})
+        dec_type = TaskType("decode", serial_time={k: dec_s for k in kinds})
+        self._maybe_prime(pre_type, dec_type)
 
         if deadline_s > 0.0 and self._admission_estimate(
                 pre_type, dec_type, max_new_tokens) > deadline_s:
             # deadline-aware admission: refuse rather than burn fleet time
             # on a request that cannot finish in time (nothing is queued)
-            req.rejected = True
-            req.t_first_token = req.t_done = req.t_submit
-            return req
+            return _reject("deadline")
 
+        with self._admit_lock:
+            self._pending += 1
         ctx: dict = {}
 
         def prefill_payload(width: int, _req=req):
@@ -169,13 +294,20 @@ class ServingEngine:
 
         def make_decode_task(step_idx: int) -> Task:
             def decode_payload(width: int, _req=req):
-                # load shedding: queued LOW decode work whose deadline has
-                # already passed is dropped instead of executed — the
-                # request finalizes truncated and the fleet time goes to
-                # requests that can still meet theirs
+                # load shedding: queued LOW decode work is dropped instead
+                # of executed — the request finalizes truncated and the
+                # fleet time goes to requests that still matter — when its
+                # deadline already passed, or the brownout ladder is at
+                # its shed rung and the request is LOW tier
                 if (_req.deadline_s > 0.0 and time.perf_counter()
                         > _req.t_submit + _req.deadline_s):
                     _req.shed = True
+                    _req.shed_cause = "deadline"
+                    return
+                if (ctl is not None and ctl.shed_low
+                        and _req.tier != "high"):
+                    _req.shed = True
+                    _req.shed_cause = "brownout"
                     return
                 ctx["state"], ctx["tok"] = self._run_decode(
                     _req, ctx["state"], ctx["tok"])
@@ -185,7 +317,7 @@ class ServingEngine:
             def on_commit(_task, _i=step_idx, _req=req):
                 if not _req.shed and _i + 1 < _req.max_new_tokens - 1:
                     return [make_decode_task(_i + 1)]
-                _req.t_done = time.perf_counter()
+                self._request_done(_req)
                 return []
 
             t.on_commit = on_commit
@@ -199,7 +331,7 @@ class ServingEngine:
             # any injected slowdown, when a real client would see it
             _req.t_first_token = time.perf_counter()
             if _req.max_new_tokens <= 1:
-                _req.t_done = time.perf_counter()
+                self._request_done(_req)
                 return []
             return [make_decode_task(0)]
 
@@ -215,7 +347,7 @@ class ServingEngine:
     def run_open_loop(self, prompts: Sequence[np.ndarray], *,
                       rate_rps: float, max_new_tokens: int = 8,
                       arrival_seed: int = 0, deadline_s: float = 0.0,
-                      timeout: float = 300.0):
+                      tier: str = "low", timeout: float = 300.0):
         """Open-loop serving: start the runtime, then submit one request
         per prompt with Poisson inter-arrival gaps (seeded ``expovariate``
         at ``rate_rps`` requests/s) while earlier requests execute.
@@ -228,7 +360,7 @@ class ServingEngine:
             if i:
                 time.sleep(arrivals.expovariate(rate_rps))
             self.submit(np.asarray(prompt), max_new_tokens=max_new_tokens,
-                        deadline_s=deadline_s)
+                        deadline_s=deadline_s, tier=tier)
         m = self.runtime.drain(timeout=timeout)
         self._finalize_requests()
         return m
@@ -236,7 +368,8 @@ class ServingEngine:
     # -- metrics ----------------------------------------------------------------
     def _finalize_requests(self) -> None:
         """Fold completed requests into the runtime metrics as
-        :class:`RequestRecord` rows (feeds p50/p95/p99 TTFT / e2e)."""
+        :class:`RequestRecord` rows (feeds p50/p95/p99 TTFT / e2e) and
+        copy the brownout controller's transition log across."""
         metrics = self.runtime.metrics
         seen = {r.rid for r in metrics.request_records}
         for r in self.requests.values():
@@ -245,7 +378,10 @@ class ServingEngine:
                     rid=r.rid, t_submit=r.t_submit,
                     t_first_token=r.t_first_token, t_done=r.t_done,
                     deadline_s=r.deadline_s, rejected=r.rejected,
-                    shed=r.shed))
+                    shed=r.shed, reject_cause=r.reject_cause,
+                    shed_cause=r.shed_cause))
+        if self.controller is not None:
+            metrics.brownout_transitions = list(self.controller.transitions)
 
     def latency_stats(self) -> dict:
         """Flat-key view over ``RunMetrics.request_latency_stats()`` (one
@@ -257,9 +393,17 @@ class ServingEngine:
         out = {
             "completed": stats["completed"],
             "rejected": stats["rejected"],
+            "rejected_deadline": stats["rejected_deadline"],
+            "rejected_backpressure": stats["rejected_backpressure"],
             "shed": stats["shed"],
+            "shed_deadline": stats["shed_deadline"],
+            "shed_brownout": stats["shed_brownout"],
             "deadline_miss": stats["deadline_miss"],
+            "tokens_clamped": self.tokens_clamped,
         }
+        if "brownout" in stats:
+            out["brownout_transitions"] = stats["brownout"]["transitions"]
+            out["brownout_max_rung"] = stats["brownout"]["max_rung"]
         if "ttft_ms" in stats:      # at least one request actually ran
             out.update({
                 "ttft_ms_mean": stats["ttft_ms"]["mean"],

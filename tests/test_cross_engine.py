@@ -11,12 +11,16 @@ behavioral aggregates, not exact histograms: where HIGH tasks go, and how
 much of the load lands on the interfered core.
 """
 import time
+from collections import Counter
 
 import pytest
 
-from repro.core import (RecoveryPolicy, SpeedProfile, make_scheduler,
+from repro.core import (Priority, RecoveryPolicy, ResourcePartition,
+                        Simulator, SpeedProfile, Task, TaskType,
+                        ThreadedRuntime, Topology, make_scheduler,
                         matmul_type, run_threaded, simulate, synthetic_dag,
                         task_faults, tx2)
+from repro.core.dag import DAG
 
 SLOW_CORE = 0
 FACTOR = 5.0
@@ -132,3 +136,70 @@ def test_dam_c_learns_same_relative_speeds():
         ratios.append(slow / peer)
     # interfered core measured several-x slower than its peer in both
     assert all(r > 2.0 for r in ratios)
+
+
+# -- load-aware placement: the herding regression ------------------------------
+# Four single-core partitions of distinct kinds with strictly ordered
+# priors, so a primed PTT has a *unique* argmin: without a queue penalty
+# every simultaneous HIGH wake binds to that one place (herding — the
+# failure mode behind the old serve slow_fast_pod loss); with the
+# penalty, each wake sees the charges of the previous ones and spreads.
+_BURST_PRIORS = {"denver": 1.0e-3, "a57": 1.2e-3,
+                 "haswell": 1.4e-3, "pod": 1.6e-3}
+_N_BURST = 8
+
+
+def _burst_fleet():
+    return Topology([
+        ResourcePartition(f"s{i}", kind, i, 1, (1,), static_rank=i)
+        for i, kind in enumerate(_BURST_PRIORS)])
+
+
+def _burst_dag(payload_s=None):
+    tt = TaskType("hburst", serial_time=dict(_BURST_PRIORS))
+    root_t = TaskType("hroot",
+                      serial_time={k: 1e-4 for k in _BURST_PRIORS})
+    highs = [Task(tt, priority=Priority.HIGH) for _ in range(_N_BURST)]
+    root = Task(root_t, priority=Priority.LOW)
+    if payload_s is not None:
+        root.payload = lambda width: None
+        for t in highs:
+            t.payload = lambda width, _d=payload_s: time.sleep(_d)
+    root.on_commit = lambda _t: highs
+    return tt, DAG([root], 1 + _N_BURST)
+
+
+def _burst_leaders(engine: str, queue_penalty: float) -> Counter:
+    sched = make_scheduler("DAM-C", _burst_fleet(), seed=0,
+                           queue_penalty=queue_penalty, track_load=True)
+    tt, dag = _burst_dag(payload_s=None if engine == "des" else 1e-3)
+    if engine == "des":
+        sim = Simulator(sched)
+        sim.kernel.prime_ptt(tt)
+        sim.submit(dag)
+        m = sim.run()
+    else:
+        rt = ThreadedRuntime(sched)
+        rt.kernel.prime_ptt(tt)
+        rt.submit(dag)
+        m = rt.run(timeout=60)
+    assert m.n_tasks == 1 + _N_BURST
+    return Counter(r.leader for r in m.records if r.type_name == "hburst")
+
+
+@pytest.mark.parametrize("engine", ["des", "threaded"])
+def test_simultaneous_high_wakes_spread_with_queue_penalty(engine):
+    herd = _burst_leaders(engine, queue_penalty=0.0)
+    spread = _burst_leaders(engine, queue_penalty=1.0)
+    # penalty off: the unique primed argmin swallows the whole burst
+    assert herd == {0: _N_BURST}
+    # penalty on: the burst spreads across most of the fleet
+    assert len(spread) >= 3
+    assert max(spread.values()) <= _N_BURST // 2
+
+
+def test_burst_spread_agrees_across_engines():
+    """Wake-time binding happens before any burst task executes in both
+    engines, so the load-aware placement multiset must agree exactly."""
+    assert (_burst_leaders("des", 1.0)
+            == _burst_leaders("threaded", 1.0))

@@ -1,0 +1,220 @@
+"""Load-aware scheduling kernel: queue-penalty placement, PTT priming,
+charge/discharge accounting, and the serving brownout ladder.
+
+The tentpole invariant: with ``queue_penalty=0`` (the paper-faithful
+default) every code path is bit-identical to the untracked kernel, and
+with a penalty attached simultaneous HIGH wakes spread across places
+instead of herding onto the single momentarily-best one (the cross-engine
+version of that regression lives in ``test_cross_engine.py``)."""
+import pytest
+
+from repro.core import (ExecutionPlace, Priority, ResourcePartition,
+                        Simulator, SpeedProfile, Task, TaskType, Topology,
+                        make_scheduler, matmul_type, simulate, synthetic_dag,
+                        task_faults, tx2)
+from repro.core.dag import DAG
+from repro.serve import BrownoutConfig, OverloadController
+
+
+def _records(m):
+    return [(r.type_name, r.priority, r.leader, r.width, r.t_start, r.t_end)
+            for r in m.records]
+
+
+# -- bit-identity at queue_penalty=0 ------------------------------------------
+def test_penalty_zero_is_bit_identical():
+    """Load *tracking* alone (accounting on, penalty off) must not perturb
+    a single scheduling decision: same records, same timestamps."""
+    speed = SpeedProfile(6).add_window([0], 0.0, float("inf"), 0.25)
+    runs = []
+    for kw in ({}, {"track_load": True}):
+        sched = make_scheduler("DAM-C", tx2(), seed=7, **kw)
+        m = simulate(synthetic_dag(matmul_type(64), parallelism=6,
+                                   total_tasks=240), sched, speed=speed)
+        runs.append(_records(m))
+    assert runs[0] == runs[1]
+
+
+def test_make_scheduler_rejects_negative_penalty():
+    with pytest.raises(ValueError):
+        make_scheduler("DAM-C", tx2(), queue_penalty=-0.5)
+
+
+# -- charge/discharge accounting ----------------------------------------------
+def test_load_drains_to_zero_after_run():
+    """Every charge path (wake stamp, dequeue charge) must meet its
+    discharge (commit, fault, requeue): at end of run the kernel's
+    outstanding-load vector is empty (to float +=/-= residue)."""
+    sched = make_scheduler("DAM-C", tx2(), seed=1, queue_penalty=1.0)
+    sim = Simulator(sched)
+    sim.submit(synthetic_dag(matmul_type(64), parallelism=6,
+                             total_tasks=120))
+    sim.run()
+    assert not sim.kernel._run_charges
+    assert sim.kernel.load_per_core().max() < 1e-12
+    assert sim.kernel.backlog_signal() < 1e-12
+
+
+def test_load_drains_to_zero_with_faults():
+    """Retries re-stamp and re-charge; permanent failures and fault
+    feedback must still discharge every cent."""
+    sched = make_scheduler("DAM-C", tx2(), seed=2, queue_penalty=1.0)
+    sim = Simulator(sched, faults=task_faults(seed=3, p_fail=0.3))
+    sim.submit(synthetic_dag(matmul_type(64), parallelism=4,
+                             total_tasks=80))
+    m = sim.run()
+    assert m.faults_failstop > 0
+    assert not sim.kernel._run_charges
+    assert sim.kernel.load_per_core().max() < 1e-12
+
+
+# -- PTT priming ---------------------------------------------------------------
+def test_ptt_prime_seeds_unexplored_only():
+    topo = tx2()
+    sched = make_scheduler("DAM-C", topo, seed=0)
+    tbl = sched.ptt.for_type("matmul64")
+    place = ExecutionPlace(0, 1)
+    assert tbl.prime(place, 5e-3)            # cold entry takes the prior
+    assert tbl.get(place) == 5e-3
+    assert tbl.visited(place) == 0           # a prior is not a visit
+    assert not tbl.prime(place, 9e-3)        # primed entries are not re-primed
+    assert tbl.get(place) == 5e-3
+    # the first real observation *overwrites* the prior (first-visit
+    # direct), it does not average against it
+    tbl.update(place, 2e-3)
+    assert tbl.get(place) == pytest.approx(2e-3)
+    assert not tbl.prime(place, 5e-3)        # visited entries never primed
+    with pytest.raises(ValueError):
+        tbl.prime(ExecutionPlace(1, 1), 0.0)
+
+
+def test_kernel_prime_ptt_covers_every_place():
+    sched = make_scheduler("DAM-C", tx2(), seed=0)
+    sim = Simulator(sched)
+    tt = matmul_type(64)
+    n = sim.kernel.prime_ptt(tt)
+    places = sched.topology.places()
+    assert n == len(places)
+    tbl = sched.ptt.for_type(tt.name)
+    for p in places:
+        assert tbl.get(p) == pytest.approx(
+            sim.kernel.estimate_seconds(tt, p))
+    assert sim.kernel.prime_ptt(tt) == 0     # idempotent
+
+
+# -- brownout ladder -----------------------------------------------------------
+def test_brownout_config_validation():
+    with pytest.raises(ValueError):
+        BrownoutConfig(enter=(0.5, 1.5, 4.0), exit=(0.6, 0.75, 2.0))
+    with pytest.raises(ValueError):          # enter not increasing
+        BrownoutConfig(enter=(1.5, 0.5, 4.0), exit=(0.2, 0.3, 2.0))
+    with pytest.raises(ValueError):
+        BrownoutConfig(min_tokens=0)
+    cfg = BrownoutConfig()
+    assert cfg.enter[0] > cfg.exit[0]
+
+
+def test_overload_controller_hysteresis():
+    ctl = OverloadController(BrownoutConfig(enter=(1.0, 2.0, 4.0),
+                                            exit=(0.5, 1.0, 2.0)))
+    assert ctl.update(0.4, 0.0) == 0
+    assert ctl.update(1.2, 1.0) == 1         # cross enter[0]
+    assert ctl.update(0.8, 2.0) == 1         # inside the hysteresis band
+    assert ctl.update(0.4, 3.0) == 0         # below exit[0]
+    assert ctl.update(5.0, 4.0) == 3         # step change climbs all rungs
+    assert ctl.shrink_low and ctl.shed_low and ctl.reject_low
+    assert ctl.update(3.0, 5.0) == 3         # >= exit[2]: holds
+    assert ctl.update(1.5, 6.0) == 2         # < exit[2] but >= exit[1]
+    assert ctl.update(0.7, 7.0) == 1         # < exit[1] but >= exit[0]
+    assert ctl.update(0.1, 8.0) == 0
+    # one transition tuple per rung *change*, multi-rung jumps collapsed
+    assert ctl.transitions == [(1.0, 0, 1), (3.0, 1, 0), (4.0, 0, 3),
+                               (6.0, 3, 2), (7.0, 2, 1), (8.0, 1, 0)]
+
+
+# -- DES forced overload: the serving-shaped ladder drill ----------------------
+def _overload_sim():
+    """A 2-core fleet hit by a burst of 40 simultaneous HIGH prefills
+    (~1.3 s of work against 2 cores): the serving-shaped DES twin of the
+    threaded open-loop overload test in ``test_serve.py``.  Every commit
+    folds the kernel's backlog signal into the controller; each prefill's
+    commit is the request's admission point (rung 3 rejects its decode
+    chain outright), each decode commit is a shed point (rung >= 2 drops
+    the rest of the chain).  The ladder jumps straight to rung 3 on the
+    first observation, then walks down through shed and admit phases as
+    the backlog drains."""
+    topo = Topology([ResourcePartition("s0", "pod", 0, 2, (1,))])
+    sched = make_scheduler("DAM-C", topo, seed=0, queue_penalty=1.0)
+    sim = Simulator(sched)
+    ctl = OverloadController(BrownoutConfig(enter=(0.05, 0.15, 0.30),
+                                            exit=(0.02, 0.04, 0.15)))
+    root_t = TaskType("burst_root", serial_time={"pod": 1e-4})
+    pre_t = TaskType("ov_prefill", serial_time={"pod": 0.05})
+    dec_t = TaskType("ov_decode", serial_time={"pod": 0.02})
+    counters = {"admitted": 0, "rejected": 0, "shed": 0}
+    rungs: list[int] = []
+    n_requests = 40
+
+    def tick() -> None:
+        rungs.append(ctl.update(sim.kernel.backlog_signal(), sim.now))
+
+    def make_dec(i):
+        d = Task(dec_t, priority=Priority.LOW)
+
+        def dec_commit(_t, _i=i):
+            tick()
+            if ctl.shed_low:
+                counters["shed"] += 1
+                return []
+            return [make_dec(_i + 1)] if _i + 1 < 3 else []
+
+        d.on_commit = dec_commit
+        return d
+
+    def make_request():
+        pre = Task(pre_t, priority=Priority.HIGH)
+
+        def pre_commit(_t):
+            tick()
+            if ctl.reject_low:
+                counters["rejected"] += 1
+                return []
+            counters["admitted"] += 1
+            return [make_dec(0)]
+
+        pre.on_commit = pre_commit
+        return pre
+
+    root = Task(root_t, priority=Priority.LOW)
+    root.on_commit = lambda _t: [make_request() for _ in range(n_requests)]
+    sim.submit(DAG([root], 1 + n_requests))
+    sim.run()
+    return ctl, counters, rungs
+
+
+def test_des_forced_overload_climbs_and_recovers():
+    ctl, counters, rungs = _overload_sim()
+    # the burst's backlog sends the very first observation to rung 3
+    # (admission rejection); both interventions fire on the way down
+    assert rungs[0] == 3
+    assert counters["rejected"] > 0
+    assert counters["shed"] > 0
+    assert counters["admitted"] > 0
+    assert counters["rejected"] + counters["admitted"] == 40
+    # the DES is deterministic, so the counters pin exactly
+    assert counters == {"admitted": 7, "rejected": 33, "shed": 2}
+    # the backlog only drains after the burst, so the rung walk is
+    # monotone non-increasing and ends fully recovered, one rung at a
+    # time: 3 -> 2 -> 1 -> 0
+    assert all(a >= b for a, b in zip(rungs, rungs[1:]))
+    assert rungs[-1] == 0
+    assert [(frm, to) for _, frm, to in ctl.transitions] == \
+        [(0, 3), (3, 2), (2, 1), (1, 0)]
+
+
+def test_des_forced_overload_is_deterministic():
+    a = _overload_sim()
+    b = _overload_sim()
+    assert a[1] == b[1]
+    assert a[2] == b[2]
+    assert a[0].transitions == b[0].transitions

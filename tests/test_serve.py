@@ -1,11 +1,12 @@
 """Serving engine: requests complete; PTT steers prefill away from a
-slowed submesh."""
+slowed submesh; overload degrades gracefully through the brownout
+ladder instead of growing an unbounded queue."""
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS
 from repro.core import tpu_pod_slices
-from repro.serve import ServingEngine
+from repro.serve import BrownoutConfig, ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -89,6 +90,60 @@ def test_deadline_shedding_truncates_decode_chain(engine_cfg):
     for r in reqs:
         assert r.shed and r.t_done > 0
         assert 1 <= len(r.out_tokens) < 6        # truncated, not empty
+
+
+def test_forced_overload_backpressure_and_brownout():
+    """Synthetic-payload engine driven ~4x past fleet capacity: the
+    bounded pending queue rejects with the ``backpressure`` cause, the
+    brownout ladder climbs at least to its shed rung, every intervention
+    lands in a cause-split counter, and the transition log is a
+    contiguous rung walk."""
+    topo = tpu_pod_slices(2, 2)                  # 4 slices
+    eng = ServingEngine(None, topo, scheduler="DAM-C",
+                        max_pending=24,
+                        brownout=BrownoutConfig(enter=(0.02, 0.05, 0.10),
+                                                exit=(0.01, 0.02, 0.05)),
+                        prefill_s=20e-3, decode_s=5e-3)
+    # request work = 20 + 4*5 = 40 ms -> capacity ~100 rps on 4 slices;
+    # offered 400 rps
+    prompts = [np.zeros(8, np.int32)] * 80
+    m = eng.run_open_loop(prompts, rate_rps=400.0, max_new_tokens=5,
+                          timeout=120)
+    assert not m.errors
+    s = eng.latency_stats()
+    assert s["completed"] + s["rejected"] == 80
+    assert s["rejected_backpressure"] > 0        # bounded queue held
+    assert s["rejected"] == s["rejected_backpressure"]
+    assert s["rejected_deadline"] == 0           # no deadlines in play
+    assert s["shed_deadline"] == 0
+    assert s["brownout_max_rung"] >= 2           # ladder reached shedding
+    # at least one of the LOW-traffic interventions actually degraded
+    # output (clamped length or shed chain)
+    assert s["shed_brownout"] + s["tokens_clamped"] > 0
+    assert s["shed"] == s["shed_brownout"]
+    # the transition log is a contiguous walk starting at rung 0, and
+    # the stats counted every hop
+    prev = 0
+    for _t, frm, to in m.brownout_transitions:
+        assert frm == prev and to != frm
+        prev = to
+    assert s["brownout_transitions"] == len(m.brownout_transitions) > 0
+
+
+def test_warm_start_priming_is_engine_level():
+    """``warm_start`` seeds the PTT through the kernel before the first
+    request of each type places, so a cold table never auto-wins the
+    argmin; explicit ``prime()`` reports zero once warmed."""
+    from repro.core import TaskType
+    topo = tpu_pod_slices(2, 2)
+    eng = ServingEngine(None, topo, scheduler="DAM-C")
+    eng.submit(np.zeros(8, np.int32), max_new_tokens=2)
+    tbl = eng.sched.ptt.for_type("prefill_16")
+    assert all(tbl.get(p) > 0.0 for p in topo.places())
+    kinds = {p.kind for p in topo.partitions}
+    assert eng.prime(TaskType("prefill_16",
+                              serial_time={k: 1e-3 for k in kinds})) == 0
+    eng.run(timeout=60)
 
 
 def test_open_loop_poisson_arrival(engine_cfg):
