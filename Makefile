@@ -8,9 +8,10 @@ PY := PYTHONPATH=src python
 
 check: lint test bench-smoke acceptance
 
-# the serve suite's acceptance block gates: every `false` entry in the
-# root BENCH_serve.json must be in tools/check_acceptance.py's
-# documented-negatives allowlist (see DESIGN.md §2)
+# acceptance blocks gate: every `false` entry in the root
+# BENCH_serve.json / BENCH_scale.json artifacts must be in
+# tools/check_acceptance.py's documented-negatives allowlists
+# (see DESIGN.md §2 and §"Control plane")
 acceptance:
 	python tools/check_acceptance.py
 
@@ -29,9 +30,10 @@ lint:
 # worker pool is cached across suites); scenarios covers the bursty/
 # governor/trace profiles and the lazy-breakpoint pull path; preempt
 # covers pod-slice revocation + the mixed-generation fleet; serve covers
-# the threaded open-loop serving path (p50/p99 TTFT under interference)
+# the threaded open-loop serving path (p50/p99 TTFT under interference);
+# scale covers the sharded control plane's flat-vs-sharded crossover
 bench-smoke:
-	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,faults,serve,kernels
+	$(PY) -m benchmarks.run --fast --workers 2 --only fig4,scenarios,preempt,faults,serve,kernels,scale
 
 # full paper-figure sweep (paper-full task counts: matmul 32k / copy 10k /
 # stencil 20k) + scheduler-engine throughput + the serving sweep, fanned

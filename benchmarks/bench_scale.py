@@ -1,0 +1,145 @@
+"""Control-plane scaling: flat kernel vs sharded plane under modeled
+scheduler overhead.
+
+The DES charges ``ShardingSpec.decision_s`` per wake through a per-shard
+single-server decision queue (``repro/core/simulator.py``).  The flat
+kernel is then *one* saturating server — its simulated throughput is
+capped at ``1/decision_s`` tasks/s no matter how many cores the fleet
+has — while the sharded plane (``repro/core/shards.py``) runs one server
+per shard plus the global rebalancer and wake-time overflow routing.
+This harness sweeps pods x decision latency and shows the crossover: at
+zero latency flat wins slightly (sharding fences work stealing), and as
+latency grows the flat kernel saturates while the sharded plane keeps
+scaling.
+
+The fleet is mixed-generation (alternating ``pod`` / ``pod_v4``) with
+chain co-runners parked on a few fast slices, so placement quality still
+matters at scale: the acceptance block requires the sharded plane to
+sustain >=2x the flat throughput at the largest pods x latency cell
+*and* DAM-C to still beat RWS there — scaling the control plane must not
+cost the paper's asymmetry-awareness win.
+
+Emits ``name,value,derived`` CSV rows and a ``BENCH_scale.json``
+artifact mirrored to the repo root; ``tools/check_acceptance.py`` gates
+its acceptance block in ``make check``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import RunSpec, run_cell, run_cells
+
+from .common import emit, write_artifact
+
+_TT = ("matmul", {"tile": 4096})
+SLICES_PER_POD = 4
+PODS = (4, 8)
+DECISIONS = (0.0, 2e-4, 1e-3)
+SCHEDS = ("DAM-C", "RWS")
+
+
+def _kinds(pods: int) -> tuple[str, ...]:
+    return tuple("pod" if p % 2 == 0 else "pod_v4" for p in range(pods))
+
+
+def _bg_cores(pods: int) -> tuple[int, ...]:
+    # a chain co-runner on the first slice of two pods per 4-pod group:
+    # enough dynamic asymmetry that blind placement (RWS) pays for it
+    return tuple(SLICES_PER_POD * p for p in range(pods) if p % 4 in (0, 1))
+
+
+def _sharding(pods: int, decision_s: float, *, sharded: bool):
+    if sharded:
+        return (("pods_per_shard", 2), ("decision_s", decision_s),
+                ("rebalance_period_s", 2e-3),
+                ("rebalance_decision_s", decision_s),
+                ("migration_s", 2e-4), ("overflow_ratio", 2.0))
+    if decision_s == 0.0:
+        return None                 # the true flat kernel, no event layer
+    # degenerate one-shard grouping: the flat kernel behind one modeled
+    # decision server — what "the old control plane at this latency" costs
+    return (("pods_per_shard", pods), ("decision_s", decision_s))
+
+
+def _spec(key: str, pods: int, decision_s: float, sched: str, *,
+          sharded: bool, total: int, seed: int = 5) -> RunSpec:
+    return RunSpec(
+        key=key,
+        dag=("synthetic", {"task_type": _TT, "parallelism": 48,
+                           "total_tasks": total}),
+        scheduler=sched,
+        topology=("tpu_pod_slices", {"pods": pods,
+                                     "slices_per_pod": SLICES_PER_POD,
+                                     "kinds": _kinds(pods)}),
+        seed=seed,
+        background=tuple(("chain", {"task_type": _TT, "core": c})
+                         for c in _bg_cores(pods)),
+        sharding=_sharding(pods, decision_s, sharded=sharded),
+        collect=("migration",) if sharded else (),
+    )
+
+
+def run(fast: bool = False, workers: int | None = None) -> dict:
+    out: dict = {}
+    total = 6000 if not fast else 3000
+    pods_sweep = PODS if not fast else PODS[-1:]    # acceptance cell stays
+    decisions = DECISIONS if not fast else (0.0, DECISIONS[-1])
+    specs = []
+    for pods in pods_sweep:
+        for d in decisions:
+            for sched in SCHEDS:
+                for mode in ("flat", "sharded"):
+                    key = f"scale/p{pods}/d{d:g}/{mode}/{sched}"
+                    specs.append(_spec(key, pods, d, sched,
+                                       sharded=(mode == "sharded"),
+                                       total=total))
+    results = run_cells(specs, workers=workers)
+    for key, res in results.items():
+        out[key] = {"throughput_tps": round(res["throughput_tps"], 1),
+                    "makespan_s": round(res["makespan_s"], 6)}
+        if "migration" in res:
+            out[key]["migration"] = res["migration"]
+        emit(key, round(res["throughput_tps"], 1), "sim_tasks_per_sim_s")
+
+    # equivalence pin: a one-shard zero-overhead sharded spec IS the flat
+    # code path (make_control_plane degenerates) — bit-identical makespan
+    p0 = pods_sweep[0]
+    base = run_cell(_spec("eq/flat", p0, 0.0, "DAM-C", sharded=False,
+                          total=total))
+    one = dataclasses.replace(
+        _spec("eq/one_shard", p0, 0.0, "DAM-C", sharded=False, total=total),
+        sharding=(("pods_per_shard", p0),))
+    oner = run_cell(one)
+    eq = (base["makespan_s"] == oner["makespan_s"]
+          and base["n_tasks"] == oner["n_tasks"])
+    out["equivalence"] = {"flat_makespan_s": base["makespan_s"],
+                          "one_shard_makespan_s": oner["makespan_s"]}
+
+    # acceptance: at the largest pods x decision-latency cell the sharded
+    # plane must sustain >=2x flat, DAM-C must still beat RWS there, and
+    # the flat kernel must actually be saturating (else the sweep proves
+    # nothing about control-plane scaling)
+    pl, dl = pods_sweep[-1], decisions[-1]
+    cell = lambda mode, sched: results[f"scale/p{pl}/d{dl:g}/{mode}/{sched}"]
+    flat_dam = cell("flat", "DAM-C")["throughput_tps"]
+    shard_dam = cell("sharded", "DAM-C")["throughput_tps"]
+    shard_rws = cell("sharded", "RWS")["throughput_tps"]
+    mig = cell("sharded", "DAM-C")["migration"]
+    out["acceptance"] = {
+        "equivalence/one_shard_spec_is_flat_bit_identical": eq,
+        f"p{pl}/d{dl:g}/sharded_ge_2x_flat_DAM-C":
+            shard_dam >= 2.0 * flat_dam,
+        f"p{pl}/d{dl:g}/DAM-C_beats_RWS_sharded": shard_dam > shard_rws,
+        f"p{pl}/d{dl:g}/flat_saturates_at_1_over_d":
+            flat_dam <= 1.05 / dl,
+        f"p{pl}/d{dl:g}/migration_active":
+            mig["migrations"] + mig["overflow_migrations"] > 0,
+    }
+    for k, v in out["acceptance"].items():
+        emit(f"scale/acceptance/{k}", v, "")
+    write_artifact("BENCH_scale", out, root_copy=True)
+    return out
+
+
+if __name__ == "__main__":
+    run()

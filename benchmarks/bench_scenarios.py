@@ -22,6 +22,12 @@ error bars per cell:
   ``LoadCoupledGovernor`` (a partition running more tasks detunes
   harder), so placement decisions feed back into the asymmetry the
   scheduler must adapt to.
+* ``mmpp_storm`` — a single-cell probe on the *sharded* control plane
+  (``pods_per_shard=2`` + rebalancer + overflow routing): MMPP-correlated
+  co-runner bursts (``mmpp_burst_episodes``) share one calm/storm
+  timeline across one core group per cluster, so interference storms hit
+  several shards at once and the rebalancer must move queued work while
+  the storm lasts.
 
 Each (scenario, topology, P, scheduler) cell runs at several seeds; the
 emitted aggregates are mean ± population-std of throughput across seeds.
@@ -80,10 +86,25 @@ def _scenario_kwargs(scenario: str, seed: int) -> dict:
                                              "period": 0.004, "lo": 0.2,
                                              "t_end": _T_END,
                                              "period_spread": 0.05}))
+    if scenario == "mmpp_storm":
+        # correlated bursts (one MMPP calm/storm timeline, one burst
+        # stream per core group) on a sharded control plane: storms land
+        # on several shards together, so the global rebalancer — not just
+        # local stealing — has to dig the hot shards out
+        return dict(
+            background=(("mmpp_bursty", {
+                "task_type": _TT,
+                "core_groups": ((0, 1, 2), (6, 7, 8), (12, 13, 14),
+                                (18, 19, 20)),
+                "seed": seed, "t_end": _T_END, "mean_on": 0.002,
+                "mean_calm": 0.02, "mean_storm": 0.008,
+                "mean_off_calm": 0.008, "mean_off_storm": 0.002}),),
+            sharding=(("pods_per_shard", 2), ("rebalance_period_s", 0.002),
+                      ("overflow_ratio", 2.0)))
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
-SCENARIOS = ("bursty", "governor", "trace", "governor_load")
+SCENARIOS = ("bursty", "governor", "trace", "governor_load", "mmpp_storm")
 
 
 def grid(fast: bool = False) -> list[RunSpec]:
@@ -94,10 +115,12 @@ def grid(fast: bool = False) -> list[RunSpec]:
     total = FULL_TASKS if not fast else CI_TASKS
     specs = []
     for scenario in SCENARIOS:
-        # governor_load is a single-cell probe of the load-feedback
-        # coupling, not a full sweep axis: first topology, smallest P
-        sc_topos = topos[:1] if scenario == "governor_load" else topos
-        sc_par = par[:1] if scenario == "governor_load" else par
+        # governor_load / mmpp_storm are single-cell probes (load
+        # feedback, sharded-plane storms), not full sweep axes: first
+        # topology, smallest P
+        probe = scenario in ("governor_load", "mmpp_storm")
+        sc_topos = topos[:1] if probe else topos
+        sc_par = par[:1] if probe else par
         for tname, topo_spec in sc_topos:
             for p in sc_par:
                 for sched_name in scheds:

@@ -25,8 +25,8 @@ import time
 
 from . import (bench_dvfs, bench_faults, bench_heat, bench_interference,
                bench_kernels, bench_kmeans, bench_preemption, bench_roofline,
-               bench_scenarios, bench_sched_throughput, bench_sensitivity,
-               bench_serve, bench_task_distribution)
+               bench_scale, bench_scenarios, bench_sched_throughput,
+               bench_sensitivity, bench_serve, bench_task_distribution)
 from . import common
 
 SUITES = {
@@ -43,6 +43,7 @@ SUITES = {
     "faults": bench_faults.run,
     "sched": bench_sched_throughput.run,
     "serve": bench_serve.run,
+    "scale": bench_scale.run,
 }
 
 

@@ -11,6 +11,7 @@ Public surface:
   interference— co-running apps + DVFS speed profiles
   preemption  — seeded pod-slice revoke/restore episode models
   faults      — seeded task-level fault injection + recovery policy
+  shards      — sharded control plane (per-pod kernels + global rebalancer)
   simulator   — discrete-event engine (paper-scale evaluation)
   multirun    — batched multi-run engine (sweeps fanned across host cores)
   runtime     — threaded executor running real payloads (JAX kernels)
@@ -24,19 +25,23 @@ from .interference import (BackgroundApp, LoadCoupledGovernor,
                            PeriodicProfile, SpeedProfile, SpeedProfileBase,
                            TraceProfile, burst_episodes, corun_chain,
                            corun_socket, dvfs_denver, governor_profile,
-                           mmpp_on_off, mmpp_state_timeline,
-                           random_walk_trace, renewal_on_off)
+                           mmpp_burst_episodes, mmpp_on_off,
+                           mmpp_state_timeline, random_walk_trace,
+                           renewal_on_off)
 from .metrics import RequestRecord, RunMetrics, TaskRecord
 from .multirun import (RunSpec, default_workers, run_cell, run_cells,
                        shutdown_pool)
 from .places import ExecutionPlace, LiveView, ResourcePartition, Topology, \
     haswell, haswell_cluster, tpu_pod_slices, tx2, tx2_xl
 from .preemption import (PreemptionModel, mmpp_preemption,
-                         pod_slice_preemption, prune_full_outages)
+                         pod_slice_preemption, prune_full_outages,
+                         sub_slice_preemption)
 from .ptt import PTT, PTTBank
 from .queues import SplitWSQ, WorkQueues
 from .runtime import ThreadedRuntime, run_threaded
 from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
+from .shards import (GlobalRebalancer, ShardedControlPlane, ShardingSpec,
+                     make_control_plane)
 from .simulator import Simulator, simulate
 from .task import (Priority, Task, TaskType, copy_type, kmeans_map_type,
                    kmeans_reduce_type, matmul_type, mpi_exchange_type,
@@ -47,13 +52,16 @@ __all__ = [
     "synthetic_dag",
     "BackgroundApp", "PeriodicProfile", "SpeedProfile", "SpeedProfileBase",
     "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
-    "dvfs_denver", "governor_profile", "LoadCoupledGovernor", "mmpp_on_off", "mmpp_state_timeline",
+    "dvfs_denver", "governor_profile", "LoadCoupledGovernor",
+    "mmpp_burst_episodes", "mmpp_on_off", "mmpp_state_timeline",
     "random_walk_trace", "renewal_on_off",
     "RequestRecord", "RunMetrics", "TaskRecord", "ExecutionPlace", "LiveView",
     "ResourcePartition", "Topology", "haswell", "haswell_cluster",
     "tpu_pod_slices", "tx2", "tx2_xl",
     "PreemptionModel", "mmpp_preemption", "pod_slice_preemption",
-    "prune_full_outages",
+    "prune_full_outages", "sub_slice_preemption",
+    "GlobalRebalancer", "ShardedControlPlane", "ShardingSpec",
+    "make_control_plane",
     "Fault", "FaultModel", "RecoveryPolicy", "mmpp_faults", "task_faults",
     "SchedulingKernel", "ptt_observe", "split_by_priority",
     "SplitWSQ", "WorkQueues",

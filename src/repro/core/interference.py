@@ -497,6 +497,44 @@ def burst_episodes(task_type: TaskType, cores: Sequence[int], *, seed: int,
                  for t0, t1 in windows)
 
 
+def mmpp_burst_episodes(task_type: TaskType, core_groups: Sequence[Sequence[int]],
+                        *, seed: int, t_end: float, mean_on: float,
+                        mean_calm: float, mean_storm: float,
+                        mean_off_calm: float, mean_off_storm: float,
+                        thrash: float = 0.35) -> tuple[BackgroundApp, ...]:
+    """MMPP-*correlated* co-runner bursts across several core groups.
+
+    One hidden calm/storm modulating chain (seeded from ``seed`` alone,
+    :func:`mmpp_state_timeline`) is shared by every group in
+    ``core_groups``; each group then draws its own on/off episodes from a
+    per-group stream through :func:`mmpp_on_off` — frequent bursts while
+    the shared chain is stormy (``mean_off_storm`` idle gaps, typically
+    short), rare ones while calm.  Because the chain is shared, bursts
+    *cluster in time across groups* — several pods get hammered in the
+    same storm, which is the regime a sharded control plane's rebalancer
+    has to survive (every shard hot at once looks balanced; one hot shard
+    must drain).  Per-group draws come from per-group streams, so adding
+    or removing a group never shifts another group's episodes.
+    """
+    if not math.isfinite(t_end) or t_end <= 0.0:
+        raise ValueError("mmpp_burst_episodes needs a finite positive t_end")
+    state_rng = random.Random(f"burst-mmpp-state:{seed}")
+    timeline = mmpp_state_timeline(state_rng, t_end=t_end,
+                                   mean_calm=mean_calm,
+                                   mean_storm=mean_storm)
+    apps: list[BackgroundApp] = []
+    for g, cores in enumerate(core_groups):
+        rng = random.Random(f"burst-mmpp:{seed}:{g}")
+        for t0, t1 in mmpp_on_off(rng, timeline, t_end=t_end,
+                                  mean_on=mean_on,
+                                  mean_off_calm=mean_off_calm,
+                                  mean_off_storm=mean_off_storm):
+            apps.append(BackgroundApp(task_type, tuple(cores), t0, t1,
+                                      thrash))
+    apps.sort(key=lambda a: (a.t_start, a.cores, a.t_end))
+    return tuple(apps)
+
+
 def dvfs_denver(n_cores: int = 6, *, period: float = 10.0,
                 hi_mhz: float = 2035.0, lo_mhz: float = 345.0) -> PeriodicProfile:
     """Paper §5.2: Denver cluster (cores 0-1 on TX2) alternates between the

@@ -53,7 +53,8 @@ class SchedulingKernel:
     :meth:`end_run` so it never leaks into a later run.
     """
 
-    def __init__(self, scheduler: Scheduler, *, now: Callable[[], float]):
+    def __init__(self, scheduler: Scheduler, *, now: Callable[[], float],
+                 queues: Optional[WorkQueues] = None):
         self.sched = scheduler
         self.now = now
         # Outstanding-work accounting for queue-aware placement: on when
@@ -61,11 +62,18 @@ class SchedulingKernel:
         # Off (the default) every tracking branch below is dead code, so
         # load-oblivious runs stay bit-identical.
         self.track_load = scheduler.queue_penalty > 0.0 or scheduler.track_load
-        self.queues = WorkQueues(
-            scheduler.topology.n_cores,
-            priority_dequeue=scheduler.priority_dequeue,
-            steal_high=scheduler.steal_high,
-            track_load=self.track_load)
+        # ``queues`` lets a sharded control plane hand several kernels one
+        # shared WorkQueues (per-core structures are naturally disjoint;
+        # steal groups fence the victim scans).
+        if queues is not None:
+            self.track_load = self.track_load or queues.track_load
+            self.queues = queues
+        else:
+            self.queues = WorkQueues(
+                scheduler.topology.n_cores,
+                priority_dequeue=scheduler.priority_dequeue,
+                steal_high=scheduler.steal_high,
+                track_load=self.track_load)
         self._all_cores = tuple(range(scheduler.topology.n_cores))
         if self.track_load:
             # per-core estimated seconds of placed/running work, charged at
@@ -97,17 +105,22 @@ class SchedulingKernel:
         view = self.sched.live
         return self._all_cores if view is None else view.cores
 
-    def requeue_displaced(self, task: Task) -> int:
+    def requeue_displaced(self, task: Task,
+                          waker: Optional[int] = None) -> int:
         """Re-place a task displaced by a revocation: the old binding is
         void (its partition may be down), the wake-time decision is redone
         over the surviving places, and priority-oblivious paths get a
         uniformly random live waker core (one seeded draw per task, so
-        the sequence is scheduler-independent)."""
+        the sequence is scheduler-independent).  A sharded control plane
+        passes ``waker`` explicitly — it draws the core from the *global*
+        live set before routing to the owning shard."""
         task.t_ready = self.now()
         task.bound_place = None
-        live = self.live_cores()
-        rng = self.sched.rng
-        waker = live[rng.randrange(len(live))] if len(live) > 1 else live[0]
+        if waker is None:
+            live = self.live_cores()
+            rng = self.sched.rng
+            waker = (live[rng.randrange(len(live))] if len(live) > 1
+                     else live[0])
         target = self.sched.place_on_wake(task, waker)
         core = waker if target is None else target
         if self.track_load:
@@ -271,7 +284,8 @@ class SchedulingKernel:
         live = set(self._all_cores if view is None else view.cores)
         tbl = self.sched.ptt.for_type(task.type.name)
         cand = [p for p in self.sched.topology.places()
-                if p.leader in live and not exclude_cores.intersection(p.cores)]
+                if live.issuperset(p.cores)
+                and not exclude_cores.intersection(p.cores)]
         if not cand:
             return None
         return tbl.best(cand, cost=False, rng=rng)
@@ -296,6 +310,13 @@ class SchedulingKernel:
             for new_task in task.on_commit(task):
                 if new_task.n_deps == 0:
                     yield new_task
+
+    def set_availability(self, down_cores: frozenset) -> None:
+        """Refresh the scheduler's live view for a revoked core set (the
+        engines call this at revoke/restore edges; views are interned on
+        the topology).  An empty set clears the mask entirely."""
+        self.sched.live = (None if not down_cores else
+                           self.sched.topology.live_view_cores(down_cores))
 
     def end_run(self) -> None:
         """A run that finishes mid-outage must not leak its availability

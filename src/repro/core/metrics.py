@@ -87,6 +87,13 @@ class RunMetrics:
     preempt_events: int = 0
     tasks_preempted: int = 0
     work_lost_s: float = 0.0
+    # sharded-control-plane accounting (all zero on the flat kernel):
+    # rebalancer migrations landed, wake-time overflow redirects,
+    # rebalance rounds run, and the estimated seconds of work migrated
+    migrations: int = 0
+    overflow_migrations: int = 0
+    rebalance_rounds: int = 0
+    migrated_load_s: float = 0.0
     # fault-injection / recovery accounting (all zero without a FaultModel
     # attached — see ``repro.core.faults``): injected fault counts, retry /
     # permanent-failure counts, straggler flags and speculative duplicates,

@@ -53,13 +53,15 @@ from .faults import FaultModel, RecoveryPolicy, mmpp_faults, task_faults
 from .interference import (BackgroundApp, LoadCoupledGovernor,
                            PeriodicProfile, SpeedProfile, SpeedProfileBase,
                            burst_episodes, corun_chain, corun_socket,
-                           dvfs_denver, governor_profile, random_walk_trace)
+                           dvfs_denver, governor_profile, mmpp_burst_episodes,
+                           random_walk_trace)
 from .metrics import RunMetrics
 from .places import (Topology, haswell, haswell_cluster, tpu_pod_slices, tx2,
                      tx2_xl)
 from .preemption import (PreemptionModel, mmpp_preemption,
-                         pod_slice_preemption)
+                         pod_slice_preemption, sub_slice_preemption)
 from .schedulers import make_scheduler
+from .shards import ShardingSpec
 from .simulator import simulate
 from .task import (TaskType, copy_type, kmeans_map_type, kmeans_reduce_type,
                    matmul_type, mpi_exchange_type, stencil_type)
@@ -127,12 +129,21 @@ def _bg_bursty(task_type: TaskType, cores: Sequence[int],
     return burst_episodes(task_type, tuple(cores), **kw)
 
 
+def _bg_mmpp_bursty(task_type: TaskType, core_groups: Sequence[Sequence[int]],
+                    **kw) -> tuple[BackgroundApp, ...]:
+    # MMPP-correlated bursts: one calm/storm timeline shared by all core
+    # groups, so co-runner pressure clusters in time across the fleet.
+    return mmpp_burst_episodes(task_type,
+                               [tuple(g) for g in core_groups], **kw)
+
+
 # Builders may return one BackgroundApp or a tuple of them (bursty
 # episodes); run_cell flattens.
 BACKGROUND_BUILDERS = {
     "chain": _bg_chain,
     "socket": _bg_socket,
     "bursty": _bg_bursty,
+    "mmpp_bursty": _bg_mmpp_bursty,
 }
 
 
@@ -195,9 +206,14 @@ def _pre_mmpp(topo: Topology, **kw) -> PreemptionModel:
     return mmpp_preemption(topo, **kw)
 
 
+def _pre_sub_slices(topo: Topology, **kw) -> PreemptionModel:
+    return sub_slice_preemption(topo, **kw)
+
+
 PREEMPTION_BUILDERS = {
     "pod_slices": _pre_pod_slices,
     "mmpp": _pre_mmpp,
+    "sub_slices": _pre_sub_slices,
 }
 
 
@@ -226,6 +242,10 @@ COLLECTORS = {
     "preemption": lambda m: {"events": m.preempt_events,
                              "tasks_preempted": m.tasks_preempted,
                              "work_lost_s": round(m.work_lost_s, 9)},
+    "migration": lambda m: {"migrations": m.migrations,
+                            "overflow_migrations": m.overflow_migrations,
+                            "rebalance_rounds": m.rebalance_rounds,
+                            "migrated_load_s": round(m.migrated_load_s, 9)},
     "faults": lambda m: m.fault_summary(),
     "task_sojourn": lambda m: m.task_sojourn_stats(),
 }
@@ -240,6 +260,9 @@ class RunSpec:
     ``(name, kwargs)`` pairs; ``background`` is a tuple of such pairs.
     ``recovery`` is a plain kwargs dict for
     :class:`~.faults.RecoveryPolicy` (ignored without ``faults``).
+    ``sharding`` is a tuple of ``(field, value)`` pairs for
+    :class:`~.shards.ShardingSpec` (kept as pairs, not a dict, so the
+    frozen spec stays hashable); ``None`` runs the flat kernel.
     DAG and background kwargs may contain a ``task_type`` entry that is
     itself a ``(name, kwargs)`` pair resolved through :data:`TASK_TYPES`
     (the mixed DAG builder takes a ``task_types`` tuple of such pairs).
@@ -259,6 +282,7 @@ class RunSpec:
     preemption: Optional[tuple] = None
     faults: Optional[tuple] = None
     recovery: Optional[dict] = None
+    sharding: Optional[tuple] = None
     horizon: float = 1e6
     collect: tuple = ()
     measure_wall: bool = False
@@ -320,11 +344,14 @@ def run_cell(spec: RunSpec) -> dict:
         faults = fault_builder(**fault_kwargs)
     recovery = (RecoveryPolicy(**spec.recovery)
                 if spec.recovery is not None else None)
+    sharding = (ShardingSpec(**dict(spec.sharding))
+                if spec.sharding is not None else None)
 
     t0 = time.perf_counter()
     m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
                              preemption=preemption, faults=faults,
-                             recovery=recovery, horizon=spec.horizon)
+                             recovery=recovery, sharding=sharding,
+                             horizon=spec.horizon)
     wall = time.perf_counter() - t0
 
     out = {

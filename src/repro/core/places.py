@@ -83,22 +83,32 @@ class ResourcePartition:
 
 @dataclasses.dataclass(frozen=True)
 class LiveView:
-    """The surviving fraction of a topology while some partitions are
-    revoked (pod-slice preemption, maintenance events).
+    """The surviving fraction of a topology while some capacity is revoked
+    (pod-slice preemption, maintenance events) or fenced off (a control-
+    plane shard restricted to its own pods).
 
     Precomputed index arrays mirror the Topology's dense search metadata so
-    the PTT searches can run masked argmins over live places only.  Places
-    never span partitions, so a place is live iff its leader's partition
-    is; availability is partition-granular, matching how revocations
-    arrive.  Views are interned per down-set on the Topology
-    (:meth:`Topology.live_view`), so revoke/restore churn never
+    the PTT searches can run masked argmins over live places only.  A place
+    is live iff *all* its cores are live — for partition-granular down-sets
+    (how full revocations arrive) that reduces to the leader test, but
+    sub-pod revocations may take a core subset and leave its partition
+    partially up (``partial``).  Views are interned per down-set on the
+    Topology (:meth:`Topology.live_view` /
+    :meth:`Topology.live_view_cores`), so revoke/restore churn never
     re-allocates them.
     """
 
     place_idx: "np.ndarray"           # indices into topology.places()
     width1_idx: "np.ndarray"          # the width-1 subset of place_idx
-    partitions: tuple[ResourcePartition, ...]   # live, in topology order
+    partitions: tuple[ResourcePartition, ...]   # >=1 live core, topo order
     cores: tuple[int, ...]            # live cores, in topology order
+    part_cores: tuple[tuple[int, ...], ...] = ()  # live cores per partition
+    partial: bool = False             # some live partition is missing cores
+    core_set: frozenset = frozenset()  # O(1) membership over ``cores``
+
+    def cores_of(self, partition: ResourcePartition) -> tuple[int, ...]:
+        """Live cores of ``partition`` (must be in ``partitions``)."""
+        return self.part_cores[self.partitions.index(partition)]
 
 
 class Topology:
@@ -127,6 +137,7 @@ class Topology:
         self.width1_place_indices = np.flatnonzero(self.place_widths == 1)
         self._local_idx: dict[int, np.ndarray] = {}
         self._live_views: dict[frozenset, LiveView] = {}
+        self._live_views_cores: dict[frozenset, LiveView] = {}
 
     def partition_of(self, core: int) -> ResourcePartition:
         return self._part_of[core]
@@ -175,18 +186,50 @@ class Topology:
             for i in down_partitions:
                 if not 0 <= i < n:
                     raise ValueError(f"partition index {i} outside 0..{n - 1}")
-            live_parts = tuple(p for i, p in enumerate(self.partitions)
-                               if i not in down_partitions)
+            down_cores = frozenset(c for i in down_partitions
+                                   for c in self.partitions[i].cores)
+            view = self.live_view_cores(down_cores)
+            self._live_views[down_partitions] = view
+        return view
+
+    def live_view_cores(self, down_cores: frozenset) -> LiveView:
+        """Core-granular :class:`LiveView`: the cores in ``down_cores`` are
+        revoked; a partition stays listed while it has at least one live
+        core (``partial`` flags views where some listed partition is
+        incomplete).  Partition-granular down-sets produce the exact same
+        arrays :meth:`live_view` always built, so full-partition callers
+        are behavior-identical through this path."""
+        view = self._live_views_cores.get(down_cores)
+        if view is None:
+            for c in down_cores:
+                if not 0 <= c < self.n_cores:
+                    raise ValueError(
+                        f"core {c} outside 0..{self.n_cores - 1}")
+            live_parts, part_cores = [], []
+            for p in self.partitions:
+                cs = tuple(c for c in p.cores if c not in down_cores)
+                if cs:
+                    live_parts.append(p)
+                    part_cores.append(cs)
             if not live_parts:
                 raise ValueError("cannot revoke every partition")
-            live_cores = tuple(c for p in live_parts for c in p.cores)
+            live_cores = tuple(c for cs in part_cores for c in cs)
             core_up = np.zeros(self.n_cores, dtype=bool)
             core_up[list(live_cores)] = True
-            # places never cross partitions: the leader's liveness decides
-            idx = np.flatnonzero(core_up[self.place_leaders])
+            # a place is live iff all its cores are — places never cross
+            # partitions, so for full-partition down-sets this is exactly
+            # the old leader test
+            down_cum = np.concatenate(([0], np.cumsum(~core_up)))
+            idx = np.flatnonzero(
+                down_cum[self.place_leaders + self.place_widths]
+                == down_cum[self.place_leaders])
             w1 = idx[self.place_widths[idx] == 1]
-            view = LiveView(idx, w1, live_parts, live_cores)
-            self._live_views[down_partitions] = view
+            partial = any(len(cs) != p.size
+                          for cs, p in zip(part_cores, live_parts))
+            view = LiveView(idx, w1, tuple(live_parts), live_cores,
+                            tuple(part_cores), partial,
+                            frozenset(live_cores))
+            self._live_views_cores[down_cores] = view
         return view
 
     def __repr__(self) -> str:

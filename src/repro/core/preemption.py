@@ -70,12 +70,20 @@ class PreemptionModel:
     drains immediately and nothing new starts on a revoked partition;
     ``notice=0`` (the default) preempts instantaneously, bit-identical to
     models without the field.
+
+    ``subsets`` (optional, parallel to ``episodes``) gives each episode a
+    *sub-pod* granularity: entry i is either None (the whole partition —
+    the classic shape) or a tuple of absolute core ids inside partition
+    ``episodes[i][0]`` to revoke, leaving its siblings live (a partial
+    :class:`~.places.LiveView`).  An empty ``subsets`` means every episode
+    is whole-partition, so all existing 3-tuple consumers are untouched.
     """
 
     episodes: tuple[tuple[int, float, float], ...]
     preempt: str = "restart"
     resume_penalty: float = 0.05
     notice: float = 0.0
+    subsets: tuple[Optional[tuple[int, ...]], ...] = ()
 
     def __post_init__(self) -> None:
         if self.preempt not in PREEMPT_MODES:
@@ -86,6 +94,10 @@ class PreemptionModel:
             raise ValueError(f"bad resume_penalty {self.resume_penalty!r}")
         if not (0.0 <= self.notice and math.isfinite(self.notice)):
             raise ValueError(f"bad notice {self.notice!r}")
+        if self.subsets and len(self.subsets) != len(self.episodes):
+            raise ValueError(
+                f"subsets has {len(self.subsets)} entries for "
+                f"{len(self.episodes)} episodes")
         prev_t0 = -1.0
         last_end: dict[int, float] = {}
         for pidx, t0, t1 in self.episodes:
@@ -101,6 +113,22 @@ class PreemptionModel:
 
     def episodes_for(self, pidx: int) -> tuple[tuple[float, float], ...]:
         return tuple((t0, t1) for p, t0, t1 in self.episodes if p == pidx)
+
+    def cores_of(self, eidx: int, topology: Topology) -> tuple[int, ...]:
+        """The cores episode ``eidx`` revokes: its subset if one was named,
+        else every core of its partition."""
+        pidx = self.episodes[eidx][0]
+        sub = self.subsets[eidx] if self.subsets else None
+        if sub is not None:
+            part = topology.partitions[pidx]
+            for c in sub:
+                if not part.start <= c < part.start + part.size:
+                    raise ValueError(
+                        f"episode {eidx}: core {c} outside partition "
+                        f"{part.name} [{part.start}, "
+                        f"{part.start + part.size})")
+            return tuple(sub)
+        return topology.partitions[pidx].cores
 
     @property
     def n_episodes(self) -> int:
@@ -171,6 +199,42 @@ def pod_slice_preemption(topology: Topology, *, seed: int, t_end: float,
     return PreemptionModel(
         prune_full_outages(episodes, len(topology.partitions)),
         preempt=preempt, resume_penalty=resume_penalty, notice=notice)
+
+
+def sub_slice_preemption(topology: Topology, *, seed: int, t_end: float,
+                         mean_up: float, mean_down: float, frac: float = 0.5,
+                         partitions: Optional[Sequence[int]] = None,
+                         preempt: str = "restart",
+                         resume_penalty: float = 0.05,
+                         notice: float = 0.0) -> PreemptionModel:
+    """Sub-pod revocation episodes: the renewal timing of
+    :func:`pod_slice_preemption`, but each episode takes only a seeded
+    contiguous run of ``frac`` of its partition's cores (at least one, at
+    most all-but-one — the partition always keeps a live core, so no
+    full-outage pruning is ever needed).  The live view during such an
+    episode is *partial*: siblings keep dispatching while the searches
+    mask out every place that touches a revoked core."""
+    if not math.isfinite(t_end) or t_end <= 0.0:
+        raise ValueError("sub_slice_preemption needs a finite positive t_end")
+    if not 0.0 < frac < 1.0:
+        raise ValueError(f"frac {frac!r} outside (0, 1) — use "
+                         f"pod_slice_preemption for whole partitions")
+    rows: list[tuple[tuple[int, float, float], tuple[int, ...]]] = []
+    for i in _partition_indices(topology, partitions):
+        part = topology.partitions[i]
+        if part.size < 2:
+            continue                 # nothing strictly-sub-pod to take
+        rng = random.Random(f"preempt-sub:{seed}:{part.name}")
+        k = max(1, min(part.size - 1, round(frac * part.size)))
+        for t0, t1 in renewal_on_off(rng, t_start=0.0, t_end=t_end,
+                                     mean_on=mean_down, mean_off=mean_up):
+            off = rng.randrange(part.size - k + 1)
+            cores = tuple(range(part.start + off, part.start + off + k))
+            rows.append(((i, t0, t1), cores))
+    rows.sort(key=lambda r: (r[0][1], r[0][0], r[0][2]))
+    return PreemptionModel(tuple(r[0] for r in rows), preempt=preempt,
+                           resume_penalty=resume_penalty, notice=notice,
+                           subsets=tuple(r[1] for r in rows))
 
 
 def mmpp_preemption(topology: Topology, *, seed: int, t_end: float,

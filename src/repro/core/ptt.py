@@ -188,11 +188,15 @@ class PTT:
 
     def local_search(self, core: int, *, cost: bool = True, rng=None,
                      load: Optional[np.ndarray] = None,
-                     penalty: float = 0.0) -> ExecutionPlace:
-        """Paper: keep partition+core fixed, mold only the width."""
+                     penalty: float = 0.0,
+                     idx: Optional[np.ndarray] = None) -> ExecutionPlace:
+        """Paper: keep partition+core fixed, mold only the width.  ``idx``
+        overrides the candidate set (a live-masked subset of the core's
+        local places under sub-pod revocation); None is the exact
+        unmasked path."""
         return self._best_from_indices(
-            self.topology.local_place_indices(core), cost=cost, rng=rng,
-            load=load, penalty=penalty)
+            self.topology.local_place_indices(core) if idx is None else idx,
+            cost=cost, rng=rng, load=load, penalty=penalty)
 
     def global_search(self, *, cost: bool, rng=None,
                       idx: Optional[np.ndarray] = None,

@@ -57,7 +57,8 @@ class WorkQueues:
     """
 
     def __init__(self, n_cores: int, *, priority_dequeue: bool,
-                 steal_high: bool, track_load: bool = False):
+                 steal_high: bool, track_load: bool = False,
+                 groups: Optional[list[int]] = None):
         self.n_cores = n_cores
         self.priority_dequeue = priority_dequeue
         self.steal_high = steal_high
@@ -70,6 +71,11 @@ class WorkQueues:
         # the task (``task.load_est``).  Off by default — zero cost.
         self.track_load = track_load
         self.queued_s = np.zeros(n_cores) if track_load else None
+        # Steal groups (sharded control plane): ``groups[core]`` is the
+        # core's shard id; thieves only victimize their own group, so work
+        # crosses shards exclusively through the global rebalancer.  None
+        # = one flat group (the victim scan is untouched).
+        self.groups = list(groups) if groups is not None else None
 
     # -- ready-task (WSQ) operations ----------------------------------------
     def push(self, task: Task, core: int) -> None:
@@ -113,8 +119,11 @@ class WorkQueues:
         core has stealable work.  O(cores) length reads."""
         best_n = 0
         best: list[int] = []
+        group = self.groups[thief] if self.groups is not None else None
         for v in range(self.n_cores):
             if v == thief:
+                continue
+            if group is not None and self.groups[v] != group:
                 continue
             n = self.stealable_count(v)
             if n > best_n:
@@ -134,6 +143,21 @@ class WorkQueues:
         task = q.low.popleft() if q.low else q.high.popleft()
         if self.track_load:
             self.queued_s[victim] -= task.load_est
+        return task
+
+    def migrate_pop(self, core: int) -> Optional[Task]:
+        """Pop one task for cross-shard migration, HIGH-first (a parked
+        critical task hurts most): oldest HIGH, else the oldest LOW (the
+        thief end — the owner's LIFO locality tail is left alone)."""
+        q = self.wsq[core]
+        if q.high:
+            task = q.high.popleft()
+        elif q.low:
+            task = q.low.popleft()
+        else:
+            return None
+        if self.track_load:
+            self.queued_s[core] -= task.load_est
         return task
 
     def drain_wsq(self, cores: Iterable[int]) -> list[Task]:

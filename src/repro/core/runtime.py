@@ -68,10 +68,11 @@ from typing import Optional
 
 from .dag import DAG
 from .faults import FaultModel, FaultState, RecoveryPolicy
-from .lifecycle import SchedulingKernel, split_by_priority
+from .lifecycle import split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .preemption import PreemptionModel
 from .schedulers import Scheduler
+from .shards import ShardingSpec, make_control_plane
 from .task import Priority, Task
 
 
@@ -100,7 +101,8 @@ class ThreadedRuntime:
                  preemption: Optional[PreemptionModel] = None,
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
-                 supervisor=None):
+                 supervisor=None,
+                 sharding: Optional[ShardingSpec] = None):
         # idle_sleep is only a fallback poll: every work arrival (wake,
         # assignment, requeue, restore) notifies the condition variable,
         # so idle workers do not need a tight poll — 1e-4 here made eight
@@ -108,7 +110,14 @@ class ThreadedRuntime:
         # payloads themselves on small containers
         self.sched = scheduler
         self.topo = scheduler.topology
-        self.kernel = SchedulingKernel(scheduler, now=self._now)
+        # the control plane: the flat kernel, or one kernel per shard
+        # behind the sharded plane (see core/shards.py).  Decision
+        # *latency* here is real wall time — the worker threads pay it
+        # inside the runtime lock — so unlike the DES nothing is modeled;
+        # the rebalancer runs on its own timer thread.
+        self.sharding = sharding
+        self.kernel = make_control_plane(scheduler, now=self._now,
+                                         sharding=sharding)
         self.queues = self.kernel.queues
         self.aq = self.queues.aq        # per-core deques of _Assigned
         self.slowdown = dict(slowdown or {})
@@ -125,8 +134,9 @@ class ThreadedRuntime:
         self._started = False
         self._threads: list[threading.Thread] = []
         self._timer: Optional[threading.Thread] = None
+        self._rebalance_thread: Optional[threading.Thread] = None
         self._core_up = [True] * n
-        self._down_parts: set[int] = set()
+        self._down_cores: set[int] = set()
         self._ckpt = (preemption is not None
                       and preemption.preempt == "checkpoint")
         self.preempt_events = 0
@@ -552,9 +562,9 @@ class ThreadedRuntime:
         offsets from run start (restores sort before revokes at equal
         times, like the DES event queue)."""
         edges = sorted(
-            [(t0, 1, pidx) for pidx, t0, _ in self.preemption.episodes]
-            + [(t1, 0, pidx) for pidx, _, t1 in self.preemption.episodes])
-        for t, is_revoke, pidx in edges:
+            [(t0, 1, i) for i, (_, t0, _) in enumerate(self.preemption.episodes)]
+            + [(t1, 0, i) for i, (_, _, t1) in enumerate(self.preemption.episodes)])
+        for t, is_revoke, eidx in edges:
             while not self.stop:
                 dt = t - self._now()
                 if dt <= 0:
@@ -564,16 +574,16 @@ class ThreadedRuntime:
                 return
             with self.work_cv:
                 if is_revoke:
-                    self._revoke_locked(pidx)
+                    self._revoke_locked(eidx)
                 else:
-                    self._restore_locked(pidx)
+                    self._restore_locked(eidx)
                 self.work_cv.notify_all()
 
-    def _revoke_locked(self, pidx: int) -> None:
-        part = self.topo.partitions[pidx]
-        self._down_parts.add(pidx)
-        self.sched.live = self.topo.live_view(frozenset(self._down_parts))
-        for c in part.cores:
+    def _revoke_locked(self, eidx: int) -> None:
+        cores = self.preemption.cores_of(eidx, self.topo)
+        self._down_cores.update(cores)
+        self.kernel.set_availability(frozenset(self._down_cores))
+        for c in cores:
             self._core_up[c] = False
         self.preempt_events += 1
         displaced: list[Task] = []
@@ -581,7 +591,8 @@ class ThreadedRuntime:
         # entered the barrier, so cancelling cannot strand anyone); started
         # ones get the cooperative revocation signal and their grace window
         seen: set[int] = set()
-        for c in part.cores:
+        down_set = set(cores)
+        for c in cores:
             for rec in self.aq[c]:
                 if rec.started:
                     rec.revoked.set()
@@ -593,20 +604,52 @@ class ThreadedRuntime:
             kept = [r for r in self.aq[c] if not r.cancelled]
             self.aq[c].clear()
             self.aq[c].extend(kept)
+        # a sub-pod revocation may leave a cancelled record's copies in
+        # *live* siblings' AQs — prune them there too
+        if seen:
+            for c in set(self.topo.partition_of(cores[0]).cores) - down_set:
+                if any(r.cancelled for r in self.aq[c]):
+                    kept = [r for r in self.aq[c] if not r.cancelled]
+                    self.aq[c].clear()
+                    self.aq[c].extend(kept)
         # ready tasks drain in steal order; HIGH tasks re-place first
-        displaced.extend(self.queues.drain_wsq(part.cores))
+        displaced.extend(self.queues.drain_wsq(cores))
         high, low = split_by_priority(displaced)
         for task in high:
             self.queues.push(task, self.kernel.requeue_displaced(task))
         for task in low:
             self.queues.push(task, self.kernel.requeue_displaced(task))
 
-    def _restore_locked(self, pidx: int) -> None:
-        self._down_parts.discard(pidx)
-        self.sched.live = (None if not self._down_parts else
-                           self.topo.live_view(frozenset(self._down_parts)))
-        for c in self.topo.partitions[pidx].cores:
+    def _restore_locked(self, eidx: int) -> None:
+        self._down_cores.difference_update(
+            self.preemption.cores_of(eidx, self.topo))
+        self.kernel.set_availability(frozenset(self._down_cores))
+        for c in self.preemption.cores_of(eidx, self.topo):
             self._core_up[c] = True
+
+    # -- cross-shard rebalancing ----------------------------------------------
+    def _rebalance_driver(self) -> None:
+        """Timer thread: run one deterministic rebalance round (the same
+        :class:`~.shards.GlobalRebalancer` plan the DES executes) every
+        ``rebalance_period_s`` wall seconds; migrated tasks land on their
+        destination shard immediately — the overhead here is the real
+        time the round takes under the lock."""
+        period = self.sharding.rebalance_period_s
+        t_next = self._now() + period
+        while not self.stop:
+            dt = t_next - self._now()
+            if dt > 0:
+                time.sleep(min(dt, 0.02))
+                continue
+            with self.work_cv:
+                if self.stop:
+                    return
+                if self.outstanding > 0:
+                    for task, dst in self.kernel.rebalancer.plan_round():
+                        self.queues.push(task,
+                                         self.kernel.migrate_in(task, dst))
+                    self.work_cv.notify_all()
+            t_next = self._now() + period
 
     # -- run ------------------------------------------------------------------
     def _launch(self) -> None:
@@ -624,6 +667,11 @@ class ThreadedRuntime:
             self._timer = threading.Thread(target=self._preemption_driver,
                                            daemon=True)
             self._timer.start()
+        if (getattr(self.kernel, "n_shards", 1) > 1
+                and self.sharding.rebalance_period_s > 0.0):
+            self._rebalance_thread = threading.Thread(
+                target=self._rebalance_driver, daemon=True)
+            self._rebalance_thread.start()
         if self._fx is not None:
             self._straggler = threading.Thread(target=self._straggler_driver,
                                                daemon=True)
@@ -674,6 +722,8 @@ class ThreadedRuntime:
             self._timer.join(timeout=5.0)
         if self._straggler is not None:
             self._straggler.join(timeout=5.0)
+        if self._rebalance_thread is not None:
+            self._rebalance_thread.join(timeout=5.0)
         if self.supervisor is not None:
             self.supervisor.check(step + 1)
             self.metrics.recovery_events.extend(
@@ -684,6 +734,11 @@ class ThreadedRuntime:
         self.metrics.preempt_events = self.preempt_events
         self.metrics.tasks_preempted = self.tasks_preempted
         self.metrics.work_lost_s = self.work_lost
+        if getattr(self.kernel, "n_shards", 1) > 1:
+            self.metrics.migrations = self.kernel.migrations
+            self.metrics.overflow_migrations = self.kernel.overflow_migrations
+            self.metrics.rebalance_rounds = self.kernel.rebalance_rounds
+            self.metrics.migrated_load_s = self.kernel.migrated_load_s
         return self.metrics
 
     def run(self, timeout: float = 120.0) -> RunMetrics:
@@ -698,9 +753,10 @@ def run_threaded(dag: DAG, scheduler: Scheduler, *,
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  supervisor=None,
+                 sharding: Optional[ShardingSpec] = None,
                  timeout: float = 120.0) -> RunMetrics:
     rt = ThreadedRuntime(scheduler, slowdown=slowdown, preemption=preemption,
                          faults=faults, recovery=recovery,
-                         supervisor=supervisor)
+                         supervisor=supervisor, sharding=sharding)
     rt.submit(dag)
     return rt.run(timeout=timeout)

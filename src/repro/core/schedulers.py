@@ -43,6 +43,8 @@ import dataclasses
 import random
 from typing import Optional
 
+import numpy as np
+
 from .places import ExecutionPlace, LiveView, Topology
 from .ptt import PTTBank
 from .task import Priority, Task
@@ -79,8 +81,9 @@ class Scheduler:
     # simulator assigns a :class:`~.places.LiveView` at revoke/restore
     # edges; every wake-time search is then restricted to live places, and
     # FA/FAM-C fall back to the statically fastest *live* partition.
-    # Dequeue-time local searches need no mask: the dispatching worker is
-    # live and places never span partitions.
+    # Dequeue-time local searches only need a mask when the view is
+    # *partial* (sub-pod revocation): the dispatching worker is live, but
+    # its wider local places may contain down sibling cores.
     live: Optional[LiveView] = None
     # Queue-aware placement: every PTT placement search minimizes
     # ``ptt_estimate + queue_penalty * outstanding(place)`` where
@@ -122,6 +125,33 @@ class Scheduler:
         return (self.revisit_rng is not None
                 and self.revisit_rng.random() < self.revisit_eps)
 
+    def _local_indices(self, core: int) -> Optional[np.ndarray]:
+        """Local-search candidate override for ``core``: None (the exact
+        unmasked path) unless the live view is *partial* — a sub-pod
+        revocation can leave a live worker whose wider local places
+        contain down sibling cores, so those places are filtered out.
+        The worker's width-1 place is always live, so never empty."""
+        live = self.live
+        if live is None or not live.partial:
+            return None
+        idx = self.topology.local_place_indices(core)
+        return idx[np.isin(idx, live.place_idx)]
+
+    def clone(self, stream: str) -> "Scheduler":
+        """An independent scheduler with the same policy flags but its own
+        PTT bank and decision streams (seeded from ``stream``) — one per
+        control-plane shard.  Availability and load views reset; the
+        owning kernel re-installs them."""
+        return dataclasses.replace(
+            self,
+            ptt=PTTBank(self.topology, **self.ptt.ptt_kwargs),
+            rng=random.Random(stream),
+            tiebreak_rng=(random.Random(f"tiebreak:{stream}")
+                          if self.tiebreak_rng is not None else None),
+            revisit_rng=(random.Random(f"revisit:{stream}")
+                         if self.revisit_rng is not None else None),
+            live=None, load_view=None)
+
     # -- wake-time placement -------------------------------------------------
     def place_on_wake(self, task: Task, waker_core: int) -> Optional[int]:
         """Return the core whose WSQ receives the task (None = waker's).
@@ -133,24 +163,32 @@ class Scheduler:
             # FA/FAM-C: strictly map to the statically fastest partition
             # (the fastest *live* one while capacity is revoked; ties keep
             # topology order, matching fastest_static_partition).
-            part = (self.topology.fastest_static_partition() if live is None
-                    else min(live.partitions, key=lambda p: p.static_rank))
-            core = part.start + self._fa_rr % part.size
+            if live is None:
+                part = self.topology.fastest_static_partition()
+                core = part.start + self._fa_rr % part.size
+            else:
+                # fastest *live* partition; round-robin over its live
+                # cores only (a sub-pod revocation may leave it partial)
+                part = min(live.partitions, key=lambda p: p.static_rank)
+                cs = live.cores_of(part)
+                core = cs[self._fa_rr % len(cs)]
             self._fa_rr += 1
             if self.moldable:
                 # FAM-C: cost-minimizing width inside the fast partition
                 # (the local-search candidates of ``core`` are exactly the
                 # aligned places of each valid width containing it).
                 tbl = self.ptt.for_type(task.type.name)
+                lidx = self._local_indices(core)
                 if self._force_revisit():
                     task.bound_place = tbl.stalest(
-                        self.topology.local_place_indices(core),
+                        self.topology.local_place_indices(core)
+                        if lidx is None else lidx,
                         rng=self.revisit_rng)
                 else:
                     load, pen = self._load_penalty()
                     task.bound_place = tbl.local_search(
                         core, cost=True, rng=self.search_rng,
-                        load=load, penalty=pen)
+                        load=load, penalty=pen, idx=lidx)
             else:
                 task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
@@ -194,12 +232,14 @@ class Scheduler:
             return self.topology.place_at(worker_core, 1)
         # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
         tbl = self.ptt.for_type(task.type.name)
+        lidx = self._local_indices(worker_core)
         if self._force_revisit():
-            return tbl.stalest(self.topology.local_place_indices(worker_core),
+            return tbl.stalest(self.topology.local_place_indices(worker_core)
+                               if lidx is None else lidx,
                                rng=self.revisit_rng)
         load, pen = self._load_penalty()
         return tbl.local_search(worker_core, cost=True, rng=self.search_rng,
-                                load=load, penalty=pen)
+                                load=load, penalty=pen, idx=lidx)
 
     def may_steal(self, task: Task) -> bool:
         return self.steal_high or task.priority != Priority.HIGH

@@ -125,11 +125,12 @@ import numpy as np
 from .dag import DAG
 from .faults import FaultModel, FaultState, RecoveryPolicy
 from .interference import BackgroundApp, SpeedProfile, SpeedProfileBase
-from .lifecycle import SchedulingKernel, split_by_priority
+from .lifecycle import split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
 from .preemption import PreemptionModel
 from .schedulers import Scheduler
+from .shards import ShardingSpec, make_control_plane
 from .task import PARTITION_BW, Priority, Task
 
 _EPS = 1e-12
@@ -179,6 +180,7 @@ class Simulator:
                  preemption: Optional[PreemptionModel] = None,
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
+                 sharding: Optional[ShardingSpec] = None,
                  horizon: float = 1e6):
         self.sched = scheduler
         self.topo = scheduler.topology
@@ -186,14 +188,37 @@ class Simulator:
         self.speed = speed or SpeedProfile(self.topo.n_cores)
         self.background = list(background)
         self.preemption = preemption
+        self.sharding = sharding
         self.horizon = horizon
 
         n = self.topo.n_cores
-        # the engine-agnostic scheduling kernel: split WSQs + AQs, steal
-        # policy, wake/requeue placement, PTT feedback — shared with the
-        # threaded runtime (see core/lifecycle.py)
-        self.kernel = SchedulingKernel(scheduler, now=lambda: self.now)
+        # the control plane: the engine-agnostic scheduling kernel (split
+        # WSQs + AQs, steal policy, wake/requeue placement, PTT feedback —
+        # shared with the threaded runtime, see core/lifecycle.py), or N
+        # of them behind the sharded plane (core/shards.py).  Groupings
+        # that yield one shard *are* the flat kernel (the equivalence pin).
+        self.kernel = make_control_plane(scheduler, now=lambda: self.now,
+                                         sharding=sharding)
         self.queues = self.kernel.queues
+        # modeled scheduler overhead: each shard (1 for the flat kernel)
+        # is a single-server decision queue — wakes serialize through it
+        # at ``decision_s`` apiece.  Zero cost skips the event machinery
+        # entirely (the exact pre-overhead path, bit-identical).
+        self._n_shards = getattr(self.kernel, "n_shards", 1)
+        self._decision_s = sharding.decision_s if sharding is not None else 0.0
+        if self._decision_s > 0.0:
+            self._shard_of = (self.kernel.shard_of_core
+                              if self._n_shards > 1 else [0] * n)
+            self._shard_free = [0.0] * self._n_shards
+            self._decide_depth = [0] * self._n_shards
+            if self._n_shards > 1:
+                # expose the decision-server backlog to the plane so the
+                # overflow/rebalance logic can see the modeled bottleneck
+                self.kernel.decision_backlog = (
+                    lambda s: self._decide_depth[s] * self._decision_s)
+        self._pend = itertools.count()
+        self._pending_decide: dict[int, tuple[Task, int]] = {}
+        self._pending_migrate: dict[int, tuple[Task, int]] = {}
         self.aq: list[deque[_Running]] = self.queues.aq
         self.core_busy: list[Optional[_Running]] = [None] * n
         self.running: dict[int, _Running] = {}
@@ -233,9 +258,11 @@ class Simulator:
         self.heap_peak = 0                  # high-water mark of the heap
         self.compactions = 0
 
-        # preemptible-capacity state (inert without a PreemptionModel)
+        # preemptible-capacity state (inert without a PreemptionModel);
+        # core-granular — a sub-pod episode revokes a subset of its
+        # partition's cores and leaves the siblings dispatching
         self._core_up = [True] * n
-        self._down_parts: set[int] = set()
+        self._down_cores: set[int] = set()
         self._ckpt = (preemption is not None
                       and preemption.preempt == "checkpoint")
         self._resume_penalty = (preemption.resume_penalty
@@ -253,7 +280,7 @@ class Simulator:
         self._fx = (FaultState(faults, recovery or RecoveryPolicy())
                     if faults is not None else None)
         self._pending_retry: dict[int, Task] = {}   # tid -> task in backoff
-        self._notice_token: dict[int, int] = {}     # pidx -> live notice event
+        self._notice_token: dict[int, int] = {}     # eidx -> live notice event
         self._tok = itertools.count(1)              # straggle/notice guards
 
         # load-coupled speed profiles (e.g. a power governor that detunes
@@ -492,14 +519,61 @@ class Simulator:
         preemption requeues — the outstanding count moves only on wake)."""
         self.queues.push(task, core)
         self._mark(core)
-        # new stealable work re-opens the starving cores' steal loop
+        # new stealable work re-opens the starving cores' steal loop —
+        # only the receiving shard's cores when steal groups fence the
+        # victim scans (a foreign starving core could never steal it)
         if self._starving and self.queues.stealable(task):
-            self._dirty |= self._starving
-            self._starving.clear()
+            groups = self.queues.groups
+            if groups is None:
+                self._dirty |= self._starving
+                self._starving.clear()
+            else:
+                g = groups[core]
+                woken = {c for c in self._starving if groups[c] == g}
+                self._dirty |= woken
+                self._starving -= woken
 
     def _wake(self, task: Task, waker_core: int):
         self._outstanding += 1
-        self._enqueue(task, self.kernel.wake(task, waker_core))
+        if self._decision_s == 0.0:
+            self._enqueue(task, self.kernel.wake(task, waker_core))
+            return
+        # modeled decision latency: the wake queues at its shard's
+        # decision server and lands when the server gets to it
+        s = self._shard_of[waker_core]
+        t = max(self.now, self._shard_free[s]) + self._decision_s
+        self._shard_free[s] = t
+        self._decide_depth[s] += 1
+        pid = next(self._pend)
+        self._pending_decide[pid] = (task, waker_core, s)
+        self._push_event(t, "decide", pid)
+
+    def _decide(self, pid: int):
+        """A queued wake decision completes: run the placement now (the
+        waker may have been revoked inside the decision latency — fall
+        back to the first live core; no RNG is drawn)."""
+        task, waker, s = self._pending_decide.pop(pid)
+        self._decide_depth[s] -= 1
+        if not self._core_up[waker]:
+            waker = self.kernel.live_cores()[0]
+        self._enqueue(task, self.kernel.wake(task, waker))
+
+    def _rebalance(self):
+        """One rebalance round: plan + pop the migrating tasks now, land
+        each after the round's decision latency + per-task migration
+        cost.  Re-arms itself while the run still has outstanding work."""
+        spec = self.sharding
+        if self._outstanding > 0:
+            lat = spec.rebalance_decision_s + spec.migration_s
+            for task, dst in self.kernel.rebalancer.plan_round():
+                pid = next(self._pend)
+                self._pending_migrate[pid] = (task, dst)
+                self._push_event(self.now + lat, "migrate", pid)
+            self._push_event(self.now + spec.rebalance_period_s, "rebalance")
+
+    def _migrate_land(self, pid: int):
+        task, dst = self._pending_migrate.pop(pid)
+        self._enqueue(task, self.kernel.migrate_in(task, dst))
 
     def _requeue(self, task: Task):
         """Hand a displaced task back to the scheduler (see
@@ -516,13 +590,11 @@ class Simulator:
 
     # ------------------------------------------------------------ preemption
     def _set_availability(self):
-        """Refresh the scheduler's live view after a revoke/restore edge
-        (views are interned on the topology; the kernel's requeue path
-        reads live cores straight off the view)."""
-        if not self._down_parts:
-            self.sched.live = None
-        else:
-            self.sched.live = self.topo.live_view(frozenset(self._down_parts))
+        """Refresh the control plane's live view(s) after a revoke/restore
+        edge (views are interned on the topology; the kernel's requeue
+        path reads live cores straight off the view; a sharded plane
+        composes the down set with each shard's fence)."""
+        self.kernel.set_availability(frozenset(self._down_cores))
 
     def _preempt_running(self, rec: _Running):
         """Cut one running task short: release cores, bandwidth demand and
@@ -556,14 +628,16 @@ class Simulator:
         task.preempt_count += 1
         self.tasks_preempted += 1
 
-    def _revoke(self, pidx: int):
-        """Apply one revoke edge: partition ``pidx`` loses its cores; all
-        work on it returns to the scheduler and re-places on survivors,
-        HIGH tasks first."""
-        part = self.topo.partitions[pidx]
-        if pidx in self._down_parts:
-            raise RuntimeError(f"partition {part.name} revoked twice")
-        self._down_parts.add(pidx)
+    def _revoke(self, eidx: int):
+        """Apply one revoke edge: episode ``eidx``'s cores — the whole
+        partition, or a sub-pod subset — go down; all work on them
+        returns to the scheduler and re-places on survivors, HIGH tasks
+        first."""
+        cores = self.preemption.cores_of(eidx, self.topo)
+        for c in cores:
+            if not self._core_up[c]:
+                raise RuntimeError(f"core {c} revoked twice")
+        self._down_cores.update(cores)
         self.preempt_events += 1
         self._set_availability()
         displaced: list[Task] = []
@@ -575,32 +649,45 @@ class Simulator:
             #    the expiry lets them run to completion, and a stale event
             #    from an earlier episode can never fire into a later one)
             token = next(self._tok)
-            self._notice_token[pidx] = token
-            self._push_event(self.now + notice, "notice", pidx, token)
+            self._notice_token[eidx] = token
+            self._push_event(self.now + notice, "notice", eidx, token)
         else:
-            # 1) running tasks (a place never spans partitions, so every
-            #    member core of an affected task lies in ``part``; dedup
-            #    via core scan)
-            for c in part.cores:
+            # 1) running tasks: any execution with a member core in the
+            #    revoked set dies (a place may straddle the revoked subset
+            #    and live siblings; dedup via core scan)
+            for c in cores:
                 rec = self.core_busy[c]
                 if rec is not None and rec.task.tid not in seen:
                     seen.add(rec.task.tid)
                     self._preempt_running(rec)
                     displaced.append(rec.task)
-        # 2) placed-but-unstarted tasks in the partition's AQs (their place
-        #    dies with the partition; no progress to account)
+        # 2) placed-but-unstarted tasks in the revoked cores' AQs (their
+        #    place dies; no progress to account).  A sub-pod revocation
+        #    can leave the record's copies in *live* siblings' AQs — pull
+        #    those too, or the task would run twice.
         seen.clear()
-        for c in part.cores:
+        down_set = set(cores)
+        doomed: list = []
+        for c in cores:
             for rec in self.aq[c]:
                 if rec.task.tid not in seen:
                     seen.add(rec.task.tid)
                     displaced.append(rec.task)
+                    doomed.append(rec)
             self.aq[c].clear()
-        # 3) ready tasks in the partition's WSQs, in steal order
-        displaced.extend(self.queues.drain_wsq(part.cores))
+        for rec in doomed:
+            for mc in rec.cores:
+                if mc not in down_set:
+                    try:
+                        self.aq[mc].remove(rec)
+                    except ValueError:
+                        pass
+                    self._mark(mc)      # a freed AQ head may unblock members
+        # 3) ready tasks in the revoked cores' WSQs, in steal order
+        displaced.extend(self.queues.drain_wsq(cores))
         high, low = split_by_priority(displaced)
         # down cores leave the dispatch sets until restored
-        for c in part.cores:
+        for c in cores:
             self._core_up[c] = False
             self._dirty.discard(c)
             self._starving.discard(c)
@@ -611,13 +698,14 @@ class Simulator:
         for task in low:
             self._requeue(task)
 
-    def _restore(self, pidx: int):
-        """Apply one restore edge: the partition's cores re-enter the
+    def _restore(self, eidx: int):
+        """Apply one restore edge: the episode's cores re-enter the
         dispatch loop (empty-handed — they steal their way back)."""
-        self._down_parts.discard(pidx)
-        self._notice_token.pop(pidx, None)   # pending notice expiry is void
+        self._down_cores.difference_update(
+            self.preemption.cores_of(eidx, self.topo))
+        self._notice_token.pop(eidx, None)   # pending notice expiry is void
         self._set_availability()
-        for c in self.topo.partitions[pidx].cores:
+        for c in self.preemption.cores_of(eidx, self.topo):
             self._core_up[c] = True
             self._mark(c)
 
@@ -902,15 +990,15 @@ class Simulator:
         self._kill_running(rec, event_outstanding=False)
         self._outstanding -= 1
 
-    def _notice_expire(self, pidx: int):
-        """The revocation notice window closed with the partition still
-        down: preempt whatever is still running there (work finished
-        inside the window committed normally — that is the point)."""
-        del self._notice_token[pidx]
-        part = self.topo.partitions[pidx]
+    def _notice_expire(self, eidx: int):
+        """The revocation notice window closed with the episode's cores
+        still down: preempt whatever is still running there (work
+        finished inside the window committed normally — that is the
+        point)."""
+        del self._notice_token[eidx]
         displaced: list[Task] = []
         seen: set[int] = set()
-        for c in part.cores:
+        for c in self.preemption.cores_of(eidx, self.topo):
             rec = self.core_busy[c]
             if rec is not None and rec.task.tid not in seen:
                 seen.add(rec.task.tid)
@@ -980,14 +1068,17 @@ class Simulator:
                 self._push_event(b.t_end, "bg")
         if self.preemption is not None:
             n_parts = len(self.topo.partitions)
-            for pidx, t0, t1 in self.preemption.episodes:
+            for eidx, (pidx, t0, t1) in enumerate(self.preemption.episodes):
                 if not 0 <= pidx < n_parts:
                     raise ValueError(f"preemption episode for partition "
                                      f"{pidx}; topology has {n_parts}")
                 if t0 <= self.horizon:
-                    self._push_event(t0, "revoke", pidx)
+                    self._push_event(t0, "revoke", eidx)
                     if t1 <= self.horizon:
-                        self._push_event(t1, "restore", pidx)
+                        self._push_event(t1, "restore", eidx)
+        if (self._n_shards > 1
+                and self.sharding.rebalance_period_s > 0.0):
+            self._push_event(self.sharding.rebalance_period_s, "rebalance")
         # speed breakpoints are *pulled* lazily — one outstanding event at
         # a time, the next asked of the profile only when it fires — so a
         # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
@@ -1036,7 +1127,7 @@ class Simulator:
                     continue       # partition restored (or re-revoked)
                 self._advance(t)
                 self._notice_expire(tid)
-            else:                  # speed / bg / revoke / restore breakpoint
+            else:   # speed / bg / revoke / restore / control-plane event
                 self._advance(t)
                 if kind == "speed":
                     self._recompute_speed()
@@ -1049,6 +1140,12 @@ class Simulator:
                     self._revoke(tid)
                 elif kind == "restore":
                     self._restore(tid)
+                elif kind == "decide":
+                    self._decide(tid)
+                elif kind == "migrate":
+                    self._migrate_land(tid)
+                elif kind == "rebalance":
+                    self._rebalance()
             self._dispatch()
             self._refresh_rates()
             self._maybe_compact()
@@ -1062,6 +1159,11 @@ class Simulator:
         self.metrics.preempt_events = self.preempt_events
         self.metrics.tasks_preempted = self.tasks_preempted
         self.metrics.work_lost_s = self.work_lost
+        if self._n_shards > 1:
+            self.metrics.migrations = self.kernel.migrations
+            self.metrics.overflow_migrations = self.kernel.overflow_migrations
+            self.metrics.rebalance_rounds = self.kernel.rebalance_rounds
+            self.metrics.migrated_load_s = self.kernel.migrated_load_s
         return self.metrics
 
 
@@ -1071,9 +1173,10 @@ def simulate(dag: DAG, scheduler: Scheduler, *,
              preemption: Optional[PreemptionModel] = None,
              faults: Optional[FaultModel] = None,
              recovery: Optional[RecoveryPolicy] = None,
+             sharding: Optional[ShardingSpec] = None,
              horizon: float = 1e6) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,
                     preemption=preemption, faults=faults, recovery=recovery,
-                    horizon=horizon)
+                    sharding=sharding, horizon=horizon)
     sim.submit(dag)
     return sim.run()

@@ -114,6 +114,7 @@ class ServingEngine:
                  queue_penalty: float = 1.0, warm_start: bool = True,
                  max_pending: Optional[int] = None,
                  brownout: Optional[BrownoutConfig] = None,
+                 sharding=None,
                  prefill_s: float = 8e-3, decode_s: float = 2e-3):
         self.cfg = cfg
         self.max_len = max_len
@@ -136,7 +137,8 @@ class ServingEngine:
         self.runtime = ThreadedRuntime(self.sched, slowdown=slowdown,
                                        preemption=preemption, faults=faults,
                                        recovery=recovery,
-                                       supervisor=supervisor)
+                                       supervisor=supervisor,
+                                       sharding=sharding)
         self.warm_start = warm_start
         self.max_pending = max_pending
         self.controller = (OverloadController(brownout)

@@ -395,3 +395,70 @@ def test_governor_drives_the_simulator():
     governed = run(governor_profile(tx2(), period=0.004, lo=0.2, t_end=1.0))
     assert governed > plain                     # the governor costs time
     assert math.isfinite(governed)
+
+
+# -- MMPP-correlated co-runner bursts ----------------------------------------
+
+def test_mmpp_burst_episodes_seeded_and_bounded():
+    import random as _random
+
+    from repro.core import mmpp_burst_episodes
+    tt = matmul_type(64)
+    groups = ((0, 1), (3, 4))
+    kw = dict(seed=6, t_end=1.0, mean_on=0.005, mean_calm=0.05,
+              mean_storm=0.02, mean_off_calm=0.02, mean_off_storm=0.004)
+    apps = mmpp_burst_episodes(tt, groups, **kw)
+    assert apps == mmpp_burst_episodes(tt, groups, **kw)
+    assert len(apps) > 0
+    for a in apps:
+        assert isinstance(a, BackgroundApp)
+        assert a.cores in groups
+        assert 0.0 <= a.t_start < a.t_end <= 1.0
+        assert a.active((a.t_start + a.t_end) / 2)
+    # per-group streams: dropping a group leaves the other's episodes
+    # untouched
+    solo = mmpp_burst_episodes(tt, groups[:1], **kw)
+    assert solo == tuple(a for a in apps if a.cores == groups[0])
+
+
+def test_mmpp_burst_episodes_cluster_in_storms():
+    """The shared calm/storm chain is the whole point: every group's
+    per-second episode-start rate must be higher inside storm windows
+    than outside them."""
+    import random as _random
+
+    from repro.core import mmpp_burst_episodes
+    from repro.core.interference import mmpp_state_timeline
+    tt = matmul_type(64)
+    groups = ((0,), (6,), (12,))
+    kw = dict(seed=2, t_end=20.0, mean_on=0.01, mean_calm=1.0,
+              mean_storm=0.5, mean_off_calm=0.5, mean_off_storm=0.02)
+    apps = mmpp_burst_episodes(tt, groups, **kw)
+    timeline = mmpp_state_timeline(_random.Random("burst-mmpp-state:2"),
+                                   t_end=20.0, mean_calm=1.0, mean_storm=0.5)
+    spans = []
+    for (t, s), nxt in zip(timeline, timeline[1:] + [(20.0, -1)]):
+        spans.append((t, nxt[0], s))
+    storm_s = sum(t1 - t0 for t0, t1, s in spans if s == 1)
+    calm_s = sum(t1 - t0 for t0, t1, s in spans if s == 0)
+    assert storm_s > 0 and calm_s > 0
+    for g in groups:
+        starts = [a.t_start for a in apps if a.cores == g]
+        in_storm = sum(1 for t in starts if any(
+            t0 <= t < t1 for t0, t1, s in spans if s == 1))
+        rate_storm = in_storm / storm_s
+        rate_calm = (len(starts) - in_storm) / calm_s
+        assert rate_storm > rate_calm, g
+
+
+def test_mmpp_burst_episodes_validation():
+    from repro.core import mmpp_burst_episodes
+    tt = matmul_type(64)
+    with pytest.raises(ValueError):
+        mmpp_burst_episodes(tt, ((0,),), seed=1, t_end=INF, mean_on=0.01,
+                            mean_calm=1.0, mean_storm=0.5,
+                            mean_off_calm=0.5, mean_off_storm=0.02)
+    with pytest.raises(ValueError):
+        mmpp_burst_episodes(tt, ((0,),), seed=1, t_end=-1.0, mean_on=0.01,
+                            mean_calm=1.0, mean_storm=0.5,
+                            mean_off_calm=0.5, mean_off_storm=0.02)

@@ -68,6 +68,29 @@ def test_load_drains_to_zero_with_faults():
     assert sim.kernel.load_per_core().max() < 1e-12
 
 
+def test_load_drains_to_zero_across_shard_migration():
+    """A task charged on its source shard and committed on its
+    destination must not strand a charge on either side: after a sharded
+    run with real migrations, every per-shard kernel's charge table is
+    empty and the plane-wide load vector is zero."""
+    from repro.core import ShardingSpec, tpu_pod_slices
+    sched = make_scheduler("DAM-C", tpu_pod_slices(pods=4, slices_per_pod=4),
+                           seed=5, queue_penalty=1.0)
+    sim = Simulator(sched, sharding=ShardingSpec(pods_per_shard=1,
+                                                 decision_s=5e-5,
+                                                 rebalance_period_s=1e-3,
+                                                 overflow_ratio=2.0))
+    sim.submit(synthetic_dag(matmul_type(4096), parallelism=24,
+                             total_tasks=400))
+    m = sim.run()
+    assert m.n_tasks == 400
+    assert m.migrations + m.overflow_migrations > 0
+    for k in sim.kernel.kernels:
+        assert not k._run_charges
+    assert sim.kernel.load_per_core().max() < 1e-12
+    assert sim.kernel.backlog_signal() < 1e-12
+
+
 # -- PTT priming ---------------------------------------------------------------
 def test_ptt_prime_seeds_unexplored_only():
     topo = tx2()

@@ -1,0 +1,268 @@
+"""Sharded control plane: the flat-kernel equivalence pins, deterministic
+cross-engine rebalancer parity, overflow routing, modeled decision
+latency, and the rebalancer-starvation regression.
+
+``make_control_plane`` must degenerate to the *plain* flat kernel for
+``sharding=None`` and for any one-shard grouping — that structural
+degeneracy is the semantics-preservation pin the golden schedules rest
+on.  Migration *decisions* (``GlobalRebalancer.plan_round``) are a pure
+function of queue state shared verbatim by both engines, so the DES- and
+thread-constructed planes must plan identical rounds from identical
+states."""
+import pytest
+
+from repro.core import (Priority, Simulator, Task, ThreadedRuntime,
+                        make_scheduler, matmul_type, simulate, synthetic_dag,
+                        tpu_pod_slices)
+from repro.core.lifecycle import SchedulingKernel
+from repro.core.shards import (ShardedControlPlane, ShardingSpec,
+                               make_control_plane)
+
+
+def _topo():
+    return tpu_pod_slices(pods=4, slices_per_pod=4)
+
+
+def _records(m):
+    return [(r.type_name, r.priority, r.leader, r.width, r.t_start, r.t_end)
+            for r in m.records]
+
+
+# -- spec validation ----------------------------------------------------------
+
+def test_sharding_spec_validation():
+    with pytest.raises(ValueError):
+        ShardingSpec(pods_per_shard=0)
+    with pytest.raises(ValueError):
+        ShardingSpec(decision_s=-1e-6)
+    with pytest.raises(ValueError):
+        ShardingSpec(rebalance_period_s=float("inf"))
+    with pytest.raises(ValueError):
+        ShardingSpec(imbalance_ratio=0.5)
+    with pytest.raises(ValueError):
+        ShardingSpec(max_migrations_per_round=0)
+
+
+# -- the flat-kernel degeneracy pin ------------------------------------------
+
+def test_one_shard_grouping_is_the_flat_kernel():
+    """``sharding=None`` and any grouping that yields one shard must both
+    return the *plain* SchedulingKernel instance — the flat code path
+    itself, not a 1-shard plane imitating it."""
+    sched = make_scheduler("DAM-C", _topo(), seed=1)
+    k0 = make_control_plane(sched, now=lambda: 0.0)
+    assert type(k0) is SchedulingKernel
+    sched2 = make_scheduler("DAM-C", _topo(), seed=1)
+    k1 = make_control_plane(sched2, now=lambda: 0.0,
+                            sharding=ShardingSpec(pods_per_shard=4))
+    assert type(k1) is SchedulingKernel
+    sched3 = make_scheduler("DAM-C", _topo(), seed=1)
+    k2 = make_control_plane(sched3, now=lambda: 0.0,
+                            sharding=ShardingSpec(pods_per_shard=2))
+    assert isinstance(k2, ShardedControlPlane)
+    assert k2.n_shards == 2
+
+
+def test_one_shard_zero_overhead_run_bit_identical_to_flat():
+    runs = []
+    for sharding in (None, ShardingSpec(pods_per_shard=4)):
+        sched = make_scheduler("DAM-C", _topo(), seed=7)
+        m = simulate(synthetic_dag(matmul_type(1024), parallelism=16,
+                                   total_tasks=400), sched,
+                     sharding=sharding)
+        runs.append(_records(m))
+    assert runs[0] == runs[1]
+
+
+# -- shard construction and routing ------------------------------------------
+
+def _plane(seed=3, **kw):
+    spec = ShardingSpec(pods_per_shard=1, **kw)
+    sched = make_scheduler("DAM-C", _topo(), seed=seed)
+    return make_control_plane(sched, now=lambda: 0.0, sharding=spec)
+
+
+def test_shard_layout_and_local_wake_routing():
+    cp = _plane()
+    assert cp.n_shards == 4
+    assert cp.shard_cores == (tuple(range(0, 4)), tuple(range(4, 8)),
+                              tuple(range(8, 12)), tuple(range(12, 16)))
+    # with overflow off, a wake routes inside the waker's shard
+    for waker in (0, 5, 10, 15):
+        t = Task(matmul_type(1024), priority=Priority.LOW)
+        core = cp.wake(t, waker)
+        assert cp.shard_of_core[core] == cp.shard_of_core[waker]
+
+
+def test_wake_overflow_redirects_off_hot_shard():
+    cp = _plane(overflow_ratio=2.0)
+    # pile queued work onto shard 0 until its load tops 2x the fleet mean
+    for _ in range(12):
+        t = Task(matmul_type(4096), priority=Priority.LOW)
+        cp.queues.push(t, cp.kernels[0].wake(t, 0))
+    before = cp.overflow_migrations
+    t = Task(matmul_type(4096), priority=Priority.LOW)
+    core = cp.wake(t, 0)
+    assert cp.shard_of_core[core] != 0
+    assert cp.overflow_migrations == before + 1
+
+
+def test_migrate_in_clears_binding_and_keeps_t_ready():
+    cp = _plane()
+    t = Task(matmul_type(1024), priority=Priority.HIGH)
+    cp.queues.push(t, cp.wake(t, 0))
+    t.t_ready = 0.125
+    popped = cp.queues.migrate_pop(
+        next(c for c in cp.shard_cores[0] if cp.queues.migrate_pop is not None
+             and cp.queues.queued_s[c] > 0))
+    assert popped is t
+    core = cp.migrate_in(t, 2)
+    assert cp.shard_of_core[core] == 2
+    # the old binding named a shard-0 place; any rebinding is shard 2's
+    if t.bound_place is not None:
+        assert cp.shard_of_core[t.bound_place.leader] == 2
+    assert t.t_ready == 0.125           # migration must not hide queueing
+    assert cp.migrations == 1
+
+
+def test_dead_shard_wake_routing_and_restore():
+    cp = _plane()
+    cp.set_availability(frozenset(cp.shard_cores[0]))
+    assert cp.shard_dead(0) and not cp.shard_dead(1)
+    t = Task(matmul_type(1024), priority=Priority.LOW)
+    core = cp.wake(t, 0)                # waker's shard is down
+    assert cp.shard_of_core[core] != 0
+    cp.set_availability(frozenset())
+    assert not cp.shard_dead(0)
+    t2 = Task(matmul_type(1024), priority=Priority.LOW)
+    assert cp.shard_of_core[cp.wake(t2, 0)] == 0
+
+
+# -- rebalancer ---------------------------------------------------------------
+
+def _loaded_engine_kernel(engine: str):
+    """Identically-seeded sharded plane as each engine constructs it, with
+    the same queued-task pile on shard 0 (runtime never started)."""
+    spec = ShardingSpec(pods_per_shard=1, rebalance_period_s=1e-3,
+                        max_migrations_per_round=6)
+    sched = make_scheduler("DAM-C", _topo(), seed=11)
+    eng = (Simulator(sched, sharding=spec) if engine == "des"
+           else ThreadedRuntime(sched, sharding=spec))
+    cp = eng.kernel
+    tasks = []
+    for i in range(10):
+        prio = Priority.HIGH if i % 3 == 0 else Priority.LOW
+        t = Task(matmul_type(4096), priority=prio)
+        cp.queues.push(t, cp.kernels[0].wake(t, i % 4))
+        tasks.append(t)
+    return cp, tasks
+
+
+def test_rebalance_decisions_identical_across_engines():
+    """plan_round is a pure function of queue state: the DES-built and
+    thread-built planes must plan the same moves (same task indices, same
+    destinations, same order) and land them on the same cores."""
+    moves = {}
+    for engine in ("des", "threaded"):
+        cp, tasks = _loaded_engine_kernel(engine)
+        idx = {t.tid: i for i, t in enumerate(tasks)}
+        round_ = cp.rebalancer.plan_round()
+        assert round_, engine
+        moves[engine] = [(idx[t.tid], dst, cp.migrate_in(t, dst))
+                         for t, dst in round_]
+    assert moves["des"] == moves["threaded"]
+
+
+def test_rebalancer_migrates_high_before_low():
+    cp, tasks = _loaded_engine_kernel("des")
+    round_ = cp.rebalancer.plan_round()
+    prios = [t.priority for t, _ in round_]
+    assert Priority.HIGH in prios
+    first_low = next((i for i, p in enumerate(prios) if p == Priority.LOW),
+                     len(prios))
+    assert all(p == Priority.LOW for p in prios[first_low:])
+
+
+def test_rebalancer_starvation_regression():
+    """LOW work parked on a hot shard must eventually migrate: repeated
+    rounds drain the pile toward idle shards instead of leaving it
+    starved behind the hot shard's backlog."""
+    cp = _plane(seed=13, rebalance_period_s=1e-3,
+                max_migrations_per_round=4)
+    for i in range(16):
+        t = Task(matmul_type(4096), priority=Priority.LOW)
+        cp.queues.push(t, cp.kernels[0].wake(t, i % 4))
+    assert cp.shard_loads()[0] > 0
+    for _ in range(20):                 # bounded: must converge well before
+        round_ = cp.rebalancer.plan_round()
+        if not round_:
+            break
+        for t, dst in round_:
+            cp.queues.push(t, cp.migrate_in(t, dst))
+    loads = cp.shard_loads()
+    assert cp.migrations > 0
+    # converged: the hot shard is no longer past the imbalance trigger
+    assert loads[0] <= cp.spec.imbalance_ratio * (loads.min() + 1e-9)
+    # and the parked LOW work actually spread to other shards
+    assert sum(loads[1:]) > 0
+
+
+def test_rebalancer_noop_when_balanced():
+    cp = _plane()
+    for s in range(4):
+        t = Task(matmul_type(4096), priority=Priority.LOW)
+        cp.queues.push(t, cp.kernels[s].wake(t, cp.shard_cores[s][0]))
+    assert cp.rebalancer.plan_round() == []
+    assert cp.migrations == 0
+
+
+# -- modeled decision latency (DES) ------------------------------------------
+
+def test_flat_kernel_saturates_at_decision_latency():
+    """With one modeled decision server, the flat kernel's makespan is
+    bounded below by tasks x decision_s — the saturation the sharded
+    plane exists to break (N servers)."""
+    d, total = 1e-3, 200
+    dag = synthetic_dag(matmul_type(1024), parallelism=16, total_tasks=total)
+    sched = make_scheduler("DAM-C", _topo(), seed=5)
+    flat = simulate(dag, sched,
+                    sharding=ShardingSpec(pods_per_shard=4, decision_s=d))
+    assert flat.makespan >= total * d * (1 - 1e-9)
+    dag2 = synthetic_dag(matmul_type(1024), parallelism=16, total_tasks=total)
+    sched2 = make_scheduler("DAM-C", _topo(), seed=5)
+    shard = simulate(dag2, sched2,
+                     sharding=ShardingSpec(pods_per_shard=1, decision_s=d,
+                                           rebalance_period_s=5e-3,
+                                           overflow_ratio=2.0))
+    assert shard.n_tasks == flat.n_tasks == total
+    assert shard.makespan < flat.makespan
+
+
+def test_sharded_run_reports_migration_metrics():
+    dag = synthetic_dag(matmul_type(4096), parallelism=24, total_tasks=400)
+    sched = make_scheduler("DAM-C", _topo(), seed=2)
+    m = simulate(dag, sched,
+                 sharding=ShardingSpec(pods_per_shard=1, decision_s=5e-5,
+                                       rebalance_period_s=1e-3,
+                                       overflow_ratio=2.0))
+    assert m.n_tasks == 400
+    assert m.rebalance_rounds > 0
+    assert m.migrations + m.overflow_migrations > 0
+    # flat runs keep the counters at their zero defaults
+    m0 = simulate(synthetic_dag(matmul_type(4096), parallelism=24,
+                                total_tasks=400),
+                  make_scheduler("DAM-C", _topo(), seed=2))
+    assert (m0.migrations, m0.overflow_migrations, m0.rebalance_rounds,
+            m0.migrated_load_s) == (0, 0, 0, 0.0)
+
+
+def test_threaded_sharded_run_completes_and_migrates():
+    spec = ShardingSpec(pods_per_shard=1, rebalance_period_s=2e-3,
+                        overflow_ratio=2.0)
+    from repro.core import run_threaded
+    dag = synthetic_dag(matmul_type(256), parallelism=24, total_tasks=300)
+    sched = make_scheduler("DAM-C", _topo(), seed=4)
+    m = run_threaded(dag, sched, sharding=spec)
+    assert m.n_tasks == 300
+    assert not m.errors
+    assert m.rebalance_rounds >= 0      # timer-paced: count is wall-timing

@@ -1,14 +1,17 @@
-"""Gate on the serving benchmark's acceptance block.
+"""Gate on the benchmark artifacts' acceptance blocks.
 
-``make check`` runs this after the bench smoke: the root
-``BENCH_serve.json`` artifact must exist, its ``acceptance`` block must
-parse, and every boolean entry that is ``false`` must appear in the
-DOCUMENTED_NEGATIVES allowlist below with a written reason.  A new
+``make check`` runs this after the bench smoke: each root artifact listed
+in ARTIFACTS must exist, its ``acceptance`` block must parse, and every
+boolean entry that is ``false`` must appear in that artifact's
+documented-negatives allowlist below with a written reason.  A new
 ``false`` that nobody wrote down is a regression (e.g. the load-aware
-placement win in ``slow_fast_pod`` silently coming undone); a ``false``
-in the allowlist is an honest negative the docs explain (DESIGN.md §2).
+placement win in ``slow_fast_pod`` silently coming undone, or the
+sharded control plane losing its scaling crossover); a ``false`` in the
+allowlist is an honest negative the docs explain (DESIGN.md §2,
+§"Control plane").
 
-Usage: python tools/check_acceptance.py [path/to/BENCH_serve.json]
+Usage: python tools/check_acceptance.py [path/to/artifact.json ...]
+(no arguments = every artifact in ARTIFACTS).
 """
 from __future__ import annotations
 
@@ -16,30 +19,38 @@ import json
 import pathlib
 import sys
 
-# Known-and-documented losses.  Key: acceptance-block entry; value: the
-# one-line reason (the long form lives in DESIGN.md §2 and
-# benchmarks/README.md).
-DOCUMENTED_NEGATIVES: dict[str, str] = {
-    "slow_fast_pod/FAM-C_beats_RWS_p99_ttft":
-        "FAM-C binds prefill to the statically-ranked fast pod and cannot "
-        "adapt when interference lands there; only the measurement-driven "
-        "configs recover (DESIGN.md §2).",
-    "slow_spread/FAM-C_beats_RWS_p99_ttft":
-        "same static-binding failure mode with interference spread across "
-        "both pods (DESIGN.md §2).",
-    "revoke_fast/FAM-C_beats_RWS_p99_ttft":
-        "phase-sensitive: FAM-C statically binds prefill to the pod the "
-        "scenario revokes, so its p99 TTFT swings with revocation timing "
-        "vs arrivals across runs; only the measurement-driven DAM-C win "
-        "is stable enough to gate on.",
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# Known-and-documented losses, per artifact.  Key: acceptance-block
+# entry; value: the one-line reason (the long form lives in DESIGN.md
+# and benchmarks/README.md).
+DOCUMENTED_NEGATIVES: dict[str, dict[str, str]] = {
+    "BENCH_serve.json": {
+        "slow_fast_pod/FAM-C_beats_RWS_p99_ttft":
+            "FAM-C binds prefill to the statically-ranked fast pod and "
+            "cannot adapt when interference lands there; only the "
+            "measurement-driven configs recover (DESIGN.md §2).",
+        "slow_spread/FAM-C_beats_RWS_p99_ttft":
+            "same static-binding failure mode with interference spread "
+            "across both pods (DESIGN.md §2).",
+        "revoke_fast/FAM-C_beats_RWS_p99_ttft":
+            "phase-sensitive: FAM-C statically binds prefill to the pod "
+            "the scenario revokes, so its p99 TTFT swings with revocation "
+            "timing vs arrivals across runs; only the measurement-driven "
+            "DAM-C win is stable enough to gate on.",
+    },
+    "BENCH_scale.json": {},
 }
+
+ARTIFACTS = tuple(DOCUMENTED_NEGATIVES)
 
 
 def check(path: pathlib.Path) -> int:
+    allowed = DOCUMENTED_NEGATIVES.get(path.name, {})
     try:
         artifact = json.loads(path.read_text())
     except FileNotFoundError:
-        print(f"check_acceptance: {path} missing — run the serve benchmark "
+        print(f"check_acceptance: {path} missing — run the benchmarks "
               f"(make bench-smoke) first", file=sys.stderr)
         return 1
     except json.JSONDecodeError as e:
@@ -57,31 +68,34 @@ def check(path: pathlib.Path) -> int:
     for key, value in sorted(acceptance.items()):
         if value is not False:        # only boolean falses gate; ints and
             continue                  # trues are informational
-        if key in DOCUMENTED_NEGATIVES:
-            print(f"  allowed  {key}: {DOCUMENTED_NEGATIVES[key]}")
+        if key in allowed:
+            print(f"  allowed  {key}: {allowed[key]}")
         else:
             failures.append(key)
 
-    stale = [k for k in DOCUMENTED_NEGATIVES
-             if acceptance.get(k) is True]
+    stale = [k for k in allowed if acceptance.get(k) is True]
     for key in stale:
         print(f"  note     {key} is now true — consider dropping it from "
               f"the allowlist")
 
     if failures:
         for key in failures:
-            print(f"check_acceptance: UNDOCUMENTED negative {key!r} — fix "
-                  f"the regression or add it to DOCUMENTED_NEGATIVES with "
-                  f"a reason", file=sys.stderr)
+            print(f"check_acceptance: UNDOCUMENTED negative {key!r} in "
+                  f"{path.name} — fix the regression or add it to "
+                  f"DOCUMENTED_NEGATIVES with a reason", file=sys.stderr)
         return 1
     n_bool = sum(1 for v in acceptance.values() if isinstance(v, bool))
-    print(f"check_acceptance: OK ({n_bool} boolean acceptance entries, "
-          f"{sum(1 for v in acceptance.values() if v is False)} documented "
-          f"negatives)")
+    print(f"check_acceptance: {path.name} OK ({n_bool} boolean acceptance "
+          f"entries, {sum(1 for v in acceptance.values() if v is False)} "
+          f"documented negatives)")
     return 0
 
 
+def main(argv: list[str]) -> int:
+    targets = ([pathlib.Path(a) for a in argv] if argv
+               else [REPO_ROOT / name for name in ARTIFACTS])
+    return max(check(t) for t in targets)
+
+
 if __name__ == "__main__":
-    target = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else \
-        pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
-    sys.exit(check(target))
+    sys.exit(main(sys.argv[1:]))
