@@ -60,6 +60,14 @@ class SpeedProfileBase:
     def speed(self, core: int, t: float) -> float:
         raise NotImplementedError
 
+    def speeds_at(self, t: float) -> list[float]:
+        """Every core's multiplier at ``t`` in one call.  The DES pulls
+        this on each speed breakpoint (the whole vector is re-derived at
+        once at a cohort boundary), so profiles can specialize the bulk
+        query; the default — and the contract any override must keep —
+        is element-wise identical to looping :meth:`speed`."""
+        return [self.speed(c, t) for c in range(self.n_cores)]
+
     def next_breakpoint(self, t: float) -> Optional[float]:
         raise NotImplementedError
 
@@ -138,6 +146,15 @@ class SpeedProfile(SpeedProfileBase):
         segs = self._segs[core]
         i = bisect.bisect_right(segs, (t, float("inf"))) - 1
         return segs[max(i, 0)][1]
+
+    def speeds_at(self, t: float) -> list[float]:
+        # constant cores (the untouched majority in sparse profiles) skip
+        # the bisect; multi-segment cores compute the same double speed()
+        # would, keeping the base-class element-wise contract
+        key = (t, float("inf"))
+        return [segs[0][1] if len(segs) == 1
+                else segs[max(bisect.bisect_right(segs, key) - 1, 0)][1]
+                for segs in self._segs]
 
     def _merged_bps(self) -> list[float]:
         if self._bps is None:

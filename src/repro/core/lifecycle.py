@@ -87,6 +87,16 @@ class SchedulingKernel:
             self._load_lock = threading.Lock()
             self._place_lw = [(p.leader, p.width)
                               for p in scheduler.topology.places()]
+            # (n_places, max_width) member-core gather matrix for the
+            # vectorized place_load: row i holds place i's member cores,
+            # padded with the leader (already a member, so the padded max
+            # is exactly the max over the true members)
+            max_w = max(w for _, w in self._place_lw)
+            gather = np.empty((len(self._place_lw), max_w), dtype=np.int64)
+            for i, (leader, width) in enumerate(self._place_lw):
+                gather[i, :width] = np.arange(leader, leader + width)
+                gather[i, width:] = leader
+            self._place_gather = gather
             scheduler.load_view = self.place_load
         scheduler.begin_run()
 
@@ -180,12 +190,10 @@ class SchedulingKernel:
         """Per-place outstanding estimated seconds (queued + running),
         aligned with ``topology.places()``.  A molded place starts when its
         most-backlogged member drains, so wide places take the max over
-        member cores."""
+        member cores — one gather + row-max over the per-core vector
+        (max is exact, so this matches the old per-place loop bit-for-bit)."""
         load = self.queues.queued_s + self._running_s
-        out = np.empty(len(self._place_lw))
-        for i, (leader, width) in enumerate(self._place_lw):
-            out[i] = (load[leader] if width == 1
-                      else load[leader:leader + width].max())
+        out = load[self._place_gather].max(axis=1)
         return np.maximum(out, 0.0)
 
     def load_per_core(self) -> np.ndarray:

@@ -57,7 +57,10 @@ class RequestRecord:
             self.rejected or self.shed or self.e2e > self.deadline_s)
 
 
-@dataclasses.dataclass(frozen=True)
+# not frozen: a frozen dataclass __init__ pays object.__setattr__ per
+# field, and one TaskRecord is built per committed task on the DES hot
+# path; slots keep it compact and equality-by-value is unchanged
+@dataclasses.dataclass(slots=True)
 class TaskRecord:
     type_name: str
     priority: int

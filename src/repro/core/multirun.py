@@ -269,6 +269,13 @@ class RunSpec:
     ``collect`` names extra :data:`COLLECTORS` to evaluate in the worker;
     ``measure_wall`` times the ``simulate`` call (wall seconds +
     simulated-tasks/s).
+    ``sim_kwargs`` is a tuple of ``(name, value)`` pairs forwarded to
+    :func:`~.simulator.simulate` verbatim — e.g. ``(("event_mode",
+    "scalar"),)`` re-runs a cell on the scalar reference event loop, or
+    ``compact_min_stale``/``compact_heap_frac`` stress heap compaction;
+    scheduler-side knobs like ``placement_backend`` go through
+    ``sched_kwargs`` instead.  Defaults (empty) leave the cell on the
+    cohort loop the goldens pin.
     """
 
     key: str
@@ -286,6 +293,7 @@ class RunSpec:
     horizon: float = 1e6
     collect: tuple = ()
     measure_wall: bool = False
+    sim_kwargs: tuple = ()
 
 
 def _lookup(registry: dict, spec, what: str):
@@ -351,7 +359,7 @@ def run_cell(spec: RunSpec) -> dict:
     m: RunMetrics = simulate(dag, sched, background=background, speed=speed,
                              preemption=preemption, faults=faults,
                              recovery=recovery, sharding=sharding,
-                             horizon=spec.horizon)
+                             horizon=spec.horizon, **dict(spec.sim_kwargs))
     wall = time.perf_counter() - t0
 
     out = {

@@ -1,0 +1,83 @@
+"""Optional ``jax.jit`` backend for the placement scoring kernel.
+
+Every PTT search accepts a ``score_fn`` hook that computes the
+queue-aware score vector ``ptt + queue_penalty * load`` over the
+candidate places (see ``PTT._best_from_indices``); the argmin/tie-break
+tail stays host-side so the RNG draw sequence is backend-independent.
+This module provides that hook as a jitted jax kernel, selected with
+``make_scheduler(..., placement_backend="jax")``.
+
+Backend caveats (DESIGN.md §"Array-native event core"):
+
+* Goldens are pinned on the numpy backend.  With ``queue_penalty == 0``
+  the score is the identity over the PTT column, so this backend is
+  bit-identical to numpy (pinned by ``tests/test_schedulers.py``).
+  With a penalty the kernel computes in float32 unless the process
+  enables ``jax_enable_x64`` (never set here — it is process-global and
+  would silently retype every other jax user), and XLA is free to fuse
+  the multiply-add; scores can therefore differ from numpy's float64
+  in the last ulp and break ties differently.  Statistical results
+  agree; bitwise goldens only hold for ``placement_backend="numpy"``.
+* On a CPU-only host the numpy path is faster for the tiny (tens of
+  places) score vectors of paper topologies — the jax backend exists
+  for API parity with accelerator-resident sweeps where the PTT bank
+  lives on device and the score never leaves it.
+
+jax is imported lazily so the default numpy backend never pays for (or
+requires) the dependency.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+_kernel = None      # jitted (vals, load, penalty) -> vals + penalty * load
+
+
+def have_jax() -> bool:
+    """True when jax is importable (the backend can be constructed)."""
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def _build():
+    global _kernel
+    if _kernel is None:
+        import jax
+
+        @jax.jit
+        def _score(vals, load, penalty):
+            return vals + penalty * load
+
+        _kernel = _score
+    return _kernel
+
+
+def make_score_fn() -> Callable[[np.ndarray, Optional[np.ndarray], float],
+                                np.ndarray]:
+    """Build the jitted score hook.
+
+    Raises ``ImportError`` when jax is unavailable — callers
+    (``make_scheduler``) surface that as a configuration error rather
+    than silently falling back, so a sweep never mixes backends.
+    """
+    if not have_jax():
+        raise ImportError(
+            "placement_backend='jax' requires jax; install it or use "
+            "the default placement_backend='numpy'")
+    kernel = _build()
+
+    def score_fn(vals: np.ndarray, load: Optional[np.ndarray],
+                 penalty: float) -> np.ndarray:
+        if load is None:
+            # no queue penalty -> the score IS the PTT column; returning
+            # it unchanged is exact (and keeps this backend bit-identical
+            # to numpy whenever queue-aware placement is off)
+            return vals
+        return np.asarray(kernel(vals, load, penalty))
+
+    return score_fn

@@ -71,6 +71,14 @@ class WorkQueues:
         # the task (``task.load_est``).  Off by default — zero cost.
         self.track_load = track_load
         self.queued_s = np.zeros(n_cores) if track_load else None
+        # HIGH-only backlog (criticality currency): per-core estimated
+        # seconds of *HIGH* ready work.  A shard drowning in HIGH backlog
+        # delays the critical path even when its total load looks
+        # balanced, so the global rebalancer's criticality-pressure
+        # trigger reads this vector.  Maintained alongside ``queued_s``
+        # (same push/pop/steal/drain sites); None when load tracking is
+        # off — zero cost on the default paths.
+        self.queued_high_s = np.zeros(n_cores) if track_load else None
         # Steal groups (sharded control plane): ``groups[core]`` is the
         # core's shard id; thieves only victimize their own group, so work
         # crosses shards exclusively through the global rebalancer.  None
@@ -86,6 +94,8 @@ class WorkQueues:
             q.low.append(task)
         if self.track_load:
             self.queued_s[core] += task.load_est
+            if task.priority == Priority.HIGH:
+                self.queued_high_s[core] += task.load_est
 
     def pop_local(self, core: int) -> Optional[Task]:
         """Owner pop: oldest HIGH first under priority dequeue; LOW pops
@@ -101,6 +111,8 @@ class WorkQueues:
             return None
         if self.track_load:
             self.queued_s[core] -= task.load_est
+            if task.priority == Priority.HIGH:
+                self.queued_high_s[core] -= task.load_est
         return task
 
     def wsq_len(self, core: int) -> int:
@@ -119,13 +131,17 @@ class WorkQueues:
         core has stealable work.  O(cores) length reads."""
         best_n = 0
         best: list[int] = []
-        group = self.groups[thief] if self.groups is not None else None
+        groups = self.groups
+        group = groups[thief] if groups is not None else None
+        wsq = self.wsq
+        steal_high = self.steal_high
         for v in range(self.n_cores):
             if v == thief:
                 continue
-            if group is not None and self.groups[v] != group:
+            if group is not None and groups[v] != group:
                 continue
-            n = self.stealable_count(v)
+            q = wsq[v]
+            n = len(q.low) + len(q.high) if steal_high else len(q.low)
             if n > best_n:
                 best_n = n
                 best = [v]
@@ -143,6 +159,8 @@ class WorkQueues:
         task = q.low.popleft() if q.low else q.high.popleft()
         if self.track_load:
             self.queued_s[victim] -= task.load_est
+            if task.priority == Priority.HIGH:
+                self.queued_high_s[victim] -= task.load_est
         return task
 
     def migrate_pop(self, core: int) -> Optional[Task]:
@@ -158,6 +176,8 @@ class WorkQueues:
             return None
         if self.track_load:
             self.queued_s[core] -= task.load_est
+            if task.priority == Priority.HIGH:
+                self.queued_high_s[core] -= task.load_est
         return task
 
     def drain_wsq(self, cores: Iterable[int]) -> list[Task]:
@@ -173,4 +193,5 @@ class WorkQueues:
             q.low.clear()
             if self.track_load:
                 self.queued_s[c] = 0.0
+                self.queued_high_s[c] = 0.0
         return out

@@ -96,7 +96,15 @@ class Scheduler:
     queue_penalty: float = 0.0
     track_load: bool = False
     load_view: Optional[object] = None
+    # Placement scoring backend hook (``placement_backend="jax"``): a
+    # callable ``(vals, load, penalty) -> score`` handed to every PTT
+    # search.  None (the numpy default) leaves all search fast paths
+    # byte-for-byte untouched — goldens are pinned on that path.
+    score_fn: Optional[object] = None
     _fa_rr: int = dataclasses.field(default=0, init=False)  # FA round-robin
+    # per-type PTT handle cache (same objects as the bank's): the wake /
+    # dequeue hot paths do one C-level dict get instead of a method call
+    _tbl_cache: dict = dataclasses.field(default_factory=dict, init=False)
 
     @property
     def search_rng(self) -> random.Random:
@@ -188,38 +196,66 @@ class Scheduler:
                     load, pen = self._load_penalty()
                     task.bound_place = tbl.local_search(
                         core, cost=True, rng=self.search_rng,
-                        load=load, penalty=pen, idx=lidx)
+                        load=load, penalty=pen, idx=lidx,
+                        score_fn=self.score_fn)
             else:
                 task.bound_place = self.topology.place_at(core, 1)
             return task.bound_place.leader
         if self.dynamic:
-            tbl = self.ptt.for_type(task.type.name)
+            tname = task.type.name
+            tbl = self._tbl_cache.get(tname)
+            if tbl is None:
+                tbl = self._tbl_cache[tname] = self.ptt.for_type(tname)
+            # _force_revisit / _load_penalty inlined: both are
+            # None-guarded no-ops in the default configuration, and this
+            # is the hottest placement call in the DES
+            rr = self.revisit_rng
             if not self.moldable:
                 # DA: fastest single core (global search, width locked to 1).
-                if self._force_revisit():
+                if rr is not None and rr.random() < self.revisit_eps:
                     task.bound_place = tbl.stalest(
                         self.topology.width1_place_indices if live is None
                         else live.width1_idx,
-                        rng=self.revisit_rng)
+                        rng=rr)
                 else:
-                    load, pen = self._load_penalty()
-                    task.bound_place = tbl.width1_search(
-                        cost=False, rng=self.search_rng,
-                        idx=None if live is None else live.width1_idx,
-                        load=load, penalty=pen)
+                    if self.queue_penalty > 0.0 and self.load_view is not None:
+                        load, pen = self.load_view(), self.queue_penalty
+                    else:
+                        load, pen = None, 0.0
+                    sf = self.score_fn
+                    if sf is None:
+                        task.bound_place = tbl.width1_search(
+                            cost=False, rng=self.search_rng,
+                            idx=None if live is None else live.width1_idx,
+                            load=load, penalty=pen)
+                    else:
+                        task.bound_place = tbl.width1_search(
+                            cost=False, rng=self.search_rng,
+                            idx=None if live is None else live.width1_idx,
+                            load=load, penalty=pen, score_fn=sf)
             else:
                 # Algorithm 1 lines 6-12: global search, cost (DAM-C) or
                 # pure performance (DAM-P).
-                if self._force_revisit():
+                if rr is not None and rr.random() < self.revisit_eps:
                     task.bound_place = tbl.stalest(
                         None if live is None else live.place_idx,
-                        rng=self.revisit_rng)
+                        rng=rr)
                 else:
-                    load, pen = self._load_penalty()
-                    task.bound_place = tbl.global_search(
-                        cost=self.high_target_cost, rng=self.search_rng,
-                        idx=None if live is None else live.place_idx,
-                        load=load, penalty=pen)
+                    if self.queue_penalty > 0.0 and self.load_view is not None:
+                        load, pen = self.load_view(), self.queue_penalty
+                    else:
+                        load, pen = None, 0.0
+                    sf = self.score_fn
+                    if sf is None:
+                        task.bound_place = tbl.global_search(
+                            cost=self.high_target_cost, rng=self.search_rng,
+                            idx=None if live is None else live.place_idx,
+                            load=load, penalty=pen)
+                    else:
+                        task.bound_place = tbl.global_search(
+                            cost=self.high_target_cost, rng=self.search_rng,
+                            idx=None if live is None else live.place_idx,
+                            load=load, penalty=pen, score_fn=sf)
             return task.bound_place.leader
         return None                          # RWS/RWSM-C: no special handling
 
@@ -231,15 +267,32 @@ class Scheduler:
         if not self.moldable:
             return self.topology.place_at(worker_core, 1)
         # Algorithm 1 lines 3-5: local search minimizing TM(c,w)*width.
-        tbl = self.ptt.for_type(task.type.name)
-        lidx = self._local_indices(worker_core)
-        if self._force_revisit():
+        tname = task.type.name
+        tbl = self._tbl_cache.get(tname)
+        if tbl is None:
+            tbl = self._tbl_cache[tname] = self.ptt.for_type(tname)
+        live = self.live
+        lidx = (None if live is None or not live.partial
+                else self._local_indices(worker_core))
+        rr = self.revisit_rng
+        if rr is not None and rr.random() < self.revisit_eps:
             return tbl.stalest(self.topology.local_place_indices(worker_core)
                                if lidx is None else lidx,
-                               rng=self.revisit_rng)
-        load, pen = self._load_penalty()
+                               rng=rr)
+        sf = self.score_fn
+        if self.queue_penalty > 0.0 and self.load_view is not None:
+            return tbl.local_search(
+                worker_core, cost=True, rng=self.search_rng,
+                load=self.load_view(), penalty=self.queue_penalty, idx=lidx,
+                score_fn=sf)
+        if sf is not None:
+            return tbl.local_search(worker_core, cost=True,
+                                    rng=self.search_rng, idx=lidx,
+                                    score_fn=sf)
+        if lidx is None:
+            return tbl.local_search_cost(worker_core, self.search_rng)
         return tbl.local_search(worker_core, cost=True, rng=self.search_rng,
-                                load=load, penalty=pen, idx=lidx)
+                                idx=lidx)
 
     def may_steal(self, task: Task) -> bool:
         return self.steal_high or task.priority != Priority.HIGH
@@ -250,7 +303,8 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
                    ptt_tiebreak: str = "shared",
                    ptt_revisit: float = 0.0,
                    queue_penalty: float = 0.0,
-                   track_load: bool = False) -> Scheduler:
+                   track_load: bool = False,
+                   placement_backend: str = "numpy") -> Scheduler:
     """Factory for the paper's seven configurations (Table 1).
 
     ``ptt_tiebreak`` selects where PTT-search tie-breaks draw from:
@@ -272,6 +326,15 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
     HIGH wakes spread instead of herding onto one argmin place.  0.0 is
     bit-identical to load-oblivious placement.  ``track_load`` enables the
     kernel's outstanding-work accounting without the penalty term.
+
+    ``placement_backend`` selects who computes the placement score
+    vector: ``"numpy"`` (default — the exact golden-pinned path) or
+    ``"jax"``, which routes it through a jitted kernel (see
+    :mod:`.placement_jax` for the bitwise caveats).  The argmin
+    tie-break tail is host-side either way, so the RNG draw sequence is
+    backend-independent; with ``queue_penalty == 0`` the jax backend is
+    bit-identical to numpy.  Requires jax; raises ``ImportError``
+    otherwise rather than silently falling back.
     """
     bank = PTTBank(topology, new_weight=ptt_new_weight, old_weight=ptt_old_weight)
     rng = random.Random(seed)
@@ -290,11 +353,19 @@ def make_scheduler(name: str, topology: Topology, *, seed: int = 0,
                    if ptt_revisit > 0.0 else None)
     if queue_penalty < 0.0:
         raise ValueError(f"queue_penalty {queue_penalty!r} must be >= 0")
+    if placement_backend == "numpy":
+        score_fn = None
+    elif placement_backend == "jax":
+        from .placement_jax import make_score_fn
+        score_fn = make_score_fn()
+    else:
+        raise ValueError(f"unknown placement_backend {placement_backend!r} "
+                         "(expected 'numpy' or 'jax')")
     n = name.upper()
     common = dict(topology=topology, ptt=bank, rng=rng,
                   tiebreak_rng=tiebreak_rng, revisit_eps=ptt_revisit,
                   revisit_rng=revisit_rng, queue_penalty=queue_penalty,
-                  track_load=track_load)
+                  track_load=track_load, score_fn=score_fn)
     if n == "RWS":
         # priority-oblivious: plain LIFO dequeue, HIGH stealable
         return Scheduler("RWS", steal_high=True, priority_dequeue=False,

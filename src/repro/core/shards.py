@@ -72,6 +72,26 @@ class ShardingSpec:
     ``overflow_ratio`` (0 disables) redirects a wake away from its shard
     when that shard's backlog exceeds the fleet mean by the ratio;
     ``max_migrations_per_round`` caps one round's moves.
+
+    Two further (default-off) rebalance triggers deepen the policy
+    beyond total-load imbalance:
+
+    * ``high_pressure_ratio`` (0 disables; else >= 1) — criticality
+      pressure: a shard whose queued *HIGH* seconds exceed the ratio
+      times the live-shard mean HIGH backlog sheds HIGH tasks to the
+      shard with the least HIGH backlog, even when total load looks
+      balanced.  HIGH tasks gate the DAG, so a HIGH pile-up delays the
+      critical path invisibly to the total-load trigger.
+    * ``ptt_divergence_ratio`` (0 disables; else >= 1) — per-shard PTTs
+      are learned independently; when the slowest-learned shard's mean
+      best measured estimate (over task types every live shard has
+      explored) exceeds the ratio times the fastest-learned shard's,
+      queued work shifts toward the faster shard, which will drain it
+      sooner regardless of current queue lengths.
+
+    Both triggers share ``max_migrations_per_round`` with the imbalance
+    pass and draw no randomness, so ``plan_round`` stays a deterministic
+    pure function of queue + PTT state (the cross-engine parity pin).
     """
 
     pods_per_shard: int = 1
@@ -82,6 +102,8 @@ class ShardingSpec:
     imbalance_ratio: float = 2.0
     overflow_ratio: float = 0.0
     max_migrations_per_round: int = 8
+    high_pressure_ratio: float = 0.0
+    ptt_divergence_ratio: float = 0.0
 
     def __post_init__(self) -> None:
         if self.pods_per_shard < 1:
@@ -95,6 +117,10 @@ class ShardingSpec:
                 math.isfinite(self.imbalance_ratio)):
             raise ValueError(
                 f"imbalance_ratio {self.imbalance_ratio!r} must be >= 1")
+        for f in ("high_pressure_ratio", "ptt_divergence_ratio"):
+            v = getattr(self, f)
+            if not (math.isfinite(v) and (v == 0.0 or v >= 1.0)):
+                raise ValueError(f"{f} {v!r} must be 0 (off) or >= 1")
         if self.max_migrations_per_round < 1:
             raise ValueError("max_migrations_per_round must be >= 1")
 
@@ -105,16 +131,42 @@ class GlobalRebalancer:
     runtime on its timer thread) so migration *decisions* are a pure
     function of queue state.
 
-    One round repeatedly moves the head of the hottest shard's
-    most-backlogged WSQ — HIGH-first via :meth:`WorkQueues.migrate_pop` —
-    to the coldest shard, until the hottest/coldest outstanding-seconds
-    ratio drops under ``imbalance_ratio``, the hot shard runs out of
-    queued (migratable) work, or the per-round cap is hit.  Ties break
-    toward the lowest shard/core index; no randomness is drawn.
+    One round runs up to three deterministic passes under one shared
+    move budget (``max_migrations_per_round``):
+
+    1. **load imbalance** — repeatedly move the head of the hottest
+       shard's most-backlogged WSQ — HIGH-first via
+       :meth:`WorkQueues.migrate_pop` — to the coldest shard, until the
+       hottest/coldest outstanding-seconds ratio drops under
+       ``imbalance_ratio`` or the hot shard runs out of queued work;
+    2. **criticality pressure** (``high_pressure_ratio`` > 0) — move
+       queued HIGH tasks off any shard whose HIGH backlog exceeds the
+       ratio times the live-shard mean, toward the least-HIGH-loaded
+       shard;
+    3. **PTT divergence** (``ptt_divergence_ratio`` > 0) — when the
+       slowest-learned shard's mean best measured PTT estimate (over
+       the task types every live shard has explored) exceeds the ratio
+       times the fastest-learned shard's, shift its queued work to the
+       faster shard while it remains the more loaded of the two.
+
+    Ties break toward the lowest shard/core index; no randomness is
+    drawn, so plans are a pure function of queue + PTT state shared
+    verbatim by both engines.
     """
 
     def __init__(self, plane: "ShardedControlPlane"):
         self.plane = plane
+
+    def _pop_from(self, shard: int, by_core: np.ndarray) -> Optional[Task]:
+        """Pop one migratable task from ``shard``'s most-backlogged core
+        as measured by ``by_core`` (total or HIGH-only queued seconds);
+        None when nothing is queued there."""
+        cp = self.plane
+        cands = [c for c in cp.shard_cores[shard] if by_core[c] > _EPS]
+        if not cands:
+            return None
+        src = max(cands, key=lambda c: (by_core[c], -c))
+        return cp.queues.migrate_pop(src)
 
     def plan_round(self) -> list[tuple[Task, int]]:
         """Pop the tasks to migrate this round; returns ``(task,
@@ -130,23 +182,79 @@ class GlobalRebalancer:
         loads = cp.shard_loads()
         qs = cp.queues.queued_s
         moves: list[tuple[Task, int]] = []
-        for _ in range(spec.max_migrations_per_round):
+        budget = spec.max_migrations_per_round
+
+        # pass 1 — total-load imbalance
+        while budget > 0:
             hot = max(live, key=lambda s: (loads[s], -s))
             cold = min(live, key=lambda s: (loads[s], s))
             if hot == cold or \
                     loads[hot] <= spec.imbalance_ratio * (loads[cold] + _EPS):
                 break
-            cands = [c for c in cp.shard_cores[hot] if qs[c] > _EPS]
-            if not cands:
-                break               # the hot shard's excess is all running
-            src = max(cands, key=lambda c: (qs[c], -c))
-            task = cp.queues.migrate_pop(src)
+            task = self._pop_from(hot, qs)
             if task is None:
-                break
+                break               # the hot shard's excess is all running
             moves.append((task, cold))
             loads[hot] -= task.load_est
             loads[cold] += task.load_est
             cp.migrated_load_s += task.load_est
+            budget -= 1
+
+        # pass 2 — criticality pressure (HIGH backlog per shard)
+        qhs = cp.queues.queued_high_s
+        if spec.high_pressure_ratio > 0.0 and budget > 0 and qhs is not None:
+            high = np.array([qhs[list(cp.shard_cores[s])].sum()
+                             for s in range(cp.n_shards)])
+            while budget > 0:
+                mean = float(high[live].mean())
+                hot = max(live, key=lambda s: (high[s], -s))
+                cold = min(live, key=lambda s: (high[s], s))
+                if hot == cold or high[hot] <= high[cold] + _EPS or \
+                        high[hot] <= spec.high_pressure_ratio * (mean + _EPS):
+                    break
+                # the source core has queued HIGH work, so migrate_pop
+                # (HIGH-first) is guaranteed to pop a HIGH task
+                task = self._pop_from(hot, qhs)
+                if task is None:
+                    break
+                moves.append((task, cold))
+                est = task.load_est
+                high[hot] -= est
+                high[cold] += est
+                loads[hot] -= est
+                loads[cold] += est
+                cp.migrated_load_s += est
+                budget -= 1
+
+        # pass 3 — PTT divergence (learned-speed asymmetry)
+        if spec.ptt_divergence_ratio > 0.0 and budget > 0:
+            per_shard = []
+            for s in live:
+                bank = cp.kernels[s].sched.ptt
+                per_shard.append({name: tbl.best_explored()
+                                  for name, tbl in bank})
+            shared = sorted(set.intersection(*[
+                {n for n, v in d.items() if v is not None}
+                for d in per_shard]) if per_shard else set())
+            if shared:
+                score = {s: sum(d[n] for n in shared) / len(shared)
+                         for s, d in zip(live, per_shard)}
+                src = max(live, key=lambda s: (score[s], -s))
+                dst = min(live, key=lambda s: (score[s], s))
+                if src != dst and score[src] > \
+                        spec.ptt_divergence_ratio * (score[dst] + _EPS):
+                    # drain toward the faster-learned shard, but never
+                    # past the point where the slow shard is the less
+                    # loaded of the two (no flapping)
+                    while budget > 0 and loads[src] > loads[dst] + _EPS:
+                        task = self._pop_from(src, qs)
+                        if task is None:
+                            break
+                        moves.append((task, dst))
+                        loads[src] -= task.load_est
+                        loads[dst] += task.load_est
+                        cp.migrated_load_s += task.load_est
+                        budget -= 1
         return moves
 
 

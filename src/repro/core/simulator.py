@@ -117,6 +117,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from collections import deque
 from typing import Iterable, Optional
 
@@ -139,9 +140,11 @@ _NO_DEMAND = (0.0, 0)
 # docstring); below it the plain Python loop is faster (tx2-class runs
 # rarely have more than ~6 running tasks)
 _VEC_MIN = 32
-# compact the event heap when stale entries exceed this count AND half of
-# the heap (hysteresis: small runs never pay the rebuild)
+# compact the event heap when stale entries exceed this count AND this
+# fraction of the heap (hysteresis: small runs never pay the rebuild).
+# Both are Simulator kwargs; these module constants are the defaults.
 _COMPACT_MIN_STALE = 64
+_COMPACT_HEAP_FRAC = 0.5
 
 
 class _Running:
@@ -181,7 +184,19 @@ class Simulator:
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  sharding: Optional[ShardingSpec] = None,
-                 horizon: float = 1e6):
+                 horizon: float = 1e6,
+                 event_mode: str = "cohort",
+                 compact_min_stale: int = _COMPACT_MIN_STALE,
+                 compact_heap_frac: float = _COMPACT_HEAP_FRAC):
+        if event_mode not in ("cohort", "scalar"):
+            raise ValueError(f"unknown event_mode {event_mode!r} "
+                             "(expected 'cohort' or 'scalar')")
+        if compact_min_stale < 0:
+            raise ValueError(f"compact_min_stale {compact_min_stale!r} < 0")
+        if not 0.0 < compact_heap_frac <= 1.0:
+            raise ValueError(f"compact_heap_frac {compact_heap_frac!r} "
+                             "outside (0, 1]")
+        self.event_mode = event_mode
         self.sched = scheduler
         self.topo = scheduler.topology
         self.rng = scheduler.rng
@@ -251,10 +266,26 @@ class Simulator:
         # distinct (domain, cap, mem_sensitivity) combination seen
         self._bwkey_id: dict[tuple, int] = {}
         self._bwkeys: list[tuple] = []
+        # Last *applied* bandwidth factor per interned key (NaN = never
+        # applied) + per-domain key registry: a dirty domain only rescans
+        # the running set when some key's recomputed factor actually moved
+        # (an unchanged factor recomputes a bitwise-equal rate, which the
+        # _EPS change test always rejects — so skipping the scan is
+        # state-identical).  Every branch that applies factors writes the
+        # cache back, keeping the invariant inductive.
+        self._key_factor: list[float] = []
+        self._dom_bwkeys: dict[str, list[int]] = {}
+        # Domains with any applied factor != 1.0.  A demand *decrease* in a
+        # cool domain provably keeps every factor at 1.0 (dem shrinks, cap
+        # grows as streams drop), so those sites skip the dirty-domain mark
+        # entirely; increases always mark.  Conservative: factor appliers
+        # add domains eagerly, only the full dirty-domain sweep removes.
+        self._hot_doms: set[str] = set()
 
         # lazy-deletion event-queue state
         self._stale = 0                     # outstanding dead finish events
-        self._compact_min_stale = _COMPACT_MIN_STALE
+        self._compact_min_stale = compact_min_stale
+        self._compact_heap_frac = compact_heap_frac
         self.heap_peak = 0                  # high-water mark of the heap
         self.compactions = 0
 
@@ -293,6 +324,30 @@ class Simulator:
             for pidx, part in enumerate(self.topo.partitions):
                 for c in part.cores:
                     self._pidx_of[c] = pidx
+
+        # hot-path bindings.  With the flat (unsharded) kernel the wake and
+        # commit plumbing — timestamp stamping, measurement-noise draws,
+        # PTT feedback routing — is inlined into _wake/_commit below; every
+        # *decision* (placement searches, tie-breaks, EMA folding) still
+        # runs in scheduler/PTT code, and the draws are made in the same
+        # order from the same streams, so results are bit-identical to the
+        # generic kernel calls the sharded plane keeps using.
+        self._flat = self._n_shards == 1
+        self._track_load = self.kernel.track_load if self._flat else True
+        self._inline_choose = self._flat and not self._track_load
+        self._choose_place = (scheduler.place_on_dequeue if self._inline_choose
+                              else self.kernel.choose_place)
+        self._ptt_bank = scheduler.ptt
+        self._ptt_for: dict = {}    # type name -> PTT (same objects as bank)
+        self._rec_append = self.metrics.records.append
+        # _dispatch's working set, bound once (all are init-only objects
+        # mutated in place, never rebound)
+        self._disp_binds = (self._dirty, self.core_busy, self.aq,
+                            self.queues.wsq, self._core_up, self._starving,
+                            self.rng)
+        # per-leader (domain, bw cap, partition kind) — one tuple per
+        # leader core, resolved lazily at first placement
+        self._leader_info: list = [None] * n
         self._recompute_bg()
 
     # ------------------------------------------------------------------ util
@@ -305,9 +360,14 @@ class Simulator:
     def _maybe_compact(self):
         """Rebuild the heap without stale finish events once they dominate.
         Surviving events keep their (t, seq) keys — a total order — so pop
-        order (and therefore every simulation result) is unchanged."""
+        order (and therefore every simulation result) is unchanged.  The
+        trigger thresholds are the ``compact_min_stale`` /
+        ``compact_heap_frac`` constructor kwargs; at the defaults (64,
+        0.5) this is the exact historical stale>64-and-half-the-heap
+        condition."""
         if (self._stale <= self._compact_min_stale
-                or self._stale * 2 <= len(self._events)):
+                or self._stale <= self._compact_heap_frac
+                * len(self._events)):
             return
         running = self.running
         live = []
@@ -325,9 +385,7 @@ class Simulator:
 
     def _recompute_speed(self):
         """Re-derive cached per-core DVFS speeds (on a speed breakpoint)."""
-        now = self.now
-        sp = self.speed.speed
-        self._speed_now = [sp(c, now) for c in range(self.topo.n_cores)]
+        self._speed_now = self.speed.speeds_at(self.now)
         self._update_core_speed()
         self._rates_global_dirty = True
 
@@ -373,7 +431,11 @@ class Simulator:
         if bd is not None:
             dem += bd[0]
             streams += bd[1]
-        cap = cap0 * max(0.6, 1.0 - 0.08 * max(0, streams - 1))
+        if streams > 1:     # same doubles as max(0.6, 1 - .08*max(0, n-1))
+            red = 1.0 - 0.08 * (streams - 1)
+            cap = cap0 * (red if red > 0.6 else 0.6)
+        else:
+            cap = cap0
         return (cap / dem) ** s if dem > cap else 1.0
 
     def _refresh_rates(self):
@@ -389,16 +451,142 @@ class Simulator:
                 # partition occupancy moved -> the governor's detune factor
                 # moved -> every cached core speed is stale
                 self._recompute_speed()
+        dd_dom = None   # last domain swept below; lets the fresh fast
+        #                 path reuse the factor just written to _key_factor
         if self._rates_global_dirty:
             recs = list(self.running.values())
         elif self._dirty_domains:
+            # Recompute the factor of every key registered under a dirty
+            # domain; only keys whose factor *moved* force a rescan (an
+            # unchanged factor reproduces each rec's rate bitwise, so the
+            # change test below would reject every one of them anyway —
+            # the dominant unsaturated-domain case costs one pow per key
+            # instead of a scan over the running set).
             dd = self._dirty_domains
-            recs = [r for r in self.running.values()
-                    if r.rate < 0.0 or (r.mem_s > 0.0 and r.domain in dd)]
+            kf = self._key_factor
+            dbk = self._dom_bwkeys
+            bwkeys = self._bwkeys
+            hot = self._hot_doms
+            demand = self._demand
+            bg_demand = self._bg_demand
+            changed = None
+            for dom in dd:
+                keys = dbk.get(dom)
+                if keys is None:
+                    continue
+                # _bw_factor inlined with the per-domain demand state
+                # hoisted out of the per-key loop (same doubles)
+                dem, streams = demand.get(dom, _NO_DEMAND)
+                bd = bg_demand.get(dom)
+                if bd is not None:
+                    dem += bd[0]
+                    streams += bd[1]
+                if streams > 1:
+                    red = 1.0 - 0.08 * (streams - 1)
+                    if red < 0.6:
+                        red = 0.6
+                else:
+                    red = 1.0
+                all_one = True
+                for k in keys:
+                    key = bwkeys[k]
+                    cap = key[1] * red
+                    f = (cap / dem) ** key[2] if dem > cap else 1.0
+                    if f != 1.0:
+                        all_one = False
+                    if f != kf[k]:
+                        kf[k] = f
+                        if changed is None:
+                            changed = {k}
+                        else:
+                            changed.add(k)
+                if all_one:
+                    hot.discard(dom)
+                else:
+                    hot.add(dom)
+                dd_dom = dom
+            dd.clear()
+            if changed is not None:
+                recs = [r for r in self.running.values()
+                        if r.rate < 0.0 or r.bwkey in changed]
+            elif self._fresh:
+                recs = None     # factors still; only fresh recs need rates
+            else:
+                return
         elif self._fresh:
-            recs = self._fresh
+            recs = None
         else:
             return
+        if recs is None:
+            fresh = self._fresh
+            if len(fresh) == 1:
+                # dominant case — one commit freed one place, dispatch
+                # started one task.  Same float ops as the generic path
+                # below, minus the batch plumbing.
+                rec = fresh[0]
+                fresh.clear()
+                if self.running.get(rec.task.tid) is not rec:
+                    return
+                cs = self._core_speed
+                cores = rec.cores
+                rec.base = cs[cores[0]] if len(cores) == 1 else \
+                    min(cs[c] for c in cores)
+                rate = rec.base
+                k = rec.bwkey
+                if k >= 0 and rec.domain == dd_dom:
+                    # this rec's domain was swept just above and no factor
+                    # moved (changed is None), so _key_factor[k] already
+                    # holds the exact double the inline recompute below
+                    # would produce — reuse it and skip the pow
+                    f = self._key_factor[k]
+                    if f != 1.0:
+                        rate *= f
+                elif k >= 0:
+                    # _bw_factor inlined (same doubles)
+                    dom = rec.domain
+                    dem, streams = self._demand.get(dom, _NO_DEMAND)
+                    bd = self._bg_demand.get(dom)
+                    if bd is not None:
+                        dem += bd[0]
+                        streams += bd[1]
+                    if streams > 1:
+                        red = 1.0 - 0.08 * (streams - 1)
+                        cap = rec.cap * (red if red > 0.6 else 0.6)
+                    else:
+                        cap = rec.cap
+                    if dem > cap:
+                        f = (cap / dem) ** rec.mem_s
+                        self._key_factor[k] = f
+                        self._hot_doms.add(dom)
+                        if f != 1.0:
+                            rate *= f
+                    else:
+                        self._key_factor[k] = 1.0
+                if rec.slow_mult != 1.0:
+                    rate *= rec.slow_mult
+                if rate < 1e-9:
+                    rate = 1e-9
+                # a fresh rec always has rate < 0: push unconditionally
+                rec.rate = rate
+                rec.version += 1
+                events = self._events
+                heapq.heappush(
+                    events, (self.now + rec.remaining / rate,
+                             next(self._seq), "finish", rec.task.tid,
+                             rec.version))
+                if len(events) > self.heap_peak:
+                    self.heap_peak = len(events)
+                return
+            # defensive: a rec that started and was then killed/preempted
+            # before this refresh would push a finish event that corrupts
+            # the stale accounting.  Both event loops refresh immediately
+            # after dispatching each live event, so the identity check
+            # always passes today; it guards future refresh deferral.
+            running = self.running
+            recs = [r for r in fresh if running.get(r.task.tid) is r]
+            if not recs:
+                self._fresh.clear()
+                return
         if len(recs) >= self._vec_min:
             self._refresh_rates_np(recs)
         else:
@@ -408,37 +596,55 @@ class Simulator:
         self._rates_global_dirty = False
 
     def _refresh_rates_py(self, recs: list[_Running]):
-        """Per-task Python path (small refresh batches)."""
+        """Per-task Python path (small refresh batches).  ``rec.bwkey >= 0``
+        is exactly ``rec.mem_s > 0`` (the placement interning invariant),
+        so the shared-slowdown memo keys on the interned int."""
         cs = self._core_speed
         now = self.now
-        bw_factor: dict = {}    # (domain, cap, sensitivity) -> slowdown
+        factors: dict = {}      # bwkey id -> slowdown
+        bwkeys = self._bwkeys
+        kf = self._key_factor
         global_dirty = self._rates_global_dirty
+        events = self._events
+        seq = self._seq
+        heappush = heapq.heappush
+        eps = _EPS
         for rec in recs:
             # the min-over-member-cores speed only moves on speed/bg events
             # (global dirty) — demand-only refreshes reuse the cached value
             if global_dirty or rec.base < 0.0:
                 cores = rec.cores
-                rec.base = cs[cores[0]] if len(cores) == 1 else \
+                rec.base = rate = cs[cores[0]] if len(cores) == 1 else \
                     min(cs[c] for c in cores)
-            rate = rec.base
-            if rec.mem_s > 0.0:
-                key = (rec.domain, rec.cap, rec.mem_s)
-                f = bw_factor.get(key)
+            else:
+                rate = rec.base
+            k = rec.bwkey
+            if k >= 0:
+                f = factors.get(k)
                 if f is None:
-                    f = bw_factor[key] = self._bw_factor(key)
+                    f = factors[k] = kf[k] = self._bw_factor(bwkeys[k])
+                    if f != 1.0:
+                        self._hot_doms.add(rec.domain)
                 if f != 1.0:
                     rate *= f
-            if rec.slow_mult != 1.0:
-                rate *= rec.slow_mult   # fail-slow degradation in force
+            sm = rec.slow_mult
+            if sm != 1.0:
+                rate *= sm              # fail-slow degradation in force
             if rate < 1e-9:
                 rate = 1e-9
-            if rec.rate < 0 or abs(rate - rec.rate) > _EPS * max(rate, rec.rate):
-                if rec.rate >= 0:
+            old = rec.rate
+            if old < 0 or abs(rate - old) > eps * (rate if rate > old
+                                                   else old):
+                if old >= 0:
                     self._stale += 1     # previous finish event is now dead
                 rec.rate = rate
                 rec.version += 1
-                self._push_event(now + rec.remaining / rate, "finish",
-                                 rec.task.tid, rec.version)
+                heappush(events, (now + rec.remaining / rate, next(seq),
+                                  "finish", rec.task.tid, rec.version))
+        # high-water mark: the heap only grows inside the loop, so one
+        # post-loop check sees the same maximum as a per-push check
+        if len(events) > self.heap_peak:
+            self.heap_peak = len(events)
 
     def _refresh_rates_np(self, recs: list[_Running]):
         """Vectorized path over the running-task rate vector.  Performs the
@@ -475,7 +681,10 @@ class Simulator:
             if sens.any():
                 fmap = np.ones(len(self._bwkeys), dtype=np.float64)
                 for u in np.unique(kid[sens]):
-                    fmap[u] = self._bw_factor(self._bwkeys[u])
+                    f = self._bw_factor(self._bwkeys[u])
+                    fmap[u] = self._key_factor[u] = f
+                    if f != 1.0:
+                        self._hot_doms.add(self._bwkeys[u][0])
                 # rate * 1.0 is an exact identity for positive floats, so
                 # multiplying the insensitive lanes too changes nothing
                 rate = rate * np.where(sens, fmap[np.maximum(kid, 0)], 1.0)
@@ -505,8 +714,25 @@ class Simulator:
             if dt < -1e-9 * max(1.0, abs(self.now)):
                 raise RuntimeError(f"time went backwards: {self.now} -> {t}")
             return      # same instant (fp jitter)
-        for rec in self.running.values():
-            rec.remaining -= dt * rec.rate
+        running = self.running
+        if len(running) >= self._vec_min:
+            # array path for wide topologies: the elementwise
+            # ``remaining - (dt * rate)`` is the identical IEEE-754
+            # operation pair as the scalar loop, so both paths are
+            # bit-for-bit interchangeable (same contract as the
+            # vectorized rate refresh)
+            recs = list(running.values())
+            n = len(recs)
+            step = np.fromiter((r.rate for r in recs), np.float64, count=n)
+            step *= dt
+            rem = np.fromiter((r.remaining for r in recs), np.float64,
+                              count=n)
+            rem -= step
+            for rec, v in zip(recs, rem.tolist()):
+                rec.remaining = v
+        else:
+            for rec in running.values():
+                rec.remaining -= dt * rec.rate
         self.now = t
 
     # ----------------------------------------------------------------- wake
@@ -516,9 +742,18 @@ class Simulator:
 
     def _enqueue(self, task: Task, core: int):
         """Push a ready task onto ``core``'s WSQ (shared by first wakes and
-        preemption requeues — the outstanding count moves only on wake)."""
-        self.queues.push(task, core)
-        self._mark(core)
+        preemption requeues — the outstanding count moves only on wake).
+        ``WorkQueues.push`` is inlined (per-run-constant flags)."""
+        queues = self.queues
+        q = queues.wsq[core]
+        if queues.route_high and task.priority == Priority.HIGH:
+            q.high.append(task)
+        else:
+            q.low.append(task)
+        if queues.track_load:
+            queues.queued_s[core] += task.load_est
+        self._dirty.add(core)
+        self._starving.discard(core)
         # new stealable work re-opens the starving cores' steal loop —
         # only the receiving shard's cores when steal groups fence the
         # victim scans (a foreign starving core could never steal it)
@@ -536,7 +771,17 @@ class Simulator:
     def _wake(self, task: Task, waker_core: int):
         self._outstanding += 1
         if self._decision_s == 0.0:
-            self._enqueue(task, self.kernel.wake(task, waker_core))
+            if self._flat:
+                # inlined SchedulingKernel.wake (plumbing only; the
+                # placement decision below is the same scheduler call)
+                task.t_ready = self.now
+                target = self.sched.place_on_wake(task, waker_core)
+                core = waker_core if target is None else target
+                if self._track_load:
+                    self.kernel._stamp_load_est(task, core)
+                self._enqueue(task, core)
+            else:
+                self._enqueue(task, self.kernel.wake(task, waker_core))
             return
         # modeled decision latency: the wake queues at its shard's
         # decision server and lands when the server gets to it
@@ -611,7 +856,8 @@ class Simulator:
             d, k = self._demand[dom]
             self._demand[dom] = _NO_DEMAND if k <= 1 else \
                 (d - rec.bw_contrib, k - 1)
-            self._dirty_domains.add(dom)
+            if dom in self._hot_doms:
+                self._dirty_domains.add(dom)
         if rec.fault is not None:
             # an armed fault truncated ``remaining`` to its strike point;
             # restore the true outstanding work before checkpoint /
@@ -711,14 +957,26 @@ class Simulator:
 
     # -------------------------------------------------------------- dispatch
     def _try_assign_from_wsq(self, core: int) -> bool:
-        """Pop own WSQ (priority-aware, see ``WorkQueues.pop_local``) and
-        place the task into AQs.  The losing copy of a hedged pair may be
-        parked in a WSQ when the winner commits; it is dropped — and
-        resolved — here rather than removed eagerly."""
+        """Pop own WSQ (priority-aware — ``WorkQueues.pop_local`` inlined,
+        the flags are per-run constants) and place the task into AQs.  The
+        losing copy of a hedged pair may be parked in a WSQ when the winner
+        commits; it is dropped — and resolved — here rather than removed
+        eagerly."""
+        queues = self.queues
+        q = queues.wsq[core]
+        track = queues.track_load
+        pd = queues.priority_dequeue
         while True:
-            task = self.queues.pop_local(core)
-            if task is None:
+            if pd and q.high:
+                task = q.high.popleft()
+            elif q.low:
+                task = q.low.pop()
+            elif q.high:
+                task = q.high.popleft()
+            else:
                 return False
+            if track:
+                queues.queued_s[core] -= task.load_est
             if self._fx is not None and (task.hedge_of or task).committed:
                 self._outstanding -= 1      # hedge loser resolves at pop
                 continue
@@ -738,54 +996,83 @@ class Simulator:
             if self._fx is not None and (t.hedge_of or t).committed:
                 self._outstanding -= 1      # hedge loser resolves at pop
                 continue
-            self.kernel.on_steal(t)               # stolen -> decision redone
+            if self._flat:
+                t.bound_place = None    # inlined on_steal: decision redone
+            else:
+                self.kernel.on_steal(t)
             self._place_into_aqs(t, thief)
             return True
 
     def _place_into_aqs(self, task: Task, worker_core: int):
-        place = self.kernel.choose_place(task, worker_core)
-        part = self.topo.partition_of(place.leader)
-        cap = PARTITION_BW[part.kind]
+        # ``_choose_place`` is ``place_on_dequeue`` directly when the flat
+        # kernel tracks no load (its only other job is the load charge), so
+        # a bound HIGH task skips the call entirely — same decision either way
+        place = task.bound_place
+        if place is None or not self._inline_choose:
+            place = self._choose_place(task, worker_core)
+        info = self._leader_info[place.leader]
+        if info is None:
+            part = self.topo.partition_of(place.leader)
+            info = self._leader_info[place.leader] = (
+                part.domain, PARTITION_BW[part.kind], part.kind, {})
+        domain, cap, kind, bw_by_mems = info
         mem_s = task.type.mem_sensitivity
         if mem_s > 0.0:
-            key = (part.domain, cap, mem_s)
-            bwkey = self._bwkey_id.get(key)
+            bwkey = bw_by_mems.get(mem_s)
             if bwkey is None:
-                bwkey = self._bwkey_id[key] = len(self._bwkeys)
-                self._bwkeys.append(key)
+                key = (domain, cap, mem_s)
+                bwkey = self._bwkey_id.get(key)
+                if bwkey is None:
+                    bwkey = self._bwkey_id[key] = len(self._bwkeys)
+                    self._bwkeys.append(key)
+                    self._key_factor.append(math.nan)
+                    self._dom_bwkeys.setdefault(domain, []).append(bwkey)
+                bw_by_mems[mem_s] = bwkey
         else:
             bwkey = -1
-        base = task.type.duration(part.kind, place.width)
+        base = task.type.duration(kind, place.width)
         if task.resume_frac != 1.0:
             # checkpointed resume: outstanding fraction of the new place's
             # full duration, plus the resume penalty (restart kills keep
             # resume_frac at 1.0 and take this place's full duration)
             base = base * (task.resume_frac + self._resume_penalty)
         rec = _Running(task, place, remaining=base,
-                       domain=part.domain, cap=cap, bwkey=bwkey)
+                       domain=domain, cap=cap, bwkey=bwkey)
         if task.preempt_count:
             # version-epoch per execution: a stale finish event from a
             # preempted run must never collide with this run's versions
             # (they are compared for equality), so each re-placement
             # starts a disjoint version range
             rec.version = task.preempt_count << 32
+        aq = self.aq
+        dirty = self._dirty
+        starving = self._starving
         for c in rec.cores:
-            self.aq[c].append(rec)
-            self._mark(c)
+            aq[c].append(rec)
+            dirty.add(c)
+            starving.discard(c)
 
     def _try_start_aq(self, core: int) -> bool:
         """Start the AQ head if every member core has it at head and is idle."""
         aq = self.aq
         busy = self.core_busy
-        if busy[core] is not None or not aq[core]:
+        if busy[core] is not None:
             return False
-        rec = aq[core][0]
-        for c in rec.cores:
-            if busy[c] is not None or not aq[c] or aq[c][0] is not rec:
-                return False
-        for c in rec.cores:
-            aq[c].popleft()
-            busy[c] = rec
+        q = aq[core]
+        if not q:
+            return False
+        rec = q[0]
+        cores = rec.cores
+        if len(cores) == 1:     # width-1: the caller's checks suffice
+            q.popleft()
+            busy[core] = rec
+        else:
+            for c in cores:
+                if busy[c] is not None or not aq[c] or aq[c][0] is not rec:
+                    return False
+            for c in cores:
+                aq[c].popleft()
+                busy[c] = rec
         task = rec.task
         task.place = rec.place
         task.t_start = self.now
@@ -806,35 +1093,37 @@ class Simulator:
         phase B: idle cores with no local work attempt one steal — but only
         over cores whose state changed.  Round order is shuffled so ties
         break randomly, not by core id."""
-        dirty = self._dirty
-        busy = self.core_busy
-        aq = self.aq
-        wsq = self.queues.wsq
-        up = self._core_up
+        dirty, busy, aq, wsq, up, starving, rng = self._disp_binds
         while dirty:
-            batch = sorted(dirty, reverse=True)
-            dirty.clear()
-            if len(batch) > 1:
-                self.rng.shuffle(batch)
+            if len(dirty) == 1:
+                # the overwhelmingly common worklist is a single core
+                # (one commit released one place) — no sort, no shuffle
+                # draw (the shuffles below only fire on len > 1 anyway)
+                batch = [dirty.pop()]
+            else:
+                batch = sorted(dirty, reverse=True)
+                dirty.clear()
+                rng.shuffle(batch)
             # phase A: local work only (AQ head, then own WSQ)
             for c in batch:
                 if busy[c] is not None or not up[c]:
                     continue
-                if self._try_start_aq(c):
-                    continue
-                if not aq[c]:
+                if aq[c]:
+                    self._try_start_aq(c)
+                else:
                     self._try_assign_from_wsq(c)
             # phase B: idle cores with empty AQs and WSQs attempt to steal
             # (re-shuffled, like the pre-refactor fixpoint: steal order must
             # not correlate with local-work order)
             if len(batch) > 1:
-                self.rng.shuffle(batch)
+                rng.shuffle(batch)
             for c in batch:
+                q = wsq[c]
                 if busy[c] is not None or not up[c] or aq[c] \
-                        or len(wsq[c]):
+                        or q.high or q.low:
                     continue
                 if not self._try_steal(c):
-                    self._starving.add(c)
+                    starving.add(c)
 
     # ---------------------------------------------------------------- faults
     def _on_start_faults(self, rec: _Running):
@@ -873,7 +1162,8 @@ class Simulator:
             d, k = self._demand[dom]
             self._demand[dom] = _NO_DEMAND if k <= 1 else \
                 (d - rec.bw_contrib, k - 1)
-            self._dirty_domains.add(dom)
+            if dom in self._hot_doms:
+                self._dirty_domains.add(dom)
 
     def _on_fault_trigger(self, rec: _Running):
         """The finish event at an armed fault's strike point fired."""
@@ -1025,9 +1315,13 @@ class Simulator:
             elif task.hedge_dup is not None:
                 self._cancel_copy(task.hedge_dup)   # the duplicate lost
         task.t_end = self.now
+        busy = self.core_busy
+        dirty = self._dirty
+        starving = self._starving
         for c in rec.cores:
-            self.core_busy[c] = None
-            self._mark(c)
+            busy[c] = None
+            dirty.add(c)
+            starving.discard(c)
         del self.running[task.tid]
         self._done += 1
         self._outstanding -= 1
@@ -1038,57 +1332,69 @@ class Simulator:
             # incremental +/- never accumulates float residue
             self._demand[dom] = _NO_DEMAND if k <= 1 else \
                 (d - rec.bw_contrib, k - 1)
-            self._dirty_domains.add(dom)
+            if dom in self._hot_doms:
+                self._dirty_domains.add(dom)
 
         # Leader measures and updates the PTT (with measurement noise +
-        # heavy-tailed spikes from OS jitter on short tasks).
-        observed = self.kernel.observe_simulated(task.type,
-                                                task.t_end - task.t_start)
-        self.kernel.ptt_feedback(task, rec.place, observed)
+        # heavy-tailed spikes from OS jitter on short tasks).  Flat-kernel
+        # inline of observe_simulated + ptt_feedback: same draws from the
+        # same stream in the same order, same EMA fold.
+        ttype = task.type
+        if self._flat:
+            rng = self.rng
+            if ttype.noise:
+                noise = rng.gauss(1.0, ttype.noise)
+                if noise < 0.5:     # same doubles as min(max(n,.5),2.)
+                    noise = 0.5
+                elif noise > 2.0:
+                    noise = 2.0
+                observed = (task.t_end - task.t_start) * noise
+            else:
+                observed = (task.t_end - task.t_start) * 1.0
+            if ttype.spike_prob and rng.random() < ttype.spike_prob:
+                observed *= ttype.spike_mag
+            if self._track_load:
+                self.kernel.discharge(task)
+            tbl = self._ptt_for.get(ttype.name)
+            if tbl is None:
+                tbl = self._ptt_for[ttype.name] = \
+                    self._ptt_bank.for_type(ttype.name)
+            tbl.update_nolock(rec.place, observed)
+        else:
+            observed = self.kernel.observe_simulated(
+                ttype, task.t_end - task.t_start)
+            self.kernel.ptt_feedback(task, rec.place, observed)
 
         # A winning duplicate commits on behalf of its logical task:
         # successors and the record's sojourn anchor come from it.
         src = task if task.hedge_of is None else task.hedge_of
-        self.metrics.record(TaskRecord(
-            type_name=task.type.name, priority=int(task.priority),
-            leader=rec.place.leader, width=rec.place.width,
-            t_ready=src.t_ready, t_start=task.t_start, t_end=task.t_end))
-
-        # Wake dependents; dynamic DAG growth.
         leader = rec.place.leader
-        for ready in self.kernel.commit_successors(src):
-            self._wake(ready, leader)
+        self._rec_append(TaskRecord(
+            ttype.name, int(task.priority), leader, rec.place.width,
+            src.t_ready, task.t_start, task.t_end))
+
+        # Wake dependents; dynamic DAG growth.  Flat-kernel inline of
+        # commit_successors (same dependency bookkeeping, no generator):
+        # the DES is single-threaded, so the lockless decrement is exact.
+        if self._flat:
+            for child in src.children:
+                child.n_deps -= 1
+                if child.n_deps == 0:
+                    self._wake(child, leader)
+            if src.on_commit is not None:
+                for new_task in src.on_commit(src):
+                    if new_task.n_deps == 0:
+                        self._wake(new_task, leader)
+        else:
+            for ready in self.kernel.commit_successors(src):
+                self._wake(ready, leader)
 
     # ------------------------------------------------------------------ run
-    def run(self) -> RunMetrics:
-        for b in self.background:
-            if b.t_start > 0:
-                self._push_event(b.t_start, "bg")
-            if b.t_end < self.horizon:
-                self._push_event(b.t_end, "bg")
-        if self.preemption is not None:
-            n_parts = len(self.topo.partitions)
-            for eidx, (pidx, t0, t1) in enumerate(self.preemption.episodes):
-                if not 0 <= pidx < n_parts:
-                    raise ValueError(f"preemption episode for partition "
-                                     f"{pidx}; topology has {n_parts}")
-                if t0 <= self.horizon:
-                    self._push_event(t0, "revoke", eidx)
-                    if t1 <= self.horizon:
-                        self._push_event(t1, "restore", eidx)
-        if (self._n_shards > 1
-                and self.sharding.rebalance_period_s > 0.0):
-            self._push_event(self.sharding.rebalance_period_s, "rebalance")
-        # speed breakpoints are *pulled* lazily — one outstanding event at
-        # a time, the next asked of the profile only when it fires — so a
-        # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
-        # entries and closed-form profiles never enumerate anything
-        nb = self.speed.next_breakpoint(0.0)
-        if nb is not None and nb <= self.horizon:
-            self._push_event(nb, "speed")
-
-        self._dispatch()
-        self._refresh_rates()
+    def _run_scalar(self):
+        """Reference event loop: one event per iteration, bookkeeping
+        (dispatch / rate refresh / compaction / termination) after every
+        live event.  Retained verbatim as the bit-identity oracle for the
+        cohort loop (``tests/test_cohort_parity.py``)."""
         events = self._events
         running = self.running
         while events:
@@ -1151,6 +1457,152 @@ class Simulator:
             self._maybe_compact()
             if self._outstanding == 0 and not running:
                 break
+
+    def _run_cohort(self):
+        """Array-native event loop.  Pops the full same-timestamp cohort in
+        an inner loop sharing one rate-integration advance per unique
+        timestamp (vectorized across the running set past ``_vec_min``) and
+        one compaction check per cohort; stale events take a fast path that
+        touches nothing but the lazy-deletion counter, and dispatch/refresh
+        only run when their dirty state says there is work.  Decision points
+        fire in exactly the scalar reference order, so results are
+        bit-identical to ``_run_scalar`` (pinned by the parity suite).
+
+        Rate refresh stays per live event rather than deferring to the
+        cohort boundary: two refresh-triggering events at one timestamp
+        would otherwise fold into a single EMA-free recompute whose rates
+        can differ from the eager pair's within the ``_EPS`` change test,
+        silently nudging finish times off the scalar path.
+        """
+        events = self._events
+        running = self.running
+        heappop = heapq.heappop
+        horizon = self.horizon
+        dirty = self._dirty
+        fresh = self._fresh
+        dirty_domains = self._dirty_domains
+        load_coupled = self._load_coupled
+        pending_retry = self._pending_retry
+        notice_token = self._notice_token
+        while events:
+            ev = heappop(events)
+            t = ev[0]
+            if t > horizon:
+                break
+            while True:
+                kind = ev[2]
+                live = True
+                if kind == "finish":
+                    rec = running.get(ev[3])
+                    if rec is None or rec.version != ev[4]:
+                        self._stale -= 1           # stale (lazy deletion)
+                        live = False
+                    else:
+                        if self.now != t:
+                            self._advance(t)
+                        rate = rec.rate
+                        if rec.remaining > 1e-9 * (rate if rate > 1.0
+                                                   else 1.0):
+                            rec.version += 1       # drift: reschedule
+                            self._push_event(t + rec.remaining / rate,
+                                             "finish", ev[3], rec.version)
+                            live = False
+                        elif rec.fault is not None:
+                            self._on_fault_trigger(rec)
+                        else:
+                            self._commit(rec)
+                elif kind == "straggle":
+                    rec = running.get(ev[3])
+                    if rec is None or rec.token != ev[4]:
+                        live = False   # execution already ended or re-placed
+                    else:
+                        if self.now != t:
+                            self._advance(t)
+                        self._on_straggler(rec)
+                elif kind == "retry":
+                    retry_task = pending_retry.pop(ev[3], None)
+                    if retry_task is None:
+                        live = False   # cancelled while in backoff
+                    else:
+                        if self.now != t:
+                            self._advance(t)
+                        self._requeue(retry_task)
+                elif kind == "notice":
+                    if notice_token.get(ev[3]) != ev[4]:
+                        live = False   # partition restored (or re-revoked)
+                    else:
+                        if self.now != t:
+                            self._advance(t)
+                        self._notice_expire(ev[3])
+                else:   # speed / bg / revoke / restore / control-plane
+                    if self.now != t:
+                        self._advance(t)
+                    if kind == "speed":
+                        self._recompute_speed()
+                        nb = self.speed.next_breakpoint(t)
+                        if nb is not None and nb <= horizon:
+                            self._push_event(nb, "speed")
+                    elif kind == "bg":
+                        self._recompute_bg()
+                    elif kind == "revoke":
+                        self._revoke(ev[3])
+                    elif kind == "restore":
+                        self._restore(ev[3])
+                    elif kind == "decide":
+                        self._decide(ev[3])
+                    elif kind == "migrate":
+                        self._migrate_land(ev[3])
+                    elif kind == "rebalance":
+                        self._rebalance()
+                if live:
+                    if dirty:
+                        self._dispatch()
+                    if (fresh or dirty_domains or self._rates_global_dirty
+                            or load_coupled):
+                        self._refresh_rates()
+                    if self._outstanding == 0 and not running:
+                        return
+                if not events or events[0][0] != t:
+                    break
+                ev = heappop(events)
+            stale = self._stale
+            if (stale > self._compact_min_stale
+                    and stale > self._compact_heap_frac * len(events)):
+                self._maybe_compact()
+
+    def run(self) -> RunMetrics:
+        for b in self.background:
+            if b.t_start > 0:
+                self._push_event(b.t_start, "bg")
+            if b.t_end < self.horizon:
+                self._push_event(b.t_end, "bg")
+        if self.preemption is not None:
+            n_parts = len(self.topo.partitions)
+            for eidx, (pidx, t0, t1) in enumerate(self.preemption.episodes):
+                if not 0 <= pidx < n_parts:
+                    raise ValueError(f"preemption episode for partition "
+                                     f"{pidx}; topology has {n_parts}")
+                if t0 <= self.horizon:
+                    self._push_event(t0, "revoke", eidx)
+                    if t1 <= self.horizon:
+                        self._push_event(t1, "restore", eidx)
+        if (self._n_shards > 1
+                and self.sharding.rebalance_period_s > 0.0):
+            self._push_event(self.sharding.rebalance_period_s, "rebalance")
+        # speed breakpoints are *pulled* lazily — one outstanding event at
+        # a time, the next asked of the profile only when it fires — so a
+        # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
+        # entries and closed-form profiles never enumerate anything
+        nb = self.speed.next_breakpoint(0.0)
+        if nb is not None and nb <= self.horizon:
+            self._push_event(nb, "speed")
+
+        self._dispatch()
+        self._refresh_rates()
+        if self.event_mode == "scalar":
+            self._run_scalar()
+        else:
+            self._run_cohort()
         # a run that finishes mid-outage must not leak its availability
         # mask into later runs reusing the scheduler (PTT state is meant
         # to carry across runs; a revoked-capacity view is not)
@@ -1174,9 +1626,15 @@ def simulate(dag: DAG, scheduler: Scheduler, *,
              faults: Optional[FaultModel] = None,
              recovery: Optional[RecoveryPolicy] = None,
              sharding: Optional[ShardingSpec] = None,
-             horizon: float = 1e6) -> RunMetrics:
+             horizon: float = 1e6,
+             event_mode: str = "cohort",
+             compact_min_stale: int = _COMPACT_MIN_STALE,
+             compact_heap_frac: float = _COMPACT_HEAP_FRAC) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,
                     preemption=preemption, faults=faults, recovery=recovery,
-                    sharding=sharding, horizon=horizon)
+                    sharding=sharding, horizon=horizon,
+                    event_mode=event_mode,
+                    compact_min_stale=compact_min_stale,
+                    compact_heap_frac=compact_heap_frac)
     sim.submit(dag)
     return sim.run()

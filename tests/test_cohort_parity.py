@@ -1,0 +1,122 @@
+"""Cohort/scalar event-loop parity (the array-native core's contract).
+
+``Simulator`` keeps two event loops: ``event_mode="scalar"`` — the
+one-event-at-a-time reference — and ``event_mode="cohort"`` (the
+default), which pops same-timestamp cohorts and batches the shared
+per-timestamp work.  Every decision point fires in the scalar reference
+order, so the two must be **bit-identical**: same records (placements,
+widths, float64 start/end times), same makespan, same RNG stream
+consumption — across schedulers, topologies, interference, DVFS,
+preemption, faults, queue-aware placement, and compaction settings.
+
+A deterministic sweep pins a curated configuration grid on every run;
+the hypothesis property test (via the ``tests/_ht.py`` shim — skipped
+when hypothesis is absent) fuzzes the same contract over random
+configurations.
+"""
+import pytest
+
+from _ht import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (PreemptionModel, RecoveryPolicy, SpeedProfile,
+                        corun_chain, haswell, make_scheduler, matmul_type,
+                        simulate, synthetic_dag, task_faults, tpu_pod_slices,
+                        tx2)
+
+TOPOS = {
+    "tx2": tx2,
+    "haswell": lambda: haswell(sockets=1, cores_per_socket=4),
+    "pods": lambda: tpu_pod_slices(pods=2, slices_per_pod=4),
+}
+
+
+def _run(mode, *, sched="DAM-C", topo="tx2", seed=7, total=160,
+         parallelism=2, background=True, speed=False, preemption=None,
+         faults=False, queue_penalty=0.0, compact=None):
+    """One simulation under ``event_mode=mode``; every model object is
+    rebuilt per call so the two runs share no mutable state."""
+    topology = TOPOS[topo]()
+    s = make_scheduler(sched, topology, seed=seed,
+                       queue_penalty=queue_penalty,
+                       track_load=queue_penalty > 0.0)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=parallelism, total_tasks=total)
+    kw = dict(event_mode=mode)
+    if background:
+        kw["background"] = [corun_chain(tt, core=0)]
+    if speed:
+        kw["speed"] = SpeedProfile(topology.n_cores).add_square_wave(
+            (0, 1), period=0.004, lo=0.17, t_end=0.2)
+    if preemption is not None:
+        kw["preemption"] = PreemptionModel(preemption)
+    if faults:
+        kw["faults"] = task_faults(seed=seed + 1, p_fail=0.05, p_slow=0.05)
+        kw["recovery"] = RecoveryPolicy(hedge=True)
+    if compact is not None:
+        kw["compact_min_stale"], kw["compact_heap_frac"] = compact
+    return simulate(dag, s, **kw)
+
+
+def _fingerprint(m):
+    return (m.makespan,
+            [(r.type_name, r.priority, r.leader, r.width, r.t_ready,
+              r.t_start, r.t_end) for r in m.records])
+
+
+def _assert_parity(**cfg):
+    a = _fingerprint(_run("cohort", **cfg))
+    b = _fingerprint(_run("scalar", **cfg))
+    assert a == b, f"cohort/scalar divergence under {cfg}"
+
+
+# -- deterministic sweep (always runs) ----------------------------------------
+
+GRID = [
+    dict(),
+    dict(sched="RWSM-C", seed=3),
+    dict(sched="DA", topo="haswell", seed=5),
+    dict(sched="FA", topo="pods", seed=11, parallelism=4),
+    dict(speed=True, seed=13),
+    dict(preemption=((0, 0.002, 0.006),), seed=17),
+    dict(faults=True, seed=19),
+    dict(queue_penalty=0.05, seed=23, parallelism=4),
+    # stress compaction: compact on every cohort vs the scalar loop's
+    # per-event check — pop order is key-preserving either way
+    dict(compact=(0, 0.05), seed=29, parallelism=4, total=240),
+    dict(sched="DAM-P", topo="pods", speed=True,
+         preemption=((0, 0.001, 0.004),), seed=31),
+]
+
+
+@pytest.mark.parametrize("cfg", GRID,
+                         ids=lambda c: ",".join(f"{k}={v}" for k, v in
+                                                c.items()) or "defaults")
+def test_cohort_bit_identical_to_scalar(cfg):
+    _assert_parity(**cfg)
+
+
+# -- property fuzz (hypothesis; skipped without it) ---------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       sched=st.sampled_from(["DAM-C", "DAM-P", "DA", "RWSM-C", "FA"]),
+       topo=st.sampled_from(sorted(TOPOS)),
+       parallelism=st.integers(1, 6),
+       preempt=st.booleans(),
+       faults=st.booleans(),
+       queue_penalty=st.sampled_from([0.0, 0.02, 0.1]))
+def test_cohort_parity_property(seed, sched, topo, parallelism, preempt,
+                                faults, queue_penalty):
+    _assert_parity(sched=sched, topo=topo, seed=seed, total=96,
+                   parallelism=parallelism,
+                   preemption=((0, 0.002, 0.006),) if preempt else None,
+                   faults=faults, queue_penalty=queue_penalty)
+
+
+def test_property_harness_present():
+    """The property test above must not silently rot: either hypothesis
+    is importable and it runs, or the shim turned it into a skip stub."""
+    if not HAVE_HYPOTHESIS:
+        assert test_cohort_parity_property.__name__ == \
+            "test_cohort_parity_property"
+        with pytest.raises(pytest.skip.Exception):
+            test_cohort_parity_property()

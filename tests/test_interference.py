@@ -462,3 +462,22 @@ def test_mmpp_burst_episodes_validation():
         mmpp_burst_episodes(tt, ((0,),), seed=1, t_end=-1.0, mean_on=0.01,
                             mean_calm=1.0, mean_storm=0.5,
                             mean_off_calm=0.5, mean_off_storm=0.02)
+
+
+def test_speeds_at_matches_per_core_speed_loop():
+    """The bulk query every profile serves the DES speed-breakpoint
+    handler through must be element-wise identical to looping
+    ``speed(core, t)`` — including SpeedProfile's constant-core fast
+    path and the closed-form/default implementations."""
+    profiles = [
+        SpeedProfile(6).add_square_wave((1, 3), period=0.004, lo=0.2,
+                                        t_end=0.1).add_window([5], 0.01,
+                                                              0.03, 0.5),
+        dvfs_denver(6),
+        random_walk_trace(6, (0, 2), seed=3, dt=0.002, t_end=0.05),
+    ]
+    probes = [0.0, 0.001, 0.002, 0.0101, 0.03, 0.05, 0.2, 1.0]
+    for prof in profiles:
+        for t in probes:
+            assert prof.speeds_at(t) == \
+                [prof.speed(c, t) for c in range(prof.n_cores)], (prof, t)

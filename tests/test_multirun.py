@@ -172,3 +172,20 @@ def test_dynamic_dag_builders():
                    seed=1)
     res = run_cell(heat)
     assert res["n_tasks"] == 2 * (2 * 2 + 2)      # compute + exchanges
+
+
+def test_sim_kwargs_event_mode_passthrough():
+    """``sim_kwargs`` reaches ``simulate`` verbatim: a cell re-run on the
+    scalar reference loop is bit-identical to the default cohort cell,
+    and a bad knob surfaces as the simulator's own TypeError."""
+    base = _grid(scheds=("DAM-C",), seeds=(5,))[0]
+    cohort = run_cell(base)
+    scalar = run_cell(dataclasses.replace(
+        base, sim_kwargs=(("event_mode", "scalar"),)))
+    assert scalar == cohort
+    compacted = run_cell(dataclasses.replace(
+        base, sim_kwargs=(("compact_min_stale", 0),
+                          ("compact_heap_frac", 0.05))))
+    assert compacted == cohort
+    with pytest.raises(TypeError):
+        run_cell(dataclasses.replace(base, sim_kwargs=(("no_such_knob", 1),)))

@@ -142,3 +142,44 @@ def test_fa_reused_scheduler_reproducible_across_engine_runs():
 
     sched_t = make_scheduler("FA", tx2(), seed=1)
     assert chain_leaders_threaded(sched_t) == chain_leaders_threaded(sched_t)
+
+
+# -- placement backends -------------------------------------------------------
+
+def _records_fingerprint(sched_name, backend, *, queue_penalty=0.0, seed=7):
+    from repro.core import corun_chain, simulate, synthetic_dag
+
+    topo = tx2()
+    sched = make_scheduler(sched_name, topo, seed=seed,
+                           queue_penalty=queue_penalty,
+                           track_load=queue_penalty > 0.0,
+                           placement_backend=backend)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=4, total_tasks=600)
+    m = simulate(dag, sched, background=[corun_chain(tt, core=0)])
+    return (m.makespan, [(r.type_name, r.leader, r.width, r.t_start, r.t_end)
+                         for r in m.records])
+
+
+def test_placement_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="placement_backend"):
+        make_scheduler("DAM-C", tx2(), placement_backend="tpu")
+
+
+def test_jax_backend_bit_identical_without_queue_penalty():
+    """With queue-aware placement off the jax score is the identity map,
+    so the jitted backend must reproduce the numpy schedule exactly —
+    this is the pin ``repro/core/placement_jax.py`` documents."""
+    pytest.importorskip("jax")
+    for sched_name in ("DAM-C", "RWSM-C"):
+        assert (_records_fingerprint(sched_name, "jax")
+                == _records_fingerprint(sched_name, "numpy")), sched_name
+
+
+def test_jax_backend_queue_penalty_smoke():
+    """With a live penalty the jax kernel computes in float32 (x64 is a
+    process-global flag we never flip), so bit-identity is NOT promised;
+    the run must still complete with a sane schedule."""
+    pytest.importorskip("jax")
+    mk, recs = _records_fingerprint("DAM-C", "jax", queue_penalty=0.05)
+    assert mk > 0 and len(recs) == 600

@@ -41,6 +41,14 @@ def test_sharding_spec_validation():
         ShardingSpec(imbalance_ratio=0.5)
     with pytest.raises(ValueError):
         ShardingSpec(max_migrations_per_round=0)
+    # deep-trigger ratios: 0 (off) or >= 1, nothing in between
+    with pytest.raises(ValueError):
+        ShardingSpec(high_pressure_ratio=0.5)
+    with pytest.raises(ValueError):
+        ShardingSpec(ptt_divergence_ratio=-1.0)
+    with pytest.raises(ValueError):
+        ShardingSpec(ptt_divergence_ratio=float("nan"))
+    ShardingSpec(high_pressure_ratio=1.5, ptt_divergence_ratio=2.0)
 
 
 # -- the flat-kernel degeneracy pin ------------------------------------------
@@ -140,11 +148,13 @@ def test_dead_shard_wake_routing_and_restore():
 
 # -- rebalancer ---------------------------------------------------------------
 
-def _loaded_engine_kernel(engine: str):
+def _loaded_engine_kernel(engine: str, **spec_kw):
     """Identically-seeded sharded plane as each engine constructs it, with
     the same queued-task pile on shard 0 (runtime never started)."""
-    spec = ShardingSpec(pods_per_shard=1, rebalance_period_s=1e-3,
-                        max_migrations_per_round=6)
+    kw = dict(pods_per_shard=1, rebalance_period_s=1e-3,
+              max_migrations_per_round=6)
+    kw.update(spec_kw)
+    spec = ShardingSpec(**kw)
     sched = make_scheduler("DAM-C", _topo(), seed=11)
     eng = (Simulator(sched, sharding=spec) if engine == "des"
            else ThreadedRuntime(sched, sharding=spec))
@@ -171,6 +181,89 @@ def test_rebalance_decisions_identical_across_engines():
         moves[engine] = [(idx[t.tid], dst, cp.migrate_in(t, dst))
                          for t, dst in round_]
     assert moves["des"] == moves["threaded"]
+
+
+def test_rebalance_parity_across_engines_with_deep_triggers():
+    """The criticality-pressure and PTT-divergence passes stay inside the
+    plan_round pure-function contract: the DES- and thread-constructed
+    planes, identically loaded and with identically-diverged PTTs, must
+    plan the same moves in the same order."""
+    tname = matmul_type(4096).name
+    moves = {}
+    for engine in ("des", "threaded"):
+        cp, tasks = _loaded_engine_kernel(
+            engine, high_pressure_ratio=1.5, ptt_divergence_ratio=1.2,
+            max_migrations_per_round=10)
+        topo = cp.sched.topology
+        # diverge the learned tables identically: shard 0 learned slow,
+        # shard 3 fast, for the one queued task type
+        for s, val in ((0, 8e-3), (1, 4e-3), (2, 4e-3), (3, 1e-3)):
+            tbl = cp.kernels[s].sched.ptt.for_type(tname)
+            tbl.update(topo.place_at(cp.shard_cores[s][0], 1), val)
+        idx = {t.tid: i for i, t in enumerate(tasks)}
+        round_ = cp.rebalancer.plan_round()
+        assert round_, engine
+        moves[engine] = [(idx[t.tid], dst, cp.migrate_in(t, dst))
+                         for t, dst in round_]
+    assert moves["des"] == moves["threaded"]
+
+
+def test_high_pressure_trigger_moves_high_backlog():
+    """Balanced total load but HIGH work piled on one shard: the default
+    spec plans nothing (total-load trigger is blind to criticality); the
+    criticality-pressure trigger sheds the HIGH pile."""
+    def build(**kw):
+        cp = _plane(seed=21, **kw)
+        for i in range(4):      # shard 0: all HIGH
+            t = Task(matmul_type(4096), priority=Priority.HIGH)
+            cp.queues.push(t, cp.kernels[0].wake(t, i % 4))
+        for s in (1, 2, 3):     # same pile elsewhere, all LOW
+            for i in range(4):
+                t = Task(matmul_type(4096), priority=Priority.LOW)
+                cp.queues.push(t, cp.kernels[s].wake(t, cp.shard_cores[s][i]))
+        return cp
+
+    cp = build()
+    assert cp.rebalancer.plan_round() == []      # loads balanced -> no-op
+    cp = build(high_pressure_ratio=1.5)
+    round_ = cp.rebalancer.plan_round()
+    assert round_
+    assert all(t.priority == Priority.HIGH for t, _ in round_)
+    assert all(dst != 0 for _, dst in round_)
+    # the HIGH backlog actually left shard 0
+    high0 = cp.queues.queued_high_s[list(cp.shard_cores[0])].sum()
+    assert high0 < 4 * max(t.load_est for t, _ in round_)
+
+
+def test_ptt_divergence_trigger_shifts_work_to_faster_shard():
+    """Loads below the imbalance trigger, but shard 0's learned estimates
+    are uniformly worse than shard 1's: the divergence pass drains
+    queued work toward the faster-learned shard (and is off by
+    default)."""
+    tname = matmul_type(4096).name
+
+    def build(**kw):
+        cp = _plane(seed=23, imbalance_ratio=10.0, **kw)
+        counts = (4, 1, 2, 2)
+        for s, n in enumerate(counts):
+            for i in range(n):
+                t = Task(matmul_type(4096), priority=Priority.LOW)
+                cp.queues.push(t, cp.kernels[s].wake(t, cp.shard_cores[s][i]))
+        topo = cp.sched.topology
+        for s, val in ((0, 8e-3), (1, 1e-3), (2, 4e-3), (3, 4e-3)):
+            tbl = cp.kernels[s].sched.ptt.for_type(tname)
+            tbl.update(topo.place_at(cp.shard_cores[s][0], 1), val)
+        return cp
+
+    assert build().rebalancer.plan_round() == []     # off by default
+    cp = build(ptt_divergence_ratio=1.5)
+    round_ = cp.rebalancer.plan_round()
+    assert round_
+    assert all(dst == 1 for _, dst in round_)        # toward the fast learner
+    for t, dst in round_:                            # land the moves
+        cp.queues.push(t, cp.migrate_in(t, dst))
+    loads = cp.shard_loads()
+    assert loads[0] <= loads[1] + 1e-9               # drained, no overshoot
 
 
 def test_rebalancer_migrates_high_before_low():

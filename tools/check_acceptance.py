@@ -40,6 +40,14 @@ DOCUMENTED_NEGATIVES: dict[str, dict[str, str]] = {
             "DAM-C win is stable enough to gate on.",
     },
     "BENCH_scale.json": {},
+    # Scheduler-engine throughput trajectory (the array-native DES core):
+    # the floors gate the committed root artifact's headline (DAM-C
+    # fig4-class cell) and the RWSM-C outlier cell against the scalar-core
+    # baselines (14.3k / 7.3k sim-tasks/s).  Regenerating on a heavily
+    # loaded host can undershoot the >=3x entry — rerun `python -m
+    # benchmarks.run --only sched` on a quiet machine rather than
+    # allowlisting it.
+    "BENCH_sched.json": {},
 }
 
 ARTIFACTS = tuple(DOCUMENTED_NEGATIVES)

@@ -1,0 +1,163 @@
+"""DES phase timer: per-event-kind and per-phase wall buckets.
+
+``cProfile`` inflates the DES hot path 2-3x and smears cost across
+inlined helpers; this tool instead wraps the simulator's event handlers
+and hot phases with ``perf_counter`` pairs on one instance, so a
+regression localizes to a bucket ("finish handling got slower", "the
+dispatch fixpoint is doing more rounds") without distorting the
+relative numbers.  Buckets overlap by construction — an event-kind
+bucket (e.g. ``finish``) contains the phase work its handler triggers
+(``refresh``, ``dispatch``) — so they are read as a breakdown per axis,
+not a partition of wall time.
+
+Output is JSON: per-event-kind wall buckets under ``_meta.kinds_s``,
+phase buckets under ``_meta.phases_s``, plus the workload descriptor
+and the same ``sim_tasks_per_s`` currency as ``BENCH_sched.json``
+(timed *without* instrumentation first, so the headline number is
+comparable).
+
+Usage:
+    PYTHONPATH=src python tools/profile_des.py
+    PYTHONPATH=src python tools/profile_des.py --sched RWSM-C \\
+        --tasks 4000 -o artifacts/profile_des.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.core import (corun_chain, haswell, make_scheduler, matmul_type,  # noqa: E402
+                        synthetic_dag, tx2, tx2_xl)
+from repro.core.simulator import Simulator  # noqa: E402
+
+TOPOS = {
+    "tx2": lambda: tx2(),
+    "tx2_xl": lambda: tx2_xl(clusters=4),
+    "haswell": lambda: haswell(),
+}
+
+# handler -> event kind it serves (the DES heap's ``kind`` strings)
+KIND_HANDLERS = {
+    "_commit": "finish",
+    "_on_fault_trigger": "finish(fault)",
+    "_on_straggler": "straggle",
+    "_requeue": "retry",
+    "_notice_expire": "notice",
+    "_recompute_speed": "speed",
+    "_recompute_bg": "bg",
+    "_revoke": "revoke",
+    "_restore": "restore",
+    "_decide": "decide",
+    "_migrate_land": "migrate",
+    "_rebalance": "rebalance",
+}
+
+# hot phases shared by every event's live tail
+PHASE_HANDLERS = {
+    "_advance": "advance",
+    "_dispatch": "dispatch",
+    "_refresh_rates": "refresh",
+    "_place_into_aqs": "place",
+    "_try_steal": "steal",
+    "_maybe_compact": "compact",
+}
+
+
+def _build(args):
+    topo = TOPOS[args.topo]()
+    sched = make_scheduler(args.sched, topo, seed=args.seed)
+    tt = matmul_type(64)
+    dag = synthetic_dag(tt, parallelism=args.parallelism,
+                        total_tasks=args.tasks)
+    sim = Simulator(sched, background=[corun_chain(tt, core=0)])
+    sim.submit(dag)
+    return sim
+
+
+def _instrument(sim, table: dict) -> dict:
+    """Wrap handlers on *this instance* with perf_counter pairs; the
+    class (and every other simulator) is untouched.  Wrapping happens
+    before run(), and the event loops call every handler through
+    ``self.``, so instance attributes shadow the methods."""
+    buckets: dict[str, dict] = {}
+    pc = time.perf_counter
+    for attr, bucket in table.items():
+        fn = getattr(sim, attr, None)
+        if fn is None:
+            continue
+        cell = buckets[bucket] = {"wall_s": 0.0, "calls": 0}
+
+        def timed(*a, _fn=fn, _c=cell, **k):
+            t0 = pc()
+            try:
+                return _fn(*a, **k)
+            finally:
+                _c["wall_s"] += pc() - t0
+                _c["calls"] += 1
+
+        setattr(sim, attr, timed)
+    return buckets
+
+
+def profile(args) -> dict:
+    # headline pass: untouched instance, so the throughput number is the
+    # real one (instrumentation costs ~2 perf_counter calls per handler
+    # call and would understate it)
+    sim = _build(args)
+    t0 = time.perf_counter()
+    metrics = sim.run()
+    wall = time.perf_counter() - t0
+
+    sim2 = _build(args)
+    kinds = _instrument(sim2, KIND_HANDLERS)
+    phases = _instrument(sim2, PHASE_HANDLERS)
+    t0 = time.perf_counter()
+    sim2.run()
+    wall_instr = time.perf_counter() - t0
+
+    rnd = lambda d: {k: {"wall_s": round(v["wall_s"], 6),
+                         "calls": v["calls"]}
+                     for k, v in sorted(d.items()) if v["calls"]}
+    return {
+        "_meta": {
+            "workload": {
+                "sched": args.sched, "topo": args.topo,
+                "parallelism": args.parallelism, "tasks": args.tasks,
+                "seed": args.seed,
+            },
+            "wall_s": round(wall, 4),
+            "sim_tasks_per_s": round(metrics.n_tasks / wall, 1),
+            "makespan_s": round(metrics.makespan, 6),
+            "instrumented_wall_s": round(wall_instr, 4),
+            "kinds_s": rnd(kinds),
+            "phases_s": rnd(phases),
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sched", default="DAM-C")
+    ap.add_argument("--topo", default="tx2", choices=sorted(TOPOS))
+    ap.add_argument("--parallelism", type=int, default=4)
+    ap.add_argument("--tasks", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("-o", "--out", default=None,
+                    help="also write the JSON here")
+    args = ap.parse_args(argv)
+    payload = profile(args)
+    text = json.dumps(payload, indent=1)
+    print(text)
+    if args.out:
+        pathlib.Path(args.out).write_text(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
