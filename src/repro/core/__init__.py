@@ -17,7 +17,8 @@ Public surface:
   runtime     — threaded executor running real payloads (JAX kernels)
   metrics     — throughput / placement / worktime aggregation
 """
-from .dag import DAG, chain_dag, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
+from .dag import (DAG, chain_dag, decode_pool_dag, heat_dag, kmeans_dag,
+                  mixed_dag, synthetic_dag)
 from .faults import (Fault, FaultModel, RecoveryPolicy, mmpp_faults,
                      task_faults)
 from .lifecycle import SchedulingKernel, ptt_observe, split_by_priority
@@ -37,19 +38,19 @@ from .preemption import (PreemptionModel, mmpp_preemption,
                          pod_slice_preemption, prune_full_outages,
                          sub_slice_preemption)
 from .ptt import PTT, PTTBank
-from .queues import SplitWSQ, WorkQueues
+from .queues import BatchingConfig, SplitWSQ, WorkQueues
 from .runtime import ThreadedRuntime, run_threaded
 from .schedulers import ALL_SCHEDULERS, Scheduler, make_scheduler
 from .shards import (GlobalRebalancer, ShardedControlPlane, ShardingSpec,
                      make_control_plane)
 from .simulator import Simulator, simulate
-from .task import (Priority, Task, TaskType, copy_type, kmeans_map_type,
-                   kmeans_reduce_type, matmul_type, mpi_exchange_type,
-                   stencil_type)
+from .task import (Priority, Task, TaskType, batch_bucket, copy_type,
+                   kmeans_map_type, kmeans_reduce_type, matmul_type,
+                   mpi_exchange_type, stencil_type)
 
 __all__ = [
-    "DAG", "chain_dag", "heat_dag", "kmeans_dag", "mixed_dag",
-    "synthetic_dag",
+    "DAG", "chain_dag", "decode_pool_dag", "heat_dag", "kmeans_dag",
+    "mixed_dag", "synthetic_dag",
     "BackgroundApp", "PeriodicProfile", "SpeedProfile", "SpeedProfileBase",
     "TraceProfile", "burst_episodes", "corun_chain", "corun_socket",
     "dvfs_denver", "governor_profile", "LoadCoupledGovernor",
@@ -64,7 +65,7 @@ __all__ = [
     "make_control_plane",
     "Fault", "FaultModel", "RecoveryPolicy", "mmpp_faults", "task_faults",
     "SchedulingKernel", "ptt_observe", "split_by_priority",
-    "SplitWSQ", "WorkQueues",
+    "BatchingConfig", "SplitWSQ", "WorkQueues", "batch_bucket",
     "PTT", "PTTBank", "ThreadedRuntime",
     "run_threaded", "ALL_SCHEDULERS", "Scheduler", "make_scheduler",
     "RunSpec", "default_workers", "run_cell", "run_cells", "shutdown_pool",

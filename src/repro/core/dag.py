@@ -113,6 +113,31 @@ def chain_dag(task_type: TaskType, length: int) -> DAG:
     return DAG([head], length)
 
 
+def decode_pool_dag(prefill_type: TaskType, decode_type: TaskType, *,
+                    n_requests: int, steps: int,
+                    batch_key: Optional[str] = "decode") -> DAG:
+    """Serving-shaped DAG for the queue-level continuous-batching path:
+    ``n_requests`` independent chains, each a HIGH prefill releasing
+    ``steps`` LOW decode tasks marked with ``batch_key``.  At any instant
+    each chain has at most one ready decode step, so the tasks queued
+    under the shared key across chains are exactly the coalescible set —
+    the same population the serving engine's DecodeBatcher sees.
+    ``batch_key=None`` builds the identical DAG with coalescing off (the
+    control for degeneracy tests)."""
+    if n_requests < 1 or steps < 0:
+        raise ValueError("need n_requests >= 1 and steps >= 0")
+    roots: list[Task] = []
+    for _ in range(n_requests):
+        head = Task(prefill_type, priority=Priority.HIGH)
+        cur = head
+        for _ in range(steps):
+            nxt = Task(decode_type, priority=Priority.LOW)
+            nxt.batch_key = batch_key
+            cur = cur.add_child(nxt)
+        roots.append(head)
+    return DAG(roots, n_requests * (1 + steps))
+
+
 def kmeans_dag(*, n_points: int = 200_000, dims: int = 16, k: int = 8,
                n_chunks: int = 32, iterations: int = 80,
                on_iteration: Optional[Callable[[int], None]] = None) -> DAG:

@@ -29,7 +29,7 @@ from typing import Callable, Iterable, Iterator, Optional
 import numpy as np
 
 from .places import ExecutionPlace
-from .queues import WorkQueues
+from .queues import BatchingConfig, WorkQueues
 from .schedulers import Scheduler
 from .task import Priority, Task, TaskType
 
@@ -98,6 +98,11 @@ class SchedulingKernel:
                 gather[i, width:] = leader
             self._place_gather = gather
             scheduler.load_view = self.place_load
+        # Continuous batching (see ``form_dispatch``): engines set this to
+        # a BatchingConfig with max_batch > 1 to turn the coalescing
+        # dequeue on.  None (the default) keeps every dequeue untouched —
+        # the max_batch=1 degeneracy pin.
+        self.batching: Optional[BatchingConfig] = None
         scheduler.begin_run()
 
     # -- wake (steps 1-2): binding placement of HIGH tasks -------------------
@@ -227,6 +232,54 @@ class SchedulingKernel:
     def on_steal(self, task: Task) -> None:
         """A stolen task's binding decision is redone at the thief."""
         task.bound_place = None
+
+    def form_dispatch(self, task: Task, core: int) -> Task:
+        """Continuous batching at the dequeue boundary: after an engine
+        pops ``task`` from ``core``'s WSQ, coalesce queued tasks sharing
+        its ``batch_key`` into it (oldest first, up to ``max_batch``
+        total) and re-type the dispatch via :meth:`TaskType.batched`.
+
+        The re-typed dispatch then flows through the *unchanged* single-
+        task machinery — one :meth:`choose_place` search, one run charge,
+        one DES duration lookup, and one PTT observation, all against the
+        batched type — which is exactly the amortization continuous
+        batching buys.  Members' own lifecycle resumes at the dispatch's
+        commit (:meth:`batch_feedback` + per-member successor walks).
+        No-op unless ``self.batching`` is set and the task carries a
+        batch key; re-forming a dispatch that already holds members (a
+        preempted or retried batch popped again) only tops it up to
+        ``max_batch``."""
+        cfg = self.batching
+        if cfg is None or task.batch_key is None:
+            return task
+        existing = task.batch_members or []
+        room = cfg.max_batch - 1 - len(existing)
+        if room <= 0:
+            return task
+        members = self.queues.coalesce_batch(core, task.batch_key, room)
+        if members:
+            task.batch_members = existing + members
+            base = task.type
+            if base.batch_base is not None:
+                # already re-typed on a previous pop; rescale from a
+                # member's base type so the bucket tracks the new size
+                base = members[0].type
+            task.type = base.batched(1 + len(task.batch_members),
+                                     cfg.member_cost)
+        return task
+
+    def batch_feedback(self, task: Task, place: ExecutionPlace,
+                       observed: float) -> None:
+        """Commit feedback for a batched dispatch: one PTT observation on
+        the dispatch's batch-bucketed type (the learner sees batched
+        throughput per size class), plus a discharge per member — members
+        hold no run charges of their own (their queued charges were
+        dropped at coalesce time), but a displaced-then-coalesced member
+        may, and discharge is idempotent either way."""
+        self.ptt_feedback(task, place, observed)
+        if task.batch_members:
+            for m in task.batch_members:
+                self.discharge(m)
 
     def choose_place(self, task: Task, worker_core: int) -> ExecutionPlace:
         """Final execution place chosen by the worker that will run it

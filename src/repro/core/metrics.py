@@ -97,6 +97,14 @@ class RunMetrics:
     overflow_migrations: int = 0
     rebalance_rounds: int = 0
     migrated_load_s: float = 0.0
+    # online re-sharding rounds applied mid-run (zero without reshard
+    # events; see ShardedControlPlane.reshard)
+    reshard_rounds: int = 0
+    # continuous-batching accounting (empty without a BatchingConfig):
+    # one entry per multi-member dispatch — (dispatch type name, sorted
+    # tuple of member base-type names, leader included).  The cross-engine
+    # parity tests compare these as multisets.
+    batches: list[tuple] = dataclasses.field(default_factory=list)
     # fault-injection / recovery accounting (all zero without a FaultModel
     # attached — see ``repro.core.faults``): injected fault counts, retry /
     # permanent-failure counts, straggler flags and speculative duplicates,

@@ -48,7 +48,8 @@ import time
 from multiprocessing import get_context
 from typing import Iterable, Optional, Sequence
 
-from .dag import DAG, heat_dag, kmeans_dag, mixed_dag, synthetic_dag
+from .dag import (DAG, decode_pool_dag, heat_dag, kmeans_dag, mixed_dag,
+                  synthetic_dag)
 from .faults import FaultModel, RecoveryPolicy, mmpp_faults, task_faults
 from .interference import (BackgroundApp, LoadCoupledGovernor,
                            PeriodicProfile, SpeedProfile, SpeedProfileBase,
@@ -108,11 +109,18 @@ def _mixed(task_types=(), **kw) -> DAG:
     return mixed_dag([_build_task_type(t) for t in task_types], **kw)
 
 
+def _decode_pool(task_types=(), **kw) -> DAG:
+    # (prefill, decode) as (name, kwargs) pairs, mixed-dag idiom
+    pre, dec = (_build_task_type(t) for t in task_types)
+    return decode_pool_dag(pre, dec, **kw)
+
+
 DAG_BUILDERS = {
     "synthetic": _synthetic,
     "heat": _heat,
     "kmeans": _kmeans,
     "mixed": _mixed,
+    "decode_pool": _decode_pool,
 }
 
 
@@ -248,6 +256,10 @@ COLLECTORS = {
                             "migrated_load_s": round(m.migrated_load_s, 9)},
     "faults": lambda m: m.fault_summary(),
     "task_sojourn": lambda m: m.task_sojourn_stats(),
+    # continuous batching: the exact multiset of fused-dispatch
+    # compositions, sorted — bitwise-comparable across worker counts
+    "batching": lambda m: {"n_batches": len(m.batches),
+                           "compositions": sorted(m.batches)},
 }
 
 

@@ -23,12 +23,51 @@ the threaded runtime's seeded steal stream both ride on the same code.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Iterable, Optional
 
 import numpy as np
 
 from .task import Priority, Task
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    """Continuous-batching knobs, shared by the serving engine's
+    :class:`~repro.serve.batching.DecodeBatcher` and the engines'
+    queue-level coalescing dequeue.
+
+    ``max_batch`` — most members per dispatch (1 disables batching: the
+    degeneracy pin — every path must be bit-identical to no batching).
+    ``delay_s`` — how long a partial batch may wait for more members
+    before it flushes anyway (the batch-delay window).
+    ``flush_slack_s`` — a member whose deadline slack falls to this
+    flushes the pending batch immediately.
+    ``member_cost`` — marginal cost of each member past the first as a
+    fraction of the base step time (batched decode is memory-bound; see
+    :meth:`~repro.core.task.TaskType.batched`).
+
+    Frozen + plain fields so it pickles across ``multirun`` workers and
+    can ride ``RunSpec.sim_kwargs`` verbatim."""
+
+    max_batch: int = 8
+    delay_s: float = 2e-3
+    flush_slack_s: float = 0.0
+    member_cost: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.delay_s < 0.0 or self.flush_slack_s < 0.0:
+            raise ValueError("delay_s / flush_slack_s must be >= 0")
+        if not 0.0 <= self.member_cost <= 1.0:
+            raise ValueError(
+                f"member_cost must be in [0, 1], got {self.member_cost}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.max_batch > 1
 
 
 class SplitWSQ:
@@ -162,6 +201,33 @@ class WorkQueues:
             if task.priority == Priority.HIGH:
                 self.queued_high_s[victim] -= task.load_est
         return task
+
+    def coalesce_batch(self, core: int, key: str, limit: int) -> list[Task]:
+        """Coalescing LOW dequeue (continuous batching): remove up to
+        ``limit`` queued LOW tasks whose ``batch_key`` equals ``key`` from
+        ``core``'s queue, oldest first, and return them as batch members.
+        Called right after an engine pops a dispatch leader with a batch
+        key; the members skip their own place/dequeue rounds and ride the
+        leader.  Only the LOW deque is scanned — batchable work is LOW by
+        construction (HIGH prefills must never wait on batch fill)."""
+        if limit <= 0:
+            return []
+        q = self.wsq[core].low
+        if not q:
+            return []
+        taken: list[Task] = []
+        kept: list[Task] = []
+        for t in q:
+            if len(taken) < limit and t.batch_key == key:
+                taken.append(t)
+            else:
+                kept.append(t)
+        if taken:
+            q.clear()
+            q.extend(kept)
+            if self.track_load:
+                self.queued_s[core] -= sum(t.load_est for t in taken)
+        return taken
 
     def migrate_pop(self, core: int) -> Optional[Task]:
         """Pop one task for cross-shard migration, HIGH-first (a parked

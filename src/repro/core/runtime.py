@@ -71,6 +71,7 @@ from .faults import FaultModel, FaultState, RecoveryPolicy
 from .lifecycle import split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .preemption import PreemptionModel
+from .queues import BatchingConfig
 from .schedulers import Scheduler
 from .shards import ShardingSpec, make_control_plane
 from .task import Priority, Task
@@ -102,7 +103,8 @@ class ThreadedRuntime:
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  supervisor=None,
-                 sharding: Optional[ShardingSpec] = None):
+                 sharding: Optional[ShardingSpec] = None,
+                 batching: Optional[BatchingConfig] = None):
         # idle_sleep is only a fallback poll: every work arrival (wake,
         # assignment, requeue, restore) notifies the condition variable,
         # so idle workers do not need a tight poll — 1e-4 here made eight
@@ -119,6 +121,17 @@ class ThreadedRuntime:
         self.kernel = make_control_plane(scheduler, now=self._now,
                                          sharding=sharding)
         self.queues = self.kernel.queues
+        # continuous batching: a max_batch=1 config is the disabled path
+        # by definition (the degeneracy pin), so normalize it to None here
+        # — every batching branch below then stays dead code
+        if batching is not None and not batching.enabled:
+            batching = None
+        if batching is not None and faults is not None and faults.enabled:
+            raise ValueError("continuous batching with fault injection is "
+                             "not supported: a batched dispatch has no "
+                             "per-member retry semantics")
+        self.batching = batching
+        self.kernel.batching = batching
         self.aq = self.queues.aq        # per-core deques of _Assigned
         self.slowdown = dict(slowdown or {})
         self.idle_sleep = idle_sleep
@@ -225,6 +238,11 @@ class ThreadedRuntime:
                     continue
                 if stolen:
                     self.kernel.on_steal(task)
+                if self.batching is not None and task.batch_key is not None:
+                    # coalesce same-key queued LOW work from the queue the
+                    # leader came out of (members were pushed beside it)
+                    self.kernel.form_dispatch(task,
+                                              victim if stolen else core)
                 return self._assign(task, core)
 
     def _assign(self, task: Task, core: int) -> _Assigned:
@@ -257,12 +275,24 @@ class ThreadedRuntime:
             if task.payload is not None:
                 task.revoke_signal = rec.revoked
                 try:
-                    ret = task.payload(rec.place.width)
+                    ret = task.payload(rec.place.width, *task.args)
                 except Exception as e:      # a raising payload must never
                     rec.error = e           # kill the leader thread: the
                                             # members would block forever
                 finally:
                     task.revoke_signal = None
+            if rec.error is None and task.batch_members:
+                # queue-coalesced batch members execute inside the leader's
+                # dispatch (real wall time; the commit feeds the total into
+                # the batched type's PTT entry)
+                for m in task.batch_members:
+                    if m.payload is None:
+                        continue
+                    try:
+                        m.payload(rec.place.width, *m.args)
+                    except Exception as e:
+                        rec.error = e
+                        break
             factor = max((self.slowdown.get(c, 1.0) for c in rec.place.cores),
                          default=1.0)
             if factor > 1.0:
@@ -371,8 +401,16 @@ class ThreadedRuntime:
         task.t_end = self._now()
         task.place = rec.place
         observed = task.t_end - task.t_start
-        self.kernel.ptt_feedback(task, rec.place, observed)
+        members = task.batch_members or ()
         with self.lock:
+            # feedback rides the runtime lock: an online reshard() swaps
+            # the plane's shard routing under this same lock, and the
+            # routing read (kernels[shard_of_core[leader]]) must not
+            # interleave with the swap
+            if members:
+                self.kernel.batch_feedback(task, rec.place, observed)
+            else:
+                self.kernel.ptt_feedback(task, rec.place, observed)
             for c in rec.place.cores:
                 # remove this record from each member AQ (it is at/near head)
                 try:
@@ -383,10 +421,20 @@ class ThreadedRuntime:
                 type_name=task.type.name, priority=int(task.priority),
                 leader=rec.place.leader, width=rec.place.width,
                 t_ready=src.t_ready, t_start=task.t_start, t_end=task.t_end))
+            if members:
+                base = task.type.batch_base or task.type.name
+                self.metrics.batches.append((task.type.name, tuple(sorted(
+                    [base] + [m.type.name for m in members]))))
+                for m in members:
+                    m.t_start, m.t_end, m.place = (task.t_start, task.t_end,
+                                                   rec.place)
         for ready in self.kernel.commit_successors(src, lock=self.lock):
             self._wake(ready, rec.place.leader)
+        for m in members:
+            for ready in self.kernel.commit_successors(m, lock=self.lock):
+                self._wake(ready, rec.place.leader)
         with self.work_cv:
-            self.outstanding -= 1
+            self.outstanding -= 1 + len(members)
             self.work_cv.notify_all()
 
     # -- fault recovery (see ``core/faults.py``) ------------------------------
@@ -397,12 +445,13 @@ class ThreadedRuntime:
         attempt budget is spent.  Hedge copies never retry."""
         task = rec.task
         dur = self._now() - task.t_start
-        self.kernel.discharge(task)     # fault_feedback also discharges,
-                                        # but a real payload exception with
-                                        # no fault model must not leak load
-        if self._fx is not None:
-            self.kernel.fault_feedback(task, rec.place, dur,
-                                       self._fx.policy.fail_penalty)
+        with self.lock:                 # vs reshard(): see _commit
+            self.kernel.discharge(task)  # fault_feedback also discharges,
+                                         # but a real payload exception with
+                                         # no fault model must not leak load
+            if self._fx is not None:
+                self.kernel.fault_feedback(task, rec.place, dur,
+                                           self._fx.policy.fail_penalty)
         with self.work_cv:
             for c in rec.place.cores:
                 try:
@@ -441,7 +490,9 @@ class ThreadedRuntime:
                 self.metrics.errors.append(
                     f"task {task.tid} ({task.type.name}) failed permanently "
                     f"after {task.fault_count - 1} retries")
-                self.outstanding -= 1
+                # a batched dispatch (payload exception path; fault
+                # injection is excluded up front) resolves its members too
+                self.outstanding -= 1 + len(task.batch_members or ())
                 self.work_cv.notify_all()
                 return
             self.metrics.retries += 1
@@ -469,7 +520,8 @@ class ThreadedRuntime:
         checkpointed) after the winner committed — running payloads
         cannot be killed, so the loser is dropped here and its wall time
         accounted as the hedge premium."""
-        self.kernel.discharge(rec.task)
+        with self.lock:                 # vs reshard(): see _commit
+            self.kernel.discharge(rec.task)
         dur = self._now() - rec.task.t_start
         with self.work_cv:
             for c in rec.place.cores:
@@ -499,7 +551,8 @@ class ThreadedRuntime:
                 if (rec.done.is_set() or rec.straggle_flagged
                         or task.hedge_of is not None):
                     continue
-                exp = self.kernel.expected_duration(task, rec.place)
+                with self.lock:         # vs reshard(): see _commit
+                    exp = self.kernel.expected_duration(task, rec.place)
                 if exp <= 0.0 or now - task.t_start < pol.straggler_k * exp:
                     continue
                 rec.straggle_flagged = True
@@ -508,8 +561,10 @@ class ThreadedRuntime:
                 if (not pol.hedge or task.priority != Priority.HIGH
                         or task.hedge_launched or task.committed):
                     continue
-                place = self.kernel.hedge_place(task, set(rec.place.cores),
-                                                self._fx.hedge_rng)
+                with self.lock:         # vs reshard(): see _commit
+                    place = self.kernel.hedge_place(task,
+                                                    set(rec.place.cores),
+                                                    self._fx.hedge_rng)
                 if place is None:
                     continue
                 with self.work_cv:
@@ -651,6 +706,20 @@ class ThreadedRuntime:
                     self.work_cv.notify_all()
             t_next = self._now() + period
 
+    def reshard(self, pods_per_shard: int) -> int:
+        """Online re-sharding (sharded control plane only): regroup the
+        pods into shards of ``pods_per_shard`` mid-run and land the
+        rebalancer's catch-up migration round immediately.  Returns the
+        number of tasks migrated by that round."""
+        if getattr(self.kernel, "n_shards", 1) <= 1:
+            raise ValueError("reshard() requires a sharded control plane")
+        with self.work_cv:
+            moves = self.kernel.reshard(pods_per_shard)
+            for task, dst in moves:
+                self.queues.push(task, self.kernel.migrate_in(task, dst))
+            self.work_cv.notify_all()
+        return len(moves)
+
     # -- run ------------------------------------------------------------------
     def _launch(self) -> None:
         if self._started:
@@ -739,6 +808,7 @@ class ThreadedRuntime:
             self.metrics.overflow_migrations = self.kernel.overflow_migrations
             self.metrics.rebalance_rounds = self.kernel.rebalance_rounds
             self.metrics.migrated_load_s = self.kernel.migrated_load_s
+            self.metrics.reshard_rounds = self.kernel.reshard_rounds
         return self.metrics
 
     def run(self, timeout: float = 120.0) -> RunMetrics:
@@ -754,9 +824,11 @@ def run_threaded(dag: DAG, scheduler: Scheduler, *,
                  recovery: Optional[RecoveryPolicy] = None,
                  supervisor=None,
                  sharding: Optional[ShardingSpec] = None,
+                 batching: Optional[BatchingConfig] = None,
                  timeout: float = 120.0) -> RunMetrics:
     rt = ThreadedRuntime(scheduler, slowdown=slowdown, preemption=preemption,
                          faults=faults, recovery=recovery,
-                         supervisor=supervisor, sharding=sharding)
+                         supervisor=supervisor, sharding=sharding,
+                         batching=batching)
     rt.submit(dag)
     return rt.run(timeout=timeout)

@@ -294,36 +294,20 @@ class ShardedControlPlane:
         self.spec = sharding
         self.sched = scheduler
         self.now = now
-        self.n_shards = n_shards
-        self.shard_parts = tuple(
-            tuple(range(i * pps, min((i + 1) * pps, len(parts))))
-            for i in range(n_shards))
-        self.shard_cores = tuple(
-            tuple(c for pi in ps for c in parts[pi].cores)
-            for ps in self.shard_parts)
-        self.shard_of_core = [0] * topo.n_cores
-        for s, cs in enumerate(self.shard_cores):
-            for c in cs:
-                self.shard_of_core[c] = s
-        self._shard_core_idx = [np.array(cs, dtype=np.int64)
-                                for cs in self.shard_cores]
         self._all_cores = tuple(range(topo.n_cores))
         self._all_core_set = frozenset(self._all_cores)
         self._place_lw = [(p.leader, p.width) for p in topo.places()]
+        self.shard_of_core = [0] * topo.n_cores
 
         self.queues = WorkQueues(
             topo.n_cores, priority_dequeue=scheduler.priority_dequeue,
             steal_high=scheduler.steal_high, track_load=True,
-            groups=list(self.shard_of_core))
-        self._base_view = tuple(
-            topo.live_view_cores(self._all_core_set - frozenset(cs))
-            for cs in self.shard_cores)
-        self.kernels: list[SchedulingKernel] = []
-        for s in range(n_shards):
-            clone = scheduler.clone(f"shard:{s}:{scheduler.rng.random()}")
-            k = SchedulingKernel(clone, now=now, queues=self.queues)
-            clone.live = self._base_view[s]
-            self.kernels.append(k)
+            groups=[0] * topo.n_cores)
+        # continuous batching (mirrors SchedulingKernel.batching): the
+        # engines set this; form_dispatch below reads it
+        self.batching = None
+        self._reshard_generation = 0
+        self._set_grouping(pps)
         scheduler.begin_run()
         self._down_cores: frozenset = frozenset()
         self._dead = [False] * n_shards
@@ -334,6 +318,84 @@ class ShardedControlPlane:
         self.overflow_migrations = 0
         self.rebalance_rounds = 0
         self.migrated_load_s = 0.0
+        self.reshard_rounds = 0
+
+    def _set_grouping(self, pps: int) -> None:
+        """(Re)build the shard grouping for ``pods_per_shard=pps``: shard
+        membership tables, the shared queues' steal groups (mutated in
+        place — the engines hold references), the per-shard kernels over
+        freshly cloned schedulers, and their fence views.  Used at
+        construction and by :meth:`reshard`."""
+        topo = self.sched.topology
+        parts = topo.partitions
+        n_shards = (len(parts) + pps - 1) // pps
+        self.n_shards = n_shards
+        self.shard_parts = tuple(
+            tuple(range(i * pps, min((i + 1) * pps, len(parts))))
+            for i in range(n_shards))
+        self.shard_cores = tuple(
+            tuple(c for pi in ps for c in parts[pi].cores)
+            for ps in self.shard_parts)
+        for s, cs in enumerate(self.shard_cores):
+            for c in cs:
+                self.shard_of_core[c] = s
+        self._shard_core_idx = [np.array(cs, dtype=np.int64)
+                                for cs in self.shard_cores]
+        self.queues.groups[:] = self.shard_of_core
+        self._base_view = tuple(
+            topo.live_view_cores(self._all_core_set - frozenset(cs))
+            for cs in self.shard_cores)
+        gen = self._reshard_generation
+        tag = f"r{gen}:" if gen else ""
+        self.kernels: list[SchedulingKernel] = []
+        for s in range(n_shards):
+            clone = self.sched.clone(
+                f"shard:{tag}{s}:{self.sched.rng.random()}")
+            k = SchedulingKernel(clone, now=self.now, queues=self.queues)
+            clone.live = self._base_view[s]
+            self.kernels.append(k)
+
+    def reshard(self, pods_per_shard: int) -> list[tuple[Task, int]]:
+        """Online re-sharding: regroup the fleet's pods into shards of
+        ``pods_per_shard`` mid-run (pods joined, or a long-revoked pod is
+        being consolidated into a live neighbor's shard) and return the
+        rebalancer's catch-up migration round — ``(task, destination
+        shard)`` pairs the engine lands via :meth:`migrate_in` — so
+        queued work orphaned on the old grouping's cold corners moves
+        under the new one.
+
+        Every per-core structure (WSQs, AQs, queued-seconds vectors) is
+        untouched; only shard *membership* changes.  New shard kernels
+        are cloned deterministically from the top scheduler's stream
+        (cold PTTs — the rebalancer's divergence trigger and plain
+        exploration re-learn them; an accepted cost, documented in
+        DESIGN.md).  In-flight run charges transfer to the new owner of
+        each charged core so load accounting stays exact."""
+        if pods_per_shard < 1:
+            raise ValueError(f"pods_per_shard {pods_per_shard} < 1")
+        parts = self.sched.topology.partitions
+        if (len(parts) + pods_per_shard - 1) // pods_per_shard < 2:
+            raise ValueError("re-sharding to a single shard is not "
+                             "supported (the flat kernel cannot be "
+                             "swapped in mid-run)")
+        old_kernels = self.kernels
+        self._reshard_generation += 1
+        self.spec = dataclasses.replace(self.spec,
+                                        pods_per_shard=pods_per_shard)
+        self._set_grouping(pods_per_shard)
+        self._dead = [False] * self.n_shards
+        # in-flight charges follow their cores to the new owning shard
+        for k in old_kernels:
+            for tid, (cores, est) in k._run_charges.items():
+                nk = self.kernels[self.shard_of_core[cores[0]]]
+                nk._run_charges[tid] = (cores, est)
+                for c in cores:
+                    nk._running_s[c] += est
+        for k in self.kernels:
+            k.batching = self.batching
+        self.set_availability(self._down_cores)
+        self.reshard_rounds += 1
+        return self.rebalancer.plan_round()
 
     # -- shard state ---------------------------------------------------------
     def shard_dead(self, s: int) -> bool:
@@ -433,6 +495,37 @@ class ShardedControlPlane:
     def choose_place(self, task: Task, worker_core: int) -> ExecutionPlace:
         return self.kernels[self.shard_of_core[worker_core]].choose_place(
             task, worker_core)
+
+    def form_dispatch(self, task: Task, core: int) -> Task:
+        """Continuous batching at the dequeue boundary (see
+        :meth:`SchedulingKernel.form_dispatch`) — queue coalescing is
+        per-core, so sharding changes nothing about it."""
+        cfg = self.batching
+        if cfg is None or task.batch_key is None:
+            return task
+        existing = task.batch_members or []
+        room = cfg.max_batch - 1 - len(existing)
+        if room <= 0:
+            return task
+        members = self.queues.coalesce_batch(core, task.batch_key, room)
+        if members:
+            task.batch_members = existing + members
+            base = task.type
+            if base.batch_base is not None:
+                base = members[0].type
+            task.type = base.batched(1 + len(task.batch_members),
+                                     cfg.member_cost)
+        return task
+
+    def batch_feedback(self, task: Task, place: ExecutionPlace,
+                       observed: float) -> None:
+        """One PTT observation on the batch-bucketed type at the owning
+        shard, plus idempotent member discharges (see
+        :meth:`SchedulingKernel.batch_feedback`)."""
+        self.ptt_feedback(task, place, observed)
+        if task.batch_members:
+            for m in task.batch_members:
+                self.discharge(m)
 
     # -- load accounting ------------------------------------------------------
     def estimate_seconds(self, task_type: TaskType,

@@ -130,6 +130,7 @@ from .lifecycle import split_by_priority
 from .metrics import RunMetrics, TaskRecord
 from .places import ExecutionPlace
 from .preemption import PreemptionModel
+from .queues import BatchingConfig
 from .schedulers import Scheduler
 from .shards import ShardingSpec, make_control_plane
 from .task import PARTITION_BW, Priority, Task
@@ -184,6 +185,8 @@ class Simulator:
                  faults: Optional[FaultModel] = None,
                  recovery: Optional[RecoveryPolicy] = None,
                  sharding: Optional[ShardingSpec] = None,
+                 batching: Optional[BatchingConfig] = None,
+                 reshard_at: Iterable[tuple[float, int]] = (),
                  horizon: float = 1e6,
                  event_mode: str = "cohort",
                  compact_min_stale: int = _COMPACT_MIN_STALE,
@@ -231,6 +234,22 @@ class Simulator:
                 # overflow/rebalance logic can see the modeled bottleneck
                 self.kernel.decision_backlog = (
                     lambda s: self._decide_depth[s] * self._decision_s)
+        # continuous batching: a max_batch=1 config is the disabled path
+        # by definition (the degeneracy pin), so normalize it to None —
+        # every batching branch below then stays dead code
+        if batching is not None and not batching.enabled:
+            batching = None
+        if batching is not None and faults is not None and faults.enabled:
+            raise ValueError("continuous batching with fault injection is "
+                             "not supported: a batched dispatch has no "
+                             "per-member retry semantics")
+        self._batching = batching
+        self.kernel.batching = batching
+        # online re-sharding events: (t, pods_per_shard), applied in event
+        # order (sharded control plane only; see _reshard)
+        self._reshard_at = tuple(sorted(reshard_at))
+        if self._reshard_at and self._n_shards <= 1:
+            raise ValueError("reshard_at requires a sharded control plane")
         self._pend = itertools.count()
         self._pending_decide: dict[int, tuple[Task, int]] = {}
         self._pending_migrate: dict[int, tuple[Task, int]] = {}
@@ -820,6 +839,25 @@ class Simulator:
         task, dst = self._pending_migrate.pop(pid)
         self._enqueue(task, self.kernel.migrate_in(task, dst))
 
+    def _reshard(self, idx: int):
+        """Apply one online re-sharding event: regroup the pods into new
+        shards (:meth:`ShardedControlPlane.reshard`) and land the
+        rebalancer's catch-up migration round immediately.  The plane
+        mutates ``shard_of_core`` and the steal-group fences in place, so
+        the decision-server binding and every queued reference stay
+        valid."""
+        _, pps = self._reshard_at[idx]
+        moves = self.kernel.reshard(pps)
+        self._n_shards = self.kernel.n_shards
+        if self._decision_s > 0.0 and self._n_shards > len(self._shard_free):
+            # grow the decision-server arrays; wakes queued under old
+            # shard ids drain against their (still-indexed) old servers
+            grow = self._n_shards - len(self._shard_free)
+            self._shard_free.extend([0.0] * grow)
+            self._decide_depth.extend([0] * grow)
+        for task, dst in moves:
+            self._enqueue(task, self.kernel.migrate_in(task, dst))
+
     def _requeue(self, task: Task):
         """Hand a displaced task back to the scheduler (see
         :meth:`SchedulingKernel.requeue_displaced`)."""
@@ -980,6 +1018,8 @@ class Simulator:
             if self._fx is not None and (task.hedge_of or task).committed:
                 self._outstanding -= 1      # hedge loser resolves at pop
                 continue
+            if self._batching is not None and task.batch_key is not None:
+                self.kernel.form_dispatch(task, core)
             self._place_into_aqs(task, core)
             return True
 
@@ -1000,6 +1040,10 @@ class Simulator:
                 t.bound_place = None    # inlined on_steal: decision redone
             else:
                 self.kernel.on_steal(t)
+            if self._batching is not None and t.batch_key is not None:
+                # same-key members still sit in the victim's queue —
+                # coalesce there, then execute at the thief
+                self.kernel.form_dispatch(t, victim)
             self._place_into_aqs(t, thief)
             return True
 
@@ -1323,8 +1367,9 @@ class Simulator:
             dirty.add(c)
             starving.discard(c)
         del self.running[task.tid]
-        self._done += 1
-        self._outstanding -= 1
+        members = task.batch_members or ()
+        self._done += 1 + len(members)
+        self._outstanding -= 1 + len(members)
         if rec.bw_contrib > 0.0:
             dom = rec.domain
             d, k = self._demand[dom]
@@ -1360,10 +1405,16 @@ class Simulator:
                 tbl = self._ptt_for[ttype.name] = \
                     self._ptt_bank.for_type(ttype.name)
             tbl.update_nolock(rec.place, observed)
+            if members and self._track_load:
+                for m in members:
+                    self.kernel.discharge(m)
         else:
             observed = self.kernel.observe_simulated(
                 ttype, task.t_end - task.t_start)
-            self.kernel.ptt_feedback(task, rec.place, observed)
+            if members:
+                self.kernel.batch_feedback(task, rec.place, observed)
+            else:
+                self.kernel.ptt_feedback(task, rec.place, observed)
 
         # A winning duplicate commits on behalf of its logical task:
         # successors and the record's sojourn anchor come from it.
@@ -1372,10 +1423,20 @@ class Simulator:
         self._rec_append(TaskRecord(
             ttype.name, int(task.priority), leader, rec.place.width,
             src.t_ready, task.t_start, task.t_end))
+        if members:
+            base = ttype.batch_base or ttype.name
+            self.metrics.batches.append((ttype.name, tuple(sorted(
+                [base] + [m.type.name for m in members]))))
+            for m in members:
+                m.t_start = task.t_start
+                m.t_end = task.t_end
 
         # Wake dependents; dynamic DAG growth.  Flat-kernel inline of
         # commit_successors (same dependency bookkeeping, no generator):
         # the DES is single-threaded, so the lockless decrement is exact.
+        # A batched dispatch walks the leader's successors first, then
+        # each member's in coalesce order — same order as the threaded
+        # engine's commit.
         if self._flat:
             for child in src.children:
                 child.n_deps -= 1
@@ -1385,9 +1446,21 @@ class Simulator:
                 for new_task in src.on_commit(src):
                     if new_task.n_deps == 0:
                         self._wake(new_task, leader)
+            for m in members:
+                for child in m.children:
+                    child.n_deps -= 1
+                    if child.n_deps == 0:
+                        self._wake(child, leader)
+                if m.on_commit is not None:
+                    for new_task in m.on_commit(m):
+                        if new_task.n_deps == 0:
+                            self._wake(new_task, leader)
         else:
             for ready in self.kernel.commit_successors(src):
                 self._wake(ready, leader)
+            for m in members:
+                for ready in self.kernel.commit_successors(m):
+                    self._wake(ready, leader)
 
     # ------------------------------------------------------------------ run
     def _run_scalar(self):
@@ -1452,6 +1525,8 @@ class Simulator:
                     self._migrate_land(tid)
                 elif kind == "rebalance":
                     self._rebalance()
+                elif kind == "reshard":
+                    self._reshard(tid)
             self._dispatch()
             self._refresh_rates()
             self._maybe_compact()
@@ -1554,6 +1629,8 @@ class Simulator:
                         self._migrate_land(ev[3])
                     elif kind == "rebalance":
                         self._rebalance()
+                    elif kind == "reshard":
+                        self._reshard(ev[3])
                 if live:
                     if dirty:
                         self._dispatch()
@@ -1589,6 +1666,9 @@ class Simulator:
         if (self._n_shards > 1
                 and self.sharding.rebalance_period_s > 0.0):
             self._push_event(self.sharding.rebalance_period_s, "rebalance")
+        for i, (t, _) in enumerate(self._reshard_at):
+            if t <= self.horizon:
+                self._push_event(t, "reshard", i)
         # speed breakpoints are *pulled* lazily — one outstanding event at
         # a time, the next asked of the profile only when it fires — so a
         # DVFS wave spanning the 1e6 s horizon contributes O(1) heap
@@ -1616,6 +1696,7 @@ class Simulator:
             self.metrics.overflow_migrations = self.kernel.overflow_migrations
             self.metrics.rebalance_rounds = self.kernel.rebalance_rounds
             self.metrics.migrated_load_s = self.kernel.migrated_load_s
+            self.metrics.reshard_rounds = self.kernel.reshard_rounds
         return self.metrics
 
 
@@ -1626,13 +1707,16 @@ def simulate(dag: DAG, scheduler: Scheduler, *,
              faults: Optional[FaultModel] = None,
              recovery: Optional[RecoveryPolicy] = None,
              sharding: Optional[ShardingSpec] = None,
+             batching: Optional[BatchingConfig] = None,
+             reshard_at: Iterable[tuple[float, int]] = (),
              horizon: float = 1e6,
              event_mode: str = "cohort",
              compact_min_stale: int = _COMPACT_MIN_STALE,
              compact_heap_frac: float = _COMPACT_HEAP_FRAC) -> RunMetrics:
     sim = Simulator(scheduler, speed=speed, background=background,
                     preemption=preemption, faults=faults, recovery=recovery,
-                    sharding=sharding, horizon=horizon,
+                    sharding=sharding, batching=batching,
+                    reshard_at=reshard_at, horizon=horizon,
                     event_mode=event_mode,
                     compact_min_stale=compact_min_stale,
                     compact_heap_frac=compact_heap_frac)

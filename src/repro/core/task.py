@@ -59,11 +59,18 @@ class TaskType:
     # matter in the paper's Fig. 8)
     spike_prob: float = 0.0
     spike_mag: float = 1.0
+    # Batched-dispatch lineage (continuous batching, serve path): the base
+    # type's name when this type was derived via ``batched()``, else None.
+    # Lets metrics/tests recover the per-member type behind a ``@bN`` name.
+    batch_base: Optional[str] = dataclasses.field(default=None, compare=False)
     # (kind, width) -> molded duration; cost models are pure so the value is
     # computed (and validated) once.  Excluded from eq/repr; mutating a dict
     # inside a frozen dataclass is fine.
     _dur_cache: dict = dataclasses.field(default_factory=dict, init=False,
                                          repr=False, compare=False)
+    # (n, member_cost) -> derived batched type (see ``batched()``)
+    _batch_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                           repr=False, compare=False)
 
     def duration(self, kind: str, width: int) -> float:
         """Unperturbed molded duration (the DES divides this by the
@@ -79,6 +86,39 @@ class TaskType:
             self._dur_cache[(kind, width)] = d
         return d
 
+    def batched(self, n: int, member_cost: float) -> "TaskType":
+        """The cost model of ``n`` of these tasks fused into one dispatch
+        (continuous batching): batched decode is memory-bound, so each
+        member past the first adds only a ``member_cost`` fraction of the
+        base time rather than a full serial repeat.  ``n == 1`` returns
+        this type unchanged (the ``max_batch=1`` degeneracy pin); ``n > 1``
+        names the derived type ``{name}@b{bucket}`` with a power-of-two
+        bucket so the PTT learns batched-dispatch throughput per size
+        class, not per-token time.  Cached per (n, member_cost)."""
+        if n <= 1:
+            return self
+        key = (n, member_cost)
+        bt = self._batch_cache.get(key)
+        if bt is None:
+            scale = 1.0 + member_cost * (n - 1)
+            bt = TaskType(
+                f"{self.name}@b{batch_bucket(n)}",
+                {k: v * scale for k, v in self.serial_time.items()},
+                efficiency=self.efficiency, bw_demand=self.bw_demand,
+                mem_sensitivity=self.mem_sensitivity, noise=self.noise,
+                spike_prob=self.spike_prob, spike_mag=self.spike_mag,
+                batch_base=self.name)
+            self._batch_cache[key] = bt
+        return bt
+
+
+def batch_bucket(n: int) -> int:
+    """Smallest power of two >= n — the PTT size class of an n-member
+    batched dispatch (``decode@b8`` covers sizes 5-8, etc.)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    return 1 << (n - 1).bit_length()
+
 
 _task_ids = itertools.count()
 
@@ -92,6 +132,20 @@ class Task:
     priority: Priority = Priority.LOW
     payload: Optional[Callable[[int], None]] = None
     tid: int = dataclasses.field(default_factory=lambda: next(_task_ids))
+    # Extra positional arguments appended to the payload call —
+    # ``payload(width, *args)`` — so hot-path task factories can share one
+    # bound method instead of allocating a closure per task.
+    args: tuple = ()
+
+    # Continuous-batching state (see core/queues.py BatchingConfig and
+    # SchedulingKernel.form_dispatch).  ``batch_key`` marks a LOW task as
+    # coalescible: when an engine dequeues it with batching enabled, queued
+    # tasks with the same key join it as ``batch_members`` and the dispatch
+    # is re-typed via ``TaskType.batched``.  Members never execute alone —
+    # they ride the dispatch through place/commit and get their successors
+    # walked at the dispatch's commit.
+    batch_key: Optional[str] = None
+    batch_members: Optional[list["Task"]] = None
 
     # DAG linkage
     children: list["Task"] = dataclasses.field(default_factory=list)

@@ -1,5 +1,6 @@
+from .batching import BatchSlot, DecodeBatcher, form_batches
 from .engine import Request, ServingEngine
 from .overload import BrownoutConfig, OverloadController
 
-__all__ = ["BrownoutConfig", "OverloadController", "Request",
-           "ServingEngine"]
+__all__ = ["BatchSlot", "BrownoutConfig", "DecodeBatcher",
+           "OverloadController", "Request", "ServingEngine", "form_batches"]

@@ -69,10 +69,11 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import (Priority, RequestRecord, Task, TaskType, ThreadedRuntime,
-                    Topology, make_scheduler)
+from ..core import (BatchingConfig, Priority, RequestRecord, Task, TaskType,
+                    ThreadedRuntime, Topology, make_scheduler)
 from ..core.dag import DAG
 from ..core.preemption import PreemptionModel
+from .batching import BatchSlot, DecodeBatcher
 from .overload import BrownoutConfig, OverloadController
 
 
@@ -115,11 +116,19 @@ class ServingEngine:
                  max_pending: Optional[int] = None,
                  brownout: Optional[BrownoutConfig] = None,
                  sharding=None,
+                 batching: Optional[BatchingConfig] = None,
                  prefill_s: float = 8e-3, decode_s: float = 2e-3):
         self.cfg = cfg
         self.max_len = max_len
         self.prefill_s = prefill_s
         self.decode_s = decode_s
+        # continuous batching: max_batch=1 is the unbatched path by
+        # definition — normalize to None so every batching branch is dead
+        if batching is not None and not batching.enabled:
+            batching = None
+        self.batching = batching
+        self.batcher = DecodeBatcher(batching) if batching is not None \
+            else None
         if cfg is not None:
             # real-model mode: jitted dispatches (deferred imports keep
             # synthetic engines from touching jax at all)
@@ -138,7 +147,7 @@ class ServingEngine:
                                        preemption=preemption, faults=faults,
                                        recovery=recovery,
                                        supervisor=supervisor,
-                                       sharding=sharding)
+                                       sharding=sharding, batching=batching)
         self.warm_start = warm_start
         self.max_pending = max_pending
         self.controller = (OverloadController(brownout)
@@ -149,6 +158,16 @@ class ServingEngine:
         self._pending = 0              # admitted, not yet finalized
         self._admit_lock = threading.Lock()
         self._primed: set[str] = set()
+        # hoisted task types: one shared decode TaskType per engine and
+        # one prefill TaskType per prompt-length bucket — per-request
+        # construction built a fresh (value-equal) type object per submit
+        # and defeated TaskType's batched-variant cache
+        self._dec_type: Optional[TaskType] = None
+        self._pre_types: dict[int, TaskType] = {}
+        # batch-delay flusher (batched mode only): pumps the batcher so a
+        # partial batch never waits past its delay window
+        self._flush_stop = threading.Event()
+        self._flush_thread: Optional[threading.Thread] = None
 
     # -- task payloads ---------------------------------------------------------
     def _run_prefill(self, req: Request) -> tuple:
@@ -206,20 +225,33 @@ class ServingEngine:
         """Per-place, load-aware completion-time estimate for deadline
         admission: the best over places of (outstanding estimated work
         already at that place + the prefill estimate there), plus the
-        request's decode chain at the fleet-best decode estimate.  Still
-        optimistic past the prefill (decode steps are assumed to land on
-        the fleet-best place with no queueing), so a reject means even a
-        rosy forecast misses the deadline."""
+        request's decode chain.
+
+        The chain is priced at the *batched* service rate when continuous
+        batching is on — ``per_tok * (1 + member_cost*(b-1)) / b`` per
+        token at fill ``b = max_batch``, plus one ``delay_s`` of batch
+        fill — and carries the kernel's fleet-wide backlog signal once:
+        the old estimate assumed every decode step lands on an idle
+        fleet-best place, which under-estimated exactly when admission
+        control matters (a loaded fleet) and admitted deadline-doomed
+        requests."""
         kernel = self.runtime.kernel
         places = self.sched.topology.places()
         if kernel.track_load:
             load = kernel.place_load()
             start = min(load[i] + kernel.estimate_seconds(pre_type, p)
                         for i, p in enumerate(places))
+            backlog = kernel.backlog_signal()
         else:
             start = self._best_estimate(pre_type)
-        chain = max(max_new_tokens - 1, 0) * self._best_estimate(dec_type)
-        return start + chain
+            backlog = 0.0
+        per_tok = self._best_estimate(dec_type)
+        b = self.batching
+        if b is not None:
+            per_tok *= (1.0 + b.member_cost * (b.max_batch - 1)) / b.max_batch
+            start += b.delay_s
+        chain = max(max_new_tokens - 1, 0) * per_tok
+        return start + chain + backlog
 
     def _elapsed(self) -> float:
         t0 = self.runtime.t0
@@ -273,12 +305,8 @@ class ServingEngine:
                 req.tokens_clamped = True
                 self.tokens_clamped += 1
 
-        kinds = {p.kind for p in self.sched.topology.partitions}
-        pre_s = self.prefill_s if self.cfg is None else 1e-3
-        dec_s = self.decode_s if self.cfg is None else 1e-4
-        pre_type = TaskType(f"prefill_{_bucket(len(prompt))}",
-                            serial_time={k: pre_s for k in kinds})
-        dec_type = TaskType("decode", serial_time={k: dec_s for k in kinds})
+        pre_type = self._prefill_type(len(prompt))
+        dec_type = self._decode_type()
         self._maybe_prime(pre_type, dec_type)
 
         if deadline_s > 0.0 and self._admission_estimate(
@@ -289,60 +317,193 @@ class ServingEngine:
 
         with self._admit_lock:
             self._pending += 1
-        ctx: dict = {}
-
-        def prefill_payload(width: int, _req=req):
-            ctx["state"], ctx["tok"] = self._run_prefill(_req)
-
-        def make_decode_task(step_idx: int) -> Task:
-            def decode_payload(width: int, _req=req):
-                # load shedding: queued LOW decode work is dropped instead
-                # of executed — the request finalizes truncated and the
-                # fleet time goes to requests that still matter — when its
-                # deadline already passed, or the brownout ladder is at
-                # its shed rung and the request is LOW tier
-                if (_req.deadline_s > 0.0 and time.perf_counter()
-                        > _req.t_submit + _req.deadline_s):
-                    _req.shed = True
-                    _req.shed_cause = "deadline"
-                    return
-                if (ctl is not None and ctl.shed_low
-                        and _req.tier != "high"):
-                    _req.shed = True
-                    _req.shed_cause = "brownout"
-                    return
-                ctx["state"], ctx["tok"] = self._run_decode(
-                    _req, ctx["state"], ctx["tok"])
-
-            t = Task(dec_type, priority=Priority.LOW, payload=decode_payload)
-
-            def on_commit(_task, _i=step_idx, _req=req):
-                if not _req.shed and _i + 1 < _req.max_new_tokens - 1:
-                    return [make_decode_task(_i + 1)]
-                self._request_done(_req)
-                return []
-
-            t.on_commit = on_commit
-            return t
-
+        # per-request step state bound to tasks via ``Task.args`` — no
+        # per-token payload closures; payloads/commits are bound methods
+        ctx: dict = {"step": 0}
         pre_task = Task(pre_type, priority=Priority.HIGH,
-                        payload=prefill_payload)
-
-        def pre_commit(_task, _req=req):
-            # first token leaves the engine at prefill *commit* — after
-            # any injected slowdown, when a real client would see it
-            _req.t_first_token = time.perf_counter()
-            if _req.max_new_tokens <= 1:
-                self._request_done(_req)
-                return []
-            return [make_decode_task(0)]
-
-        pre_task.on_commit = pre_commit
+                        payload=self._prefill_payload, args=(req, ctx))
+        pre_task.on_commit = self._prefill_commit
         self.runtime.submit(DAG([pre_task], 1 + max_new_tokens))
         return req
 
+    # -- hoisted task types ------------------------------------------------------
+    def _decode_type(self) -> TaskType:
+        tt = self._dec_type
+        if tt is None:
+            kinds = {p.kind for p in self.sched.topology.partitions}
+            dec_s = self.decode_s if self.cfg is None else 1e-4
+            tt = self._dec_type = TaskType(
+                "decode", serial_time={k: dec_s for k in kinds})
+        return tt
+
+    def _prefill_type(self, prompt_len: int) -> TaskType:
+        b = _bucket(prompt_len)
+        tt = self._pre_types.get(b)
+        if tt is None:
+            kinds = {p.kind for p in self.sched.topology.partitions}
+            pre_s = self.prefill_s if self.cfg is None else 1e-3
+            tt = self._pre_types[b] = TaskType(
+                f"prefill_{b}", serial_time={k: pre_s for k in kinds})
+        return tt
+
+    # -- unbatched decode chain --------------------------------------------------
+    def _prefill_payload(self, width: int, req: Request, ctx: dict) -> None:
+        ctx["state"], ctx["tok"] = self._run_prefill(req)
+
+    def _prefill_commit(self, task: Task) -> list[Task]:
+        # first token leaves the engine at prefill *commit* — after any
+        # injected slowdown, when a real client would see it
+        req, ctx = task.args
+        req.t_first_token = time.perf_counter()
+        if req.max_new_tokens <= 1:
+            self._request_done(req)
+            return []
+        if self.batcher is not None:
+            # continuous batching: the ready decode step parks in the
+            # batcher (outside the WSQs — HIGH prefills are never queued
+            # behind batch fill) and dispatches when a trigger fires
+            return self._groups_to_tasks(
+                self.batcher.add(req, ctx, time.perf_counter()))
+        return [self._make_decode_task(req, ctx)]
+
+    def _make_decode_task(self, req: Request, ctx: dict) -> Task:
+        t = Task(self._decode_type(), priority=Priority.LOW,
+                 payload=self._decode_payload, args=(req, ctx))
+        t.on_commit = self._decode_commit
+        return t
+
+    def _shed_check(self, req: Request) -> bool:
+        """Load shedding: queued LOW decode work is dropped instead of
+        executed — the request finalizes truncated and the fleet time
+        goes to requests that still matter — when its deadline already
+        passed, or the brownout ladder is at its shed rung and the
+        request is LOW tier.  Returns True when ``req`` was shed."""
+        if req.shed:
+            return True
+        if (req.deadline_s > 0.0 and time.perf_counter()
+                > req.t_submit + req.deadline_s):
+            req.shed = True
+            req.shed_cause = "deadline"
+            return True
+        ctl = self.controller
+        if ctl is not None and ctl.shed_low and req.tier != "high":
+            req.shed = True
+            req.shed_cause = "brownout"
+            return True
+        return False
+
+    def _decode_payload(self, width: int, req: Request, ctx: dict) -> None:
+        if self._shed_check(req):
+            return
+        ctx["state"], ctx["tok"] = self._run_decode(
+            req, ctx["state"], ctx["tok"])
+
+    def _decode_commit(self, task: Task) -> list[Task]:
+        req, ctx = task.args
+        ctx["step"] += 1
+        if not req.shed and ctx["step"] < req.max_new_tokens - 1:
+            return [self._make_decode_task(req, ctx)]
+        self._request_done(req)
+        return []
+
+    # -- batched decode path (continuous batching) -------------------------------
+    def _groups_to_tasks(self, groups: list[list[BatchSlot]]) -> list[Task]:
+        return [self._make_batch_task(g) for g in groups]
+
+    def _make_batch_task(self, slots: list[BatchSlot]) -> Task:
+        """One fused moldable LOW dispatch over ``slots``: typed via
+        :meth:`TaskType.batched` so the placement search, run charge and
+        PTT observation all see the batch-size bucket."""
+        btype = self._decode_type().batched(len(slots),
+                                            self.batching.member_cost)
+        t = Task(btype, priority=Priority.LOW, payload=self._batch_payload,
+                 args=(tuple(slots),))
+        t.on_commit = self._batch_commit
+        return t
+
+    def _batch_payload(self, width: int, slots: tuple) -> None:
+        # membership re-check at dispatch: rung-2 shedding (and passed
+        # deadlines) remove members, never the dispatch — survivors ride
+        live = [s for s in slots if not self._shed_check(s.req)]
+        if not live:
+            return
+        if self.cfg is None:
+            # batched decode is memory-bound: one fused step costs the
+            # base time plus member_cost per extra live member
+            time.sleep(self.decode_s *
+                       (1.0 + self.batching.member_cost * (len(live) - 1)))
+            for s in live:
+                s.req.out_tokens.append(0)
+        else:
+            for s in live:
+                s.ctx["state"], s.ctx["tok"] = self._run_decode(
+                    s.req, s.ctx["state"], s.ctx["tok"])
+
+    def _batch_commit(self, task: Task) -> list[Task]:
+        """Commit of a fused dispatch: finalize shed/finished members,
+        re-park survivors' next steps in the batcher, and return any
+        newly due dispatches (they wake as zero-dep successors)."""
+        (slots,) = task.args
+        now = time.perf_counter()
+        ready: list[Task] = []
+        for s in slots:
+            req = s.req
+            if not req.shed:
+                s.ctx["step"] += 1
+            if req.shed or s.ctx["step"] >= req.max_new_tokens - 1:
+                self._request_done(req)
+            else:
+                ready.extend(self._groups_to_tasks(
+                    self.batcher.readd(s, now)))
+        return ready
+
+    def _pump_batcher(self, drain: bool = False) -> None:
+        """Flush due (or, on drain, all) pending batches into the
+        runtime — the timer half of the delay window."""
+        groups = self.batcher.poll(time.perf_counter(), drain=drain)
+        for g in groups:
+            self.runtime.submit(DAG([self._make_batch_task(g)], len(g)))
+
+    def _flusher(self) -> None:
+        period = max(self.batching.delay_s / 2.0, 1e-4)
+        while not self._flush_stop.wait(timeout=period):
+            self._pump_batcher()
+
+    def _start_flusher(self) -> None:
+        if self._flush_thread is None:
+            self._flush_stop.clear()
+            self._flush_thread = threading.Thread(target=self._flusher,
+                                                  daemon=True)
+            self._flush_thread.start()
+
+    def _drain_batched(self, timeout: float):
+        """Batched-mode drain: pump the batcher until every admitted
+        request finalizes (slots parked in the batcher are invisible to
+        the runtime's outstanding count — ``runtime.drain`` alone could
+        return with requests still waiting on formation), then drain the
+        runtime itself."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._admit_lock:
+                if self._pending == 0:
+                    break
+            self._pump_batcher(drain=True)
+            time.sleep(2e-3)
+        self._flush_stop.set()
+        m = self.runtime.drain(
+            timeout=max(deadline - time.monotonic(), 1.0))
+        if self._flush_thread is not None:
+            self._flush_thread.join(timeout=5.0)
+            self._flush_thread = None
+        return m
+
     def run(self, timeout: float = 120.0):
-        m = self.runtime.run(timeout=timeout)
+        if self.batcher is not None:
+            self.runtime.start()
+            self._start_flusher()
+            m = self._drain_batched(timeout)
+        else:
+            m = self.runtime.run(timeout=timeout)
         self._finalize_requests()
         return m
 
@@ -358,12 +519,17 @@ class ServingEngine:
         :class:`RunMetrics` with per-request latency records attached."""
         arrivals = random.Random(f"serve-arrival:{arrival_seed}")
         self.runtime.start()
+        if self.batcher is not None:
+            self._start_flusher()
         for i, prompt in enumerate(prompts):
             if i:
                 time.sleep(arrivals.expovariate(rate_rps))
             self.submit(np.asarray(prompt), max_new_tokens=max_new_tokens,
                         deadline_s=deadline_s, tier=tier)
-        m = self.runtime.drain(timeout=timeout)
+        if self.batcher is not None:
+            m = self._drain_batched(timeout)
+        else:
+            m = self.runtime.drain(timeout=timeout)
         self._finalize_requests()
         return m
 

@@ -1,0 +1,296 @@
+"""Continuous batching for the decode path (DESIGN.md §"Continuous
+batching"): the max_batch=1 degeneracy pin (bit-identical to the
+unbatched path), deterministic batch formation and its four triggers,
+queue-level coalescing in both engines with composition parity,
+shed-at-commit membership semantics, and determinism across multirun
+worker counts."""
+import numpy as np
+import pytest
+
+from repro.core import (BatchingConfig, ResourcePartition, RunSpec, TaskType,
+                        ThreadedRuntime, Topology, batch_bucket,
+                        decode_pool_dag, make_scheduler, run_cells,
+                        run_threaded, simulate, task_faults, tx2)
+from repro.serve import BrownoutConfig, DecodeBatcher, ServingEngine, \
+    form_batches
+from repro.serve.batching import BatchSlot
+
+# tx2-kind synthetic types: a heavy HIGH prefill + a light LOW decode
+PRE = TaskType("prefill", {"denver": 4e-4, "a57": 8e-4})
+DEC = TaskType("decode", {"denver": 1e-4, "a57": 2e-4})
+
+
+def _one_core():
+    """Single-slice fleet: both engines serialize, so batch formation is
+    fully determined by the DAG (prefills drain HIGH-first, then each
+    decode layer coalesces whole)."""
+    return Topology([ResourcePartition("pod0", "pod", 0, 1, (1,))])
+
+
+def _pod_types():
+    return (TaskType("prefill", {"pod": 4e-4}),
+            TaskType("decode", {"pod": 1e-4}))
+
+
+def _rec_tuple(r):
+    return (r.type_name, r.priority, r.leader, r.width,
+            r.t_ready, r.t_start, r.t_end)
+
+
+# -- config + type algebra ---------------------------------------------------
+
+def test_batching_config_validation():
+    assert not BatchingConfig(max_batch=1).enabled
+    assert BatchingConfig(max_batch=2).enabled
+    with pytest.raises(ValueError):
+        BatchingConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        BatchingConfig(delay_s=-1e-3)
+    with pytest.raises(ValueError):
+        BatchingConfig(member_cost=1.5)
+
+
+def test_batch_bucket_power_of_two():
+    assert [batch_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9, 16)] == \
+        [1, 2, 4, 4, 8, 8, 16, 16]
+    with pytest.raises(ValueError):
+        batch_bucket(0)
+
+
+def test_tasktype_batched_degeneracy_and_cache():
+    assert DEC.batched(1, 0.05) is DEC           # n=1 IS the base type
+    b3 = DEC.batched(3, 0.05)
+    assert b3.name == "decode@b4" and b3.batch_base == "decode"
+    # cost model: memory-bound fill, not serial repeat
+    assert b3.serial_time["denver"] == pytest.approx(1e-4 * 1.1)
+    assert DEC.batched(3, 0.05) is b3            # cached per (n, cost)
+    assert DEC.batched(4, 0.05) is not b3        # same bucket, own cost
+    assert DEC.batched(4, 0.05).name == "decode@b4"
+
+
+# -- formation triggers (pure function + batcher) ----------------------------
+
+def _slot(t_enq, tier="low", deadline_s=0.0, t_submit=0.0):
+    req = type("R", (), {"tier": tier, "deadline_s": deadline_s,
+                         "t_submit": t_submit})()
+    return BatchSlot(req, {}, t_enq)
+
+
+def test_form_batches_quorum_and_age():
+    cfg = BatchingConfig(max_batch=4, delay_s=5e-3)
+    pending = [_slot(0.0) for _ in range(9)]
+    groups, rest = form_batches(pending, now=1e-3, cfg=cfg)
+    assert [len(g) for g in groups] == [4, 4]    # quorum, oldest first
+    assert len(rest) == 1                        # young partial waits
+    groups, rest = form_batches(rest, now=6e-3, cfg=cfg)
+    assert [len(g) for g in groups] == [1] and not rest   # aged out
+
+
+def test_form_batches_high_tier_flushes_immediately():
+    """The HIGH-flush latency bound: a critical member never waits on
+    batch fill — its arrival flushes the whole pending set at once."""
+    cfg = BatchingConfig(max_batch=8, delay_s=1.0)
+    pending = [_slot(0.0) for _ in range(3)]
+    groups, rest = form_batches(pending, now=1e-6, cfg=cfg)
+    assert not groups and len(rest) == 3         # nothing due on its own
+    pending.append(_slot(1e-6, tier="high"))
+    groups, rest = form_batches(pending, now=2e-6, cfg=cfg)
+    assert [len(g) for g in groups] == [4] and not rest
+
+
+def test_form_batches_deadline_slack_flushes():
+    cfg = BatchingConfig(max_batch=8, delay_s=1.0, flush_slack_s=5e-3)
+    pending = [_slot(0.0), _slot(0.0, deadline_s=0.1, t_submit=0.0)]
+    groups, _ = form_batches(pending, now=0.01, cfg=cfg)
+    assert not groups                            # slack 90 ms: waits
+    groups, rest = form_batches(pending, now=0.097, cfg=cfg)
+    assert [len(g) for g in groups] == [2] and not rest   # slack <= 5 ms
+
+
+def test_decode_batcher_add_readd_drain_telemetry():
+    b = DecodeBatcher(BatchingConfig(max_batch=2, delay_s=1.0))
+    assert b.add(_slot(0.0).req, {}, 0.0) == []
+    (grp,) = b.add(_slot(0.0).req, {}, 1e-3)     # quorum of 2
+    assert len(grp) == 2 and len(b) == 0
+    assert b.readd(grp[0], 2e-3) == []           # survivor re-parks
+    (grp2,) = b.poll(3e-3, drain=True)           # drain flushes partials
+    assert len(grp2) == 1
+    assert b.batches_formed == 2 and b.members_dispatched == 3
+    with pytest.raises(ValueError):
+        DecodeBatcher(BatchingConfig(max_batch=1))
+
+
+# -- DES: degeneracy + coalescing --------------------------------------------
+
+def test_des_batch1_bit_identical_to_unbatched():
+    """The degeneracy pin: max_batch=1 must take the exact unbatched code
+    path — schedules compare bitwise, not approximately."""
+    runs = []
+    for batching in (None, BatchingConfig(max_batch=1)):
+        dag = decode_pool_dag(PRE, DEC, n_requests=8, steps=5)
+        sched = make_scheduler("DAM-C", tx2(), seed=0)
+        runs.append(simulate(dag, sched, batching=batching))
+    a, b = runs
+    assert a.makespan == b.makespan
+    assert [_rec_tuple(r) for r in a.records] == \
+        [_rec_tuple(r) for r in b.records]
+    assert not b.batches
+
+
+def test_des_golden_dags_unaffected_by_batch1():
+    """Non-serving DAGs (no batch_key anywhere) under a max_batch=1
+    config reproduce the unbatched schedule exactly — the goldens'
+    guarantee that PR 9 behavior survives the batching rollout."""
+    from repro.core import matmul_type, synthetic_dag
+    runs = []
+    for batching in (None, BatchingConfig(max_batch=1)):
+        dag = synthetic_dag(matmul_type(64), parallelism=4, total_tasks=60)
+        sched = make_scheduler("DAM-C", tx2(), seed=1)
+        runs.append(simulate(dag, sched, batching=batching))
+    a, b = runs
+    assert [_rec_tuple(r) for r in a.records] == \
+        [_rec_tuple(r) for r in b.records]
+
+
+def test_des_coalesces_and_accounts_every_token():
+    n_req, steps = 12, 4
+    dag = decode_pool_dag(PRE, DEC, n_requests=n_req, steps=steps)
+    sched = make_scheduler("DAM-C", tx2(), seed=0)
+    m = simulate(dag, sched, batching=BatchingConfig(max_batch=8))
+    assert m.batches                               # fused dispatches formed
+    assert any("@b" in r.type_name for r in m.records)
+    # every decode token executes exactly once: members ride fused
+    # dispatches, the rest run solo
+    fused = sum(len(comp) for _name, comp in m.batches)
+    solo = sum(1 for r in m.records if r.type_name == "decode")
+    assert fused + solo == n_req * steps
+    assert sum(1 for r in m.records if r.type_name == "prefill") == n_req
+    # and it is faster than one-dispatch-per-token on the same DAG
+    dag2 = decode_pool_dag(PRE, DEC, n_requests=n_req, steps=steps)
+    m0 = simulate(dag2, make_scheduler("DAM-C", tx2(), seed=0))
+    assert m.makespan < m0.makespan
+
+
+def test_batching_with_faults_rejected():
+    cfg = BatchingConfig(max_batch=4)
+    fm = task_faults(seed=0, p_fail=0.1)
+    dag = decode_pool_dag(PRE, DEC, n_requests=2, steps=2)
+    with pytest.raises(ValueError, match="fault injection"):
+        simulate(dag, make_scheduler("DAM-C", tx2(), seed=0),
+                 batching=cfg, faults=fm)
+    with pytest.raises(ValueError, match="fault injection"):
+        ThreadedRuntime(make_scheduler("DAM-C", tx2(), seed=0),
+                        batching=cfg, faults=fm)
+
+
+# -- cross-engine parity -----------------------------------------------------
+
+def test_cross_engine_batch_composition_multiset_parity():
+    """On a single-slice fleet both engines serialize, so the multiset of
+    fused-dispatch compositions is determined by the DAG alone and must
+    agree exactly between the DES and the threaded runtime."""
+    pre, dec = _pod_types()
+    cfg = BatchingConfig(max_batch=8)
+
+    dag = decode_pool_dag(pre, dec, n_requests=6, steps=3)
+    m_des = simulate(dag, make_scheduler("DAM-C", _one_core(), seed=0),
+                     batching=cfg)
+    dag2 = decode_pool_dag(pre, dec, n_requests=6, steps=3)
+    m_thr = run_threaded(dag2, make_scheduler("DAM-C", _one_core(), seed=0),
+                         batching=cfg, timeout=60)
+    assert sorted(m_des.batches) == sorted(m_thr.batches)
+    # serialized layer-at-a-time drain: each decode layer fuses whole
+    assert sorted(len(c) for _n, c in m_des.batches) == [6, 6, 6]
+
+
+# -- serving engine ----------------------------------------------------------
+
+def _pod_fleet():
+    from repro.core import tpu_pod_slices
+    return tpu_pod_slices(2, 2)
+
+
+def test_engine_batched_e2e_all_tokens_via_batcher():
+    eng = ServingEngine(None, _pod_fleet(), scheduler="DAM-C",
+                        batching=BatchingConfig(max_batch=4, delay_s=1e-3,
+                                                member_cost=0.02),
+                        prefill_s=2e-3, decode_s=1e-3)
+    reqs = [eng.submit(np.zeros(8, np.int32), max_new_tokens=4)
+            for _ in range(8)]
+    m = eng.run(timeout=120)
+    assert not m.errors
+    s = eng.latency_stats()
+    assert s["completed"] == 8 and s["shed"] == 0
+    for r in reqs:
+        assert len(r.out_tokens) == 4
+        assert r.t_done >= r.t_first_token >= r.t_submit
+    # every decode step went through the batcher, none ran as a bare task
+    assert eng.batcher.members_dispatched == 8 * 3
+    assert eng.batcher.batches_formed >= 1
+    assert any("@b" in rec.type_name for rec in m.records) \
+        or eng.batcher.batches_formed == eng.batcher.members_dispatched
+
+
+def test_engine_max_batch1_normalizes_to_unbatched():
+    eng = ServingEngine(None, _pod_fleet(), scheduler="DAM-C",
+                        batching=BatchingConfig(max_batch=1))
+    assert eng.batching is None and eng.batcher is None
+    assert eng.runtime.batching is None
+    eng.submit(np.zeros(8, np.int32), max_new_tokens=2)
+    eng.run(timeout=60)
+    assert eng.latency_stats()["completed"] == 1
+
+
+def test_shed_member_at_commit_removes_members_not_dispatches():
+    """Rung-2 brownout shedding under batched overload: shed requests
+    leave their dispatches (membership re-checked at dispatch/commit),
+    surviving members keep decoding, every request finalizes."""
+    eng = ServingEngine(None, _pod_fleet(), scheduler="DAM-C",
+                        max_pending=24,
+                        brownout=BrownoutConfig(enter=(0.02, 0.05, 0.10),
+                                                exit=(0.01, 0.02, 0.05),
+                                                min_tokens=1),
+                        batching=BatchingConfig(max_batch=8, delay_s=1e-3,
+                                                member_cost=0.02),
+                        prefill_s=20e-3, decode_s=5e-3)
+    prompts = [np.zeros(8, np.int32)] * 80
+    m = eng.run_open_loop(prompts, rate_rps=400.0, max_new_tokens=5,
+                          timeout=120)
+    assert not m.errors
+    s = eng.latency_stats()
+    assert s["completed"] + s["rejected"] == 80    # nothing lost
+    assert s["brownout_max_rung"] >= 2
+    assert s["shed_brownout"] + s["tokens_clamped"] > 0
+    for r in eng.requests.values():
+        if r.shed:
+            assert 1 <= len(r.out_tokens) < 5      # truncated, not empty
+    # batching stayed live through the overload
+    assert eng.batcher.batches_formed > 0
+
+
+def test_engine_batching_faults_rejected():
+    with pytest.raises(ValueError, match="fault injection"):
+        ServingEngine(None, _pod_fleet(), scheduler="DAM-C",
+                      batching=BatchingConfig(max_batch=4),
+                      faults=task_faults(seed=0, p_fail=0.1))
+
+
+# -- determinism across multirun workers -------------------------------------
+
+def test_batch_formation_deterministic_across_workers():
+    """The same batched cells, fanned across 1 vs 2 worker processes,
+    must produce bitwise-equal results — composition multisets included
+    (BatchingConfig rides RunSpec.sim_kwargs verbatim)."""
+    cfg = BatchingConfig(max_batch=4)
+    specs = [RunSpec(
+        key=f"b{seed}",
+        dag=("decode_pool", {"task_types": (("matmul", {"tile": 64}),
+                                            ("copy", {"tile": 256})),
+                             "n_requests": 8, "steps": 4}),
+        scheduler="DAM-C", topology=("tx2", {}), seed=seed,
+        sim_kwargs=(("batching", cfg),), collect=("batching",))
+        for seed in (1, 2)]
+    r1 = run_cells(specs, workers=1)
+    r2 = run_cells(specs, workers=2)
+    assert r1 == r2
+    assert all(r["batching"]["n_batches"] > 0 for r in r1.values())

@@ -1,8 +1,11 @@
 """Gate on the benchmark artifacts' acceptance blocks.
 
 ``make check`` runs this after the bench smoke: each root artifact listed
-in ARTIFACTS must exist, its ``acceptance`` block must parse, and every
-boolean entry that is ``false`` must appear in that artifact's
+in ARTIFACTS must exist, its ``acceptance`` block must parse, every key
+in that artifact's REQUIRED_KEYS entry must be present (a headline gate
+silently vanishing from the block — e.g. a benchmark edit dropping the
+continuous-batching knee check — must fail loudly, not pass by absence),
+and every boolean entry that is ``false`` must appear in that artifact's
 documented-negatives allowlist below with a written reason.  A new
 ``false`` that nobody wrote down is a regression (e.g. the load-aware
 placement win in ``slow_fast_pod`` silently coming undone, or the
@@ -52,6 +55,17 @@ DOCUMENTED_NEGATIVES: dict[str, dict[str, str]] = {
 
 ARTIFACTS = tuple(DOCUMENTED_NEGATIVES)
 
+# Acceptance keys that must be PRESENT (any boolean value — falses still
+# go through the allowlist above).  Guards the headline gates against
+# being dropped by a benchmark refactor.
+REQUIRED_KEYS: dict[str, tuple[str, ...]] = {
+    "BENCH_serve.json": (
+        "overload/knee_5x_vs_unbatched",
+        "overload/p99_ttft_unchanged_at_knee",
+        "overload/rungs_monotone_with_rate",
+    ),
+}
+
 
 def check(path: pathlib.Path) -> int:
     allowed = DOCUMENTED_NEGATIVES.get(path.name, {})
@@ -70,6 +84,15 @@ def check(path: pathlib.Path) -> int:
     if not isinstance(acceptance, dict) or not acceptance:
         print(f"check_acceptance: {path} has no acceptance block",
               file=sys.stderr)
+        return 1
+
+    missing = [k for k in REQUIRED_KEYS.get(path.name, ())
+               if k not in acceptance]
+    if missing:
+        for key in missing:
+            print(f"check_acceptance: REQUIRED key {key!r} absent from "
+                  f"{path.name} acceptance block — the gate was dropped, "
+                  f"not passed", file=sys.stderr)
         return 1
 
     failures = []
